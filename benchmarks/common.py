@@ -1,0 +1,96 @@
+"""Shared benchmark substrate.
+
+A small LLaMA-family LM is trained once on the synthetic C4-like stream
+(cached on disk) and reused by every table. Pruning-method *orderings* and
+relative improvements are then measured exactly as the paper does, just at
+laptop scale — see EXPERIMENTS.md for the claim-by-claim comparison.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.configs.base import PruneConfig, TrainConfig
+from repro.core.pruner import prune_model
+from repro.data import calibration_batch, eval_batch, synthetic_lm_stream
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.model import Model
+
+CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+
+BENCH_CFG = dict(num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+                 head_dim=32, d_ff=256, vocab_size=512)
+TRAIN_STEPS = 1200
+BATCH, SEQ = 16, 64
+
+
+def bench_model():
+    cfg = get_config("llama1-7b").reduced(**BENCH_CFG)
+    return Model(cfg)
+
+
+def trained_params(steps: int = TRAIN_STEPS, force: bool = False):
+    """Train (or load) the benchmark LM. Deterministic."""
+    model = bench_model()
+    cfg = model.cfg
+    path = os.path.join(CACHE, f"lm_{steps}")
+    params0 = model.init(jax.random.PRNGKey(0))
+    if not force and os.path.isdir(path):
+        return model, load_pytree(path, params0)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=steps,
+                     warmup_steps=steps // 10, weight_decay=0.01)
+    step = jax.jit(make_train_step(model, tc), donate_argnums=(0,))
+    state = init_train_state(model, params0, tc)
+    stream = synthetic_lm_stream(cfg.vocab_size, BATCH, SEQ, seed=0)
+    t0 = time.time()
+    for i, data in zip(range(steps), stream):
+        state, m = step(state, {"tokens": data["tokens"],
+                                "labels": data["labels"]})
+        if i % 100 == 0:
+            print(f"  [bench-train] step {i} loss {float(m['loss']):.3f}")
+    print(f"  [bench-train] {steps} steps in {time.time() - t0:.0f}s, "
+          f"final loss {float(m['loss']):.3f}")
+    params = state["params"]
+    os.makedirs(CACHE, exist_ok=True)
+    save_pytree(path, params)
+    return model, params
+
+
+def perplexity(model, params, n: int = 32, seq: int = SEQ, seed: int = 0):
+    ev = eval_batch(model.cfg.vocab_size, n, seq, seed=seed)
+    loss = float(model.loss(params, ev)[0])
+    return float(jnp.exp(loss))
+
+
+# Benchmark-scale hyperparameters. The paper's defaults (alpha=100,
+# ro_lr=3e-7) are tuned for 3B-70B models; Table 8 shows alpha is
+# model-specific, and the RO step size must scale with how far the weights
+# are from convergence. Selected by the sweep logged in EXPERIMENTS.md §Repro.
+BENCH_ALPHA = 10.0
+BENCH_RO_LR = 1e-3
+
+
+def prune_with(model, params, method: str, pattern: str = "2:4",
+               sparsity: float = 0.5, n_calib: int = 32, calib_len: int = SEQ,
+               ro_iters: int = 5, alpha: float = BENCH_ALPHA, seed: int = 0,
+               ro_lr: float = BENCH_RO_LR):
+    """Returns (pruned params, seconds)."""
+    pcfg = PruneConfig(method=method, pattern=pattern, sparsity=sparsity,
+                       alpha=alpha, n_calib=n_calib, calib_len=calib_len,
+                       ro_iters=ro_iters, ro_samples=min(16, n_calib),
+                       ro_lr=ro_lr, seed=seed)
+    calib = calibration_batch(model.cfg.vocab_size, n_calib, calib_len)
+    t0 = time.time()
+    pruned, _ = prune_model(model, params, calib, pcfg)
+    return pruned, time.time() - t0
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

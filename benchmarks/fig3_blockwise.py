@@ -1,0 +1,58 @@
+"""Paper Fig. 3: perplexity as N:M pruning sweeps over more decoder blocks.
+
+Reproduces the qualitative claim: Wanda++ 2:4 tracks (or beats) Wanda 4:8,
+and the Wanda++-vs-Wanda margin grows with the number of pruned blocks.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, perplexity, trained_params
+from repro.configs.base import PruneConfig
+from repro.core.pruner import (make_block_fn, prune_block, tree_get)
+from repro.data import calibration_batch
+from repro.models import blocks as B
+
+
+def _prune_first_k(model, params, k: int, method: str, pattern: str):
+    """Prune only the first k blocks (paper's progressive sweep)."""
+    cfg = model.cfg
+    pcfg = PruneConfig(method=method, pattern=pattern, ro_iters=2,
+                       ro_samples=8, n_calib=16)
+    calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, 64)
+    import jax.numpy as jnp
+    xs = jnp.take(params["embed"], calib, axis=0)
+    block_fn = make_block_fn(cfg)
+    prop = jax.jit(lambda b, x: block_fn(b, x))
+    blocks = params["blocks"]
+    key = jax.random.PRNGKey(0)
+    prunable = B.prunable_table(cfg)
+    for l in range(k):
+        bp = jax.tree_util.tree_map(lambda a: a[l], blocks)
+        key, sub = jax.random.split(key)
+        bp, _ = prune_block(block_fn, bp, xs, pcfg, prunable, sub)
+        blocks = jax.tree_util.tree_map(lambda a, b_: a.at[l].set(b_), blocks, bp)
+        xs = prop(bp, xs)
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    L = model.cfg.num_layers
+    rows = []
+    for method in ("wanda", "wanda++"):
+        for pattern in ("2:4", "4:8"):
+            for k in range(0, L + 1):
+                pruned = _prune_first_k(model, params, k, method, pattern)
+                ppl = perplexity(model, pruned)
+                rows.append((f"fig3/{method}/{pattern}/blocks_{k}", 0,
+                             f"ppl={ppl:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig3
+
+Prints ``name,us_per_call,derived`` CSV rows per table and a final summary of
+paper-claim checks (orderings / relative improvements).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig3_blockwise, table1_perplexity, table2_zeroshot,
+                        table3_cost, table4_lora, table5_high_sparsity,
+                        table6_structured, table7_latency, table8_alpha)
+from benchmarks.common import trained_params
+
+ALL = {
+    "table1": table1_perplexity,
+    "fig3": fig3_blockwise,
+    "table2": table2_zeroshot,
+    "table3": table3_cost,
+    "table4": table4_lora,
+    "table5": table5_high_sparsity,
+    "table6": table6_structured,
+    "table7": table7_latency,
+    "table8": table8_alpha,
+}
+
+
+def main() -> None:
+    names = [a for a in sys.argv[1:] if a in ALL] or list(ALL)
+    print(f"== benchmark suite: {names}")
+    model, params = trained_params()
+    results = {}
+    for name in names:
+        t0 = time.time()
+        print(f"\n== {name} ({ALL[name].__doc__.splitlines()[0].strip()})")
+        mod = ALL[name]
+        if name == "table7":
+            results[name] = mod.run()
+        else:
+            results[name] = mod.run(model, params)
+        print(f"== {name} done in {time.time() - t0:.0f}s")
+
+    # ---- paper-claim verdicts ----------------------------------------------
+    print("\n== claim checks")
+    if "table1" in results:
+        r = results["table1"]
+        w, wpp = r[("2:4", "wanda")], r[("2:4", "wanda++")]
+        rgs = r[("2:4", "wanda++rgs")]
+        print(f"claim,table1_wanda++_beats_wanda_2:4,{wpp < w}")
+        print(f"claim,table1_ro_helps(w++<w++rgs),{wpp <= rgs}")
+        print(f"claim,table1_rel_improvement_2:4,{(w - wpp) / w * 100:.1f}%")
+        u, u_pp = r[("unstructured", "wanda")], r[("unstructured", "wanda++")]
+        print(f"claim,table1_gain_larger_at_2:4_than_unstructured,"
+              f"{(w - wpp) / w >= (u - u_pp) / u}")
+    if "table5" in results:
+        r = results["table5"]
+        ok = all(r[(s, 'wanda++')] <= r[(s, 'wanda')] * 1.05 for s in (0.6, 0.7, 0.8))
+        print(f"claim,table5_wanda++_<=_wanda_at_high_sparsity,{ok}")
+    if "table6" in results:
+        r = results["table6"]
+        ok = all(r[(s, 'wanda++-SP')] <= r[(s, 'wanda-SP')] for s in (0.3, 0.5))
+        print(f"claim,table6_wanda++SP_beats_wandaSP,{ok}")
+    if "table4" in results:
+        r = results["table4"]
+        ok = (r["wanda++"][1] < r["wanda++"][0]) and (r["wanda"][1] < r["wanda"][0])
+        print(f"claim,table4_lora_improves_both,{ok}")
+        print(f"claim,table4_wanda++_still_ahead_after_lora,"
+              f"{r['wanda++'][1] <= r['wanda'][1]}")
+    if "table8" in results:
+        r = results["table8"]
+        mid = min(r[a] for a in (0.1, 1.0, 10.0))
+        print(f"claim,table8_extreme_alpha_worse_than_blend,"
+              f"{r[10000.0] >= mid and r[0.0] >= mid * 0.98}")
+
+
+if __name__ == "__main__":
+    main()

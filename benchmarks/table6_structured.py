@@ -1,0 +1,24 @@
+"""Paper Table 6 (Sec. 6): row-wise structured pruning, Wanda-SP vs
+Wanda++-SP at 0.1 / 0.3 / 0.5 ratios."""
+from __future__ import annotations
+
+from benchmarks.common import emit, perplexity, prune_with, trained_params
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    rows, results = [], {}
+    for sp in (0.1, 0.3, 0.5):
+        for method, label in (("wanda", "wanda-SP"), ("wanda++", "wanda++-SP")):
+            pruned, _ = prune_with(model, params, method, pattern="row",
+                                   sparsity=sp)
+            ppl = perplexity(model, pruned)
+            results[(sp, label)] = ppl
+            rows.append((f"table6/r{sp}/{label}", 0, f"ppl={ppl:.3f}"))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 8 (Appendix B.2): RGS scaling-factor alpha ablation.
+
+Checks the qualitative finding: perplexity vs alpha is roughly U-shaped —
+very large alpha (gradient-only) is worse than a moderate blend.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, perplexity, prune_with, trained_params
+
+ALPHAS = [0.0, 0.1, 1.0, 10.0, 100.0, 10000.0]
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    rows, results = [], {}
+    for a in ALPHAS:
+        pruned, _ = prune_with(model, params, "wanda++rgs", alpha=a)
+        ppl = perplexity(model, pruned)
+        results[a] = ppl
+        rows.append((f"table8/alpha_{a:g}", 0, f"ppl={ppl:.3f}"))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Compare every pruning method on a trained LM (mini Table 1).
+
+    PYTHONPATH=src python examples/prune_and_eval.py [--arch llama1-7b]
+                                                     [--pattern 2:4]
+"""
+import argparse
+
+from benchmarks.common import perplexity, prune_with, trained_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="2:4")
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    args = ap.parse_args()
+
+    model, params = trained_params()
+    print(f"dense ppl: {perplexity(model, params):.3f}")
+    for method in ("magnitude", "wanda", "sparsegpt", "gblm",
+                   "wanda++rgs", "wanda++ro", "wanda++"):
+        pruned, secs = prune_with(model, params, method, args.pattern,
+                                  args.sparsity)
+        print(f"{method:12s} ppl={perplexity(model, pruned):8.3f} "
+              f"({secs:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: prune a model with Wanda++ in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import PruneConfig
+from repro.core.pruner import model_sparsity_report, prune_model
+from repro.data import calibration_batch, eval_batch
+from repro.models.model import Model
+
+# any of the 10 assigned archs (+ llama1-7b) works here; reduced() gives a
+# laptop-size config with the same code paths
+cfg = get_config("llama1-7b").reduced()
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# the paper's recipe: RGS scoring + Regional Optimization, 2:4 sparsity
+pcfg = PruneConfig(method="wanda++", pattern="2:4", n_calib=16, calib_len=64,
+                   ro_iters=2, ro_samples=8)
+calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
+pruned, reports = prune_model(model, params, calib, pcfg)
+
+ev = eval_batch(cfg.vocab_size, 16, 64)
+print("dense  loss:", float(model.loss(params, ev)[0]))
+print("pruned loss:", float(model.loss(pruned, ev)[0]))
+print("sparsity:", model_sparsity_report(model, pruned))

@@ -1,0 +1,71 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python results/report.py results/dryrun_v2.jsonl [--mesh 16x16]
+"""
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def load(path):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    header = ("| arch | shape | status | peak HBM/chip | compute | memory | "
+              "collective | bottleneck | MODEL/HLO flops | roofline frac |")
+    rows.append(header)
+    rows.append("|" + "---|" * 10)
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        st = r["status"]
+        if st != "OK":
+            rows.append(f"| {a} | {s} | {st.split(':')[0]} | - | - | - | - | - | - | - |")
+            continue
+        mem = r.get("memory", {}).get("peak_bytes") or 0
+        rf = r.get("roofline", {})
+        fit = "" if mem <= 16e9 else " ⚠"
+        rows.append(
+            f"| {a} | {s} | OK ({r.get('lower_compile_s', '?')}s) | "
+            f"{mem / 1e9:.1f}GB{fit} | {fmt_s(rf.get('compute_s'))} | "
+            f"{fmt_s(rf.get('memory_s'))} | {fmt_s(rf.get('collective_s'))} | "
+            f"{rf.get('bottleneck', '-').replace('_s', '')} | "
+            f"{rf.get('useful_flop_frac', 0):.2f} | "
+            f"{rf.get('roofline_frac', 0) * 100:.1f}% |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    n_ok = sum(1 for r in recs.values() if r["status"] == "OK")
+    n_skip = sum(1 for r in recs.values() if r["status"].startswith("SKIP"))
+    n_fail = len(recs) - n_ok - n_skip
+    over = [(a, s, m) for (a, s, m), r in recs.items()
+            if r["status"] == "OK"
+            and (r.get("memory", {}).get("peak_bytes") or 0) > 16e9]
+    return (f"cells={len(recs)} ok={n_ok} rule-skips={n_skip} fail={n_fail} "
+            f"over-16GB={len(over)}")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1])
+    mesh = sys.argv[3] if len(sys.argv) > 3 else "16x16"
+    if "--mesh" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    print(summary(recs))
+    print()
+    print(table(recs, mesh))

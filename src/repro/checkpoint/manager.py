@@ -1,0 +1,94 @@
+"""Checkpoint manager: periodic async saves, auto-resume, retention,
+preemption handling — the fault-tolerance substrate for launch/train.py.
+
+Failure model (1000+ nodes): any step may be the last. Guarantees:
+  * atomic publish (store.py) — a partial write is never visible
+  * auto-resume picks the newest *valid* checkpoint (corrupt dirs skipped)
+  * the data stream is a pure function of step (data/calibration.py), so
+    restart replays the exact token order — bitwise-reproducible training
+  * elastic restore — shardings are regenerated for the new mesh on load
+  * async writer thread — the training loop never blocks on disk
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint import store
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- discovery ---------------------------------------------------------
+    def steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.directory, d, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[dict] = None,
+             block: bool = False):
+        """state: any pytree (params + opt state + rng...)."""
+        extra = dict(extra or {})
+        extra["step"] = step
+        # materialize on host *before* handing to the writer thread so the
+        # training loop can donate/overwrite device buffers immediately
+        host_state = jax.tree_util.tree_map(jax.device_get, state)
+        path = os.path.join(self.directory, f"step_{step}")
+
+        def _write():
+            store.save_pytree(path, host_state, extra=extra)
+            self._gc()
+
+        self.wait()
+        if self.async_write and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            import shutil
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Returns (state, extra) or (None, None) when nothing to resume.
+        Tries newest-first and skips checkpoints that fail to load."""
+        steps = self.steps() if step is None else [step]
+        for s in reversed(steps):
+            path = os.path.join(self.directory, f"step_{s}")
+            try:
+                state = store.load_pytree(path, like, shardings=shardings)
+                extra = store.load_extra(path)
+                return state, extra
+            except Exception as e:  # corrupt/partial — try older
+                print(f"[ckpt] skipping step_{s}: {e}")
+        return None, None

@@ -1,0 +1,79 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ModelConfig,
+    PruneConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    shape_applicable,
+)
+
+from repro.configs import (  # noqa: F401
+    qwen3_8b,
+    stablelm_3b,
+    qwen1_5_110b,
+    llama3_405b,
+    qwen3_moe_235b,
+    deepseek_moe_16b,
+    mamba2_1_3b,
+    zamba2_7b,
+    hubert_xlarge,
+    qwen2_vl_2b,
+    llama1_7b,
+)
+
+_REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen3_8b,
+        stablelm_3b,
+        qwen1_5_110b,
+        llama3_405b,
+        qwen3_moe_235b,
+        deepseek_moe_16b,
+        mamba2_1_3b,
+        zamba2_7b,
+        hubert_xlarge,
+        qwen2_vl_2b,
+        llama1_7b,
+    )
+}
+
+# The 10 assignment architectures (llama1-7b is the paper's own, extra).
+ASSIGNED_ARCHS = [
+    "qwen3-8b",
+    "stablelm-3b",
+    "qwen1.5-110b",
+    "llama3-405b",
+    "qwen3-moe-235b-a22b",
+    "deepseek-moe-16b",
+    "mamba2-1.3b",
+    "zamba2-7b",
+    "hubert-xlarge",
+    "qwen2-vl-2b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+__all__ = [
+    "ModelConfig",
+    "PruneConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TrainConfig",
+    "shape_applicable",
+    "get_config",
+    "list_archs",
+    "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,230 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. Reduced ("smoke")
+variants are derived with :meth:`ModelConfig.reduced` so smoke tests exercise the
+same code paths as the full configs without the memory footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None  # defaults to d_model // num_heads
+    # --- attention options -------------------------------------------------
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # M-RoPE (t, h, w)
+    causal: bool = True  # False => encoder-only (no decode step)
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # dispatch group = this many tokens (0 = one full sequence per group).
+    # With sequence-sharded activations, a group that equals the local seq
+    # shard keeps the sort/scatter shard-local: expert all-to-all traffic
+    # then scales with tokens/chip instead of tokens/dp-shard.
+    moe_group_tokens: int = 0
+    # --- SSM (Mamba2 / SSD) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256  # SSD chunk length
+    # --- hybrid (Zamba2) ------------------------------------------------------
+    hybrid_attn_every: int = 0  # shared attention block every k layers; 0 = never
+    # --- misc ------------------------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"  # silu (SwiGLU) | gelu (plain MLP, encoder-style)
+    frontend: Optional[str] = None  # None | "audio" | "vision" (stub embeddings)
+    vision_patches: int = 256  # VLM stub: number of prefix patch embeddings
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_subquadratic_path(self) -> bool:
+        """True if long-context decode is sub-quadratic (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline MODEL_FLOPS)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.resolved_head_dim
+        qd = self.num_heads * hd
+        kvd = self.num_kv_heads * hd
+        n = v * d  # embeddings
+        if not self.tie_embeddings:
+            n += d * v  # lm head
+        attn = d * qd + 2 * d * kvd + qd * d
+        mlp = 3 * d * f if self.act == "silu" else 2 * d * f
+        if self.family == "moe":
+            routed = self.num_experts * 3 * d * f
+            shared = self.num_shared_experts * 3 * d * f
+            router = d * self.num_experts
+            per_layer = attn + routed + shared + router
+        elif self.family == "ssm":
+            per_layer = self._mamba_block_params()
+        elif self.family == "hybrid":
+            per_layer = self._mamba_block_params()
+            # one shared attention+MLP block amortized over all layers
+            n += attn + mlp
+        else:
+            per_layer = attn + mlp
+        n += L * per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.resolved_head_dim
+        qd = self.num_heads * hd
+        kvd = self.num_kv_heads * hd
+        attn = d * qd + 2 * d * kvd + qd * d
+        active_moe = (self.top_k + self.num_shared_experts) * 3 * d * f
+        router = d * self.num_experts
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return n + L * (attn + active_moe + router)
+
+    def _mamba_block_params(self) -> int:
+        d = self.d_model
+        di = self.d_inner
+        ds = self.ssm_state
+        ng = self.ssm_ngroups
+        nh = self.ssm_nheads
+        d_in_proj = 2 * di + 2 * ng * ds + nh
+        conv_dim = di + 2 * ng * ds
+        return d * d_in_proj + self.ssm_conv * conv_dim + conv_dim + 3 * nh + di + di * d
+
+    # ------------------------------------------------------------------
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 2 if self.hybrid_attn_every == 0 else 4),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads < self.num_heads else 4,
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+        )
+        if self.family == "moe":
+            small.update(num_experts=4, top_k=2,
+                         num_shared_experts=min(self.num_shared_experts, 1))
+        if self.family in ("ssm", "hybrid"):
+            small.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8)
+        if self.family == "hybrid":
+            small.update(hybrid_attn_every=2, num_layers=4)
+        if self.family == "vlm":
+            small.update(vision_patches=8)
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment matrix."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment skip rules. Returns (runnable, reason-if-skipped)."""
+    if shape.kind == "decode":
+        if cfg.is_encoder_only:
+            return False, "SKIP(rule): encoder-only arch has no decode step"
+        if shape.name == "long_500k" and not cfg.has_subquadratic_path:
+            return False, "SKIP(rule): long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    accum_steps: int = 1  # gradient accumulation microbatches
+    accum_dtype: str = "float32"  # "bfloat16" halves the accumulation buffer
+    optimizer: str = "adamw"  # "adafactor": factored 2nd moment, ~0 state HBM
+    optimizer_state_dtype: str = "float32"  # "bfloat16" halves optimizer HBM
+    remat: bool = True
+    remat_groups: int = 0  # >0: two-level scan remat (sqrt-ish activation HBM)
+    warmup_steps: int = 100
+    total_steps: int = 1000
+
+
+@dataclass(frozen=True)
+class PruneConfig:
+    """Wanda++ hyperparameters — defaults are the paper's."""
+
+    method: str = "wanda++"  # magnitude|wanda|sparsegpt|gblm|wanda++rgs|wanda++ro|wanda++
+    sparsity: float = 0.5
+    pattern: str = "2:4"  # "unstructured" | "N:M" | "row"
+    alpha: float = 100.0  # RGS scaling factor (paper Eq. 4)
+    n_calib: int = 128  # N calibration samples
+    calib_len: int = 128  # tokens per sample (Wanda++(M) setting)
+    ro_samples: int = 32  # M samples per RO round
+    ro_iters: int = 5  # K rounds
+    ro_lr: float = 3e-7  # RMSprop learning rate
+    ro_steps_per_iter: int = 32  # one update per RO sample
+    seed: int = 0
+
+    def pattern_nm(self):
+        if ":" in self.pattern:
+            n, m = self.pattern.split(":")
+            return int(n), int(m)
+        return None

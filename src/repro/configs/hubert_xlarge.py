@@ -1,0 +1,18 @@
+"""hubert-xlarge [audio] — arXiv:2106.07447. Encoder-only; modality frontend is a
+STUB (input_specs provides precomputed frame embeddings)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,  # masked-prediction codebook
+    head_dim=80,
+    causal=False,
+    act="gelu",
+    frontend="audio",
+)

@@ -1,0 +1,16 @@
+"""llama1-7b [dense] — the paper's own primary evaluation architecture
+(Touvron et al. 2023). Used by the benchmark suite mirroring Tables 1-8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama1-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,20 @@
+"""mamba2-1.3b [ssm] — arXiv:2405.21060 (SSD). Attention-free."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_ngroups=1,
+    ssm_chunk=256,
+    tie_embeddings=True,
+)

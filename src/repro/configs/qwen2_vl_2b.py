@@ -1,0 +1,20 @@
+"""qwen2-vl-2b [vlm] — arXiv:2409.12191. M-RoPE; vision frontend is a STUB
+(input_specs provides precomputed patch embeddings as a sequence prefix)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),  # (t, h, w) over head_dim/2
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    vision_patches=256,
+)

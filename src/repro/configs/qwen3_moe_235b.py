@@ -1,0 +1,19 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, GQA kv=4, qk_norm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=1536,  # per-expert intermediate size
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    num_experts=128,
+    top_k=8,
+    num_shared_experts=0,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,22 @@
+"""zamba2-7b [hybrid] — arXiv:2411.15242. Mamba2 backbone + shared attention
+block applied periodically (simplified: every 6th layer, single shared block)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,  # shared block MLP
+    vocab_size=32000,
+    head_dim=112,
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_ngroups=1,
+    ssm_chunk=256,
+    hybrid_attn_every=6,
+)

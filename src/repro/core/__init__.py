@@ -1,0 +1,5 @@
+"""Wanda++ core: regional-gradient pruning (the paper's contribution)."""
+from repro.core.masks import apply_mask, make_mask, nm_mask, row_mask, unstructured_mask  # noqa: F401
+from repro.core.pruner import model_sparsity_report, prune_block, prune_model  # noqa: F401
+from repro.core.ro import ro_fit, ro_round  # noqa: F401
+from repro.core.scores import gblm_score, magnitude_score, rgs_score, wanda_score  # noqa: F401

@@ -1,0 +1,75 @@
+"""LoRA adapters for sparsity-aware fine-tuning (paper Sec 5.6).
+
+The paper attaches LoRA to the q and v projections of every block (following
+Wanda's setup) and fine-tunes the pruned model; Wanda++ stays below Wanda
+after fine-tuning, demonstrating RO is orthogonal to LoRA.
+
+Adapters live inside the linear param dicts ("lora_a"/"lora_b") so the
+standard forward picks them up with zero plumbing; the base (sparse) weights
+stay frozen via the trainable mask.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+LORA_SCALE = 2.0  # alpha/rank with alpha = 2*rank (standard)
+DEFAULT_TARGETS = (("attn", "wq"), ("attn", "wv"))  # the paper's q,v modules
+
+
+def add_lora(params, key, rank: int = 8, targets=DEFAULT_TARGETS):
+    """Insert stacked (L, d_in, r) / (L, r, d_out) adapters into each target."""
+    blocks = params["blocks"]
+    L = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+    new_blocks = blocks
+    for t in targets:
+        sub = blocks
+        for p in t:
+            sub = sub[p]
+        w = sub["w"]  # (L, d_in, d_out)
+        key, k1 = jax.random.split(key)
+        a = (jax.random.normal(k1, (L, w.shape[1], rank), jnp.float32)
+             / math.sqrt(w.shape[1])).astype(w.dtype)
+        b = jnp.zeros((L, rank, w.shape[2]), w.dtype)
+        new_sub = dict(sub)
+        new_sub["lora_a"], new_sub["lora_b"] = a, b
+        new_blocks = _set_path(new_blocks, t, new_sub)
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def merge_lora(params, targets=DEFAULT_TARGETS):
+    """Fold adapters into the base weights (breaks exact sparsity — the paper
+    keeps adapters separate at inference; merging is provided for export)."""
+    blocks = params["blocks"]
+    for t in targets:
+        sub = blocks
+        for p in t:
+            sub = sub[p]
+        if "lora_a" not in sub:
+            continue
+        w = sub["w"] + LORA_SCALE * jnp.einsum(
+            "lir,lro->lio", sub["lora_a"], sub["lora_b"]).astype(sub["w"].dtype)
+        new_sub = {k: v for k, v in sub.items() if not k.startswith("lora_")}
+        new_sub["w"] = w
+        blocks = _set_path(blocks, t, new_sub)
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def lora_trainable(params):
+    """Boolean pytree: True only on lora leaves (freeze everything else)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    vals = [any("lora_" in str(k) for k in path) for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def _set_path(tree, path, val):
+    if len(path) == 1:
+        return {**tree, path[0]: val}
+    return {**tree, path[0]: _set_path(tree[path[0]], path[1:], val)}

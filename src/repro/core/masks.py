@@ -1,0 +1,72 @@
+"""Sparsity mask generation from pruning scores.
+
+Patterns (all used in the paper):
+- unstructured: global-within-layer threshold at a target sparsity ratio
+- N:M semi-structured: within every group of M consecutive weights along the
+  *input* dim, keep the N highest-scoring (2:4, 4:8)
+- row-structured ("SP", paper §6): drop whole output rows by mean row score
+
+Masks are boolean, True = keep. Exactness invariants are property-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unstructured_mask(score: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Keep the top (1-sparsity) fraction per *output row* (Wanda's per-output
+    comparison group, which it shows beats whole-layer for LLMs)."""
+    d_in = score.shape[-1]
+    k = max(int(round(d_in * (1.0 - sparsity))), 0)
+    if k == 0:
+        return jnp.zeros_like(score, dtype=bool)
+    # rank within each row; keep rank < k with index tie-break
+    order = jnp.argsort(-score, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return ranks < k
+
+
+def nm_mask(score: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Top-n-of-m groups along the last (input) axis. score: (..., d_in)."""
+    *lead, d_in = score.shape
+    assert d_in % m == 0, f"d_in={d_in} not divisible by m={m}"
+    g = score.reshape(*lead, d_in // m, m)
+    # exact rank via pairwise comparison with index tie-break (no sort):
+    # rank_i = #{j : s_j > s_i} + #{j < i : s_j == s_i}
+    s_i = g[..., :, None]
+    s_j = g[..., None, :]
+    idx = jnp.arange(m)
+    gt = s_j > s_i
+    eq_lower = (s_j == s_i) & (idx[None, :] < idx[:, None])
+    rank = jnp.sum(gt | eq_lower, axis=-1)
+    return (rank < n).reshape(*lead, d_in)
+
+
+def row_mask(score: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Structured row pruning: row score = mean over the row (paper §6)."""
+    d_out, d_in = score.shape[-2], score.shape[-1]
+    row_score = jnp.mean(score, axis=-1)  # (..., d_out)
+    k = max(int(round(d_out * (1.0 - sparsity))), 1)
+    order = jnp.argsort(-row_score, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    keep_row = ranks < k
+    return jnp.broadcast_to(keep_row[..., None], score.shape)
+
+
+def make_mask(score: jnp.ndarray, pattern: str, sparsity: float) -> jnp.ndarray:
+    """pattern: "unstructured" | "N:M" (e.g. "2:4") | "row"."""
+    if pattern == "unstructured":
+        return unstructured_mask(score, sparsity)
+    if pattern == "row":
+        return row_mask(score, sparsity)
+    n, m = pattern.split(":")
+    return nm_mask(score, int(n), int(m))
+
+
+def apply_mask(w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, w, jnp.zeros((), w.dtype))
+
+
+def sparsity_of(mask: jnp.ndarray) -> float:
+    return float(1.0 - jnp.mean(mask.astype(jnp.float32)))

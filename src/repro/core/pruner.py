@@ -1,0 +1,290 @@
+"""Wanda++ block-sequential pruning driver (paper Alg. 1).
+
+Walks decoder blocks in order; per block:
+  1. regional gradient RMS G via one backward per calibration sample (Eq. 3)
+  2. save the dense block outputs (RO targets)
+  3. K iterations of [RGS prune -> RO round]   (steps 3-9)
+  4. recompute G, final RGS prune              (steps 10-11)
+  5. propagate calibration activations through the pruned block
+
+Memory is O(one block) by construction — the paper's scalability claim. Under
+a mesh, the same jitted per-block functions run as SPMD programs (see
+launch/prune.py): calibration samples shard over `data`, block weights over
+`model`, and the only cross-device reduction is the grad/tap psum.
+
+Methods: magnitude | wanda | sparsegpt | gblm | wanda++rgs | wanda++ro | wanda++
+(`wanda++ro` = Wanda score + RO; `wanda++rgs` = RGS score, no RO.)
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core import masks as M
+from repro.core import ro as RO
+from repro.core import scores as SC
+from repro.core.regional import (block_io_stats, full_model_grad_rms,
+                                 regional_grad_rms)
+from repro.models import blocks as B
+from repro.models.layers import default_positions
+from repro.models.model import Model
+
+# ---------------------------------------------------------------------------
+# pytree path utilities
+# ---------------------------------------------------------------------------
+
+def tree_get(t, path):
+    for p in path:
+        if not isinstance(t, dict) or p not in t:
+            return None
+        t = t[p]
+    return t
+
+
+def tree_set(t, path, val):
+    if len(path) == 1:
+        return {**t, path[0]: val}
+    return {**t, path[0]: tree_set(t[path[0]], path[1:], val)}
+
+
+# ---------------------------------------------------------------------------
+# block function factory
+# ---------------------------------------------------------------------------
+
+def make_block_fn(cfg: ModelConfig) -> Callable:
+    """fn(bp, x, lin=None, elin=None) -> block output (residual included)."""
+    if cfg.family in ("ssm", "hybrid"):
+        def fn(bp, x, lin=None, elin=None):
+            return B.ssm_block(bp, x, cfg, _positions(cfg, x), lin=lin)[0]
+        return fn
+    apply = B.APPLY[cfg.family]
+
+    def fn(bp, x, lin=None, elin=None):
+        return apply(bp, x, cfg, _positions(cfg, x), lin=lin, elin=elin)[0]
+    return fn
+
+
+def make_shared_block_fn(cfg: ModelConfig) -> Callable:
+    """Zamba2's shared attention block as a standalone region."""
+    def fn(bp, x, lin=None, elin=None):
+        return B.transformer_block(bp, x, cfg, _positions(cfg, x), lin=lin)[0]
+    return fn
+
+
+def _positions(cfg: ModelConfig, x):
+    Bsz, S = x.shape[0], x.shape[1]
+    pos = default_positions(Bsz, S)
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, Bsz, S))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# scoring + destructive mask application
+# ---------------------------------------------------------------------------
+
+def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
+                prunable: Dict[str, tuple]):
+    """Score every prunable weight and zero the pruned entries (destructive,
+    as in the reference implementation — RO may regrow them, the final
+    re-prune restores exact sparsity)."""
+    method = pcfg.method
+    for name, path in prunable.items():
+        w = tree_get(bp, path)
+        if w is None:
+            continue
+        w_oi = SC.to_oi(w)
+        if method == "magnitude":
+            s = SC.magnitude_score(w_oi)
+        elif method in ("wanda", "wanda++ro"):
+            s = SC.wanda_score(w_oi, xnorm[name])
+        elif method in ("wanda++", "wanda++rgs", "gblm"):
+            g_oi = SC.to_oi(tree_get(G, path))
+            s = SC.rgs_score(w_oi, xnorm[name], g_oi, pcfg.alpha)
+        else:
+            raise ValueError(f"unknown method {method}")
+        mask = M.make_mask(s, pcfg.pattern, pcfg.sparsity)
+        bp = tree_set(bp, path, SC.from_oi(jnp.where(mask, w_oi, 0)))
+    return bp
+
+
+# ---------------------------------------------------------------------------
+# per-block Alg. 1
+# ---------------------------------------------------------------------------
+
+def prune_block(block_fn, bp, xs, pcfg: PruneConfig, prunable, key,
+                grad_chunk: int = 8, G_override=None):
+    """Returns (pruned bp, report dict)."""
+    method = pcfg.method
+    needs_grad = method in ("wanda++", "wanda++rgs", "gblm")
+    needs_ro = method in ("wanda++", "wanda++ro")
+
+    t0 = time.perf_counter()
+    stats_j = jax.jit(lambda b, x: block_io_stats(block_fn, b, x))
+    grad_j = jax.jit(lambda b, x: regional_grad_rms(block_fn, b, x, grad_chunk))
+    prune_j = jax.jit(lambda b, xn, g: apply_prune(b, xn, g, pcfg, prunable))
+
+    G = None
+    if needs_grad:
+        G = G_override if G_override is not None else grad_j(bp, xs)
+    dense_out, xnorm = stats_j(bp, xs)
+
+    report: Dict[str, Any] = {"method": method}
+    if not needs_ro:
+        bp = prune_j(bp, xnorm, G)
+        report["seconds"] = time.perf_counter() - t0
+        return bp, report
+
+    # K x [prune -> RO] (steps 3-9)
+    def prune_fn(bp_):
+        _, xn = stats_j(bp_, xs)  # fresh layer inputs; G reused (paper Sec 4.1)
+        return prune_j(bp_, xn, G)
+
+    bp, ro_losses = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg, key, prune_fn)
+
+    # steps 10-11: recompute gradient, final prune restores exact sparsity
+    if needs_grad:
+        G = grad_j(bp, xs)
+    _, xnorm = stats_j(bp, xs)
+    bp = prune_j(bp, xnorm, G)
+    report["ro_losses"] = [float(l) for l in ro_losses]
+    report["seconds"] = time.perf_counter() - t0
+    return bp, report
+
+
+# ---------------------------------------------------------------------------
+# model-level driver
+# ---------------------------------------------------------------------------
+
+def embed_calibration(model: Model, params, calib) -> jnp.ndarray:
+    """calib: tokens (N, S) int32, or frames (N, S, D) for audio."""
+    if model.cfg.family == "audio":
+        return calib.astype(model.param_dtype)
+    return jnp.take(params["embed"], calib, axis=0)
+
+
+def prune_model(model: Model, params, calib, pcfg: PruneConfig,
+                progress: Callable = None):
+    """Prune every block of `model`. Returns (params, report list).
+
+    calib: (N, S) token ids (or (N, S, D) frames). Embeddings, LM head and
+    final norms are excluded from pruning, as in the paper.
+    """
+    cfg = model.cfg
+    prunable = B.prunable_table(cfg)
+    block_fn = make_block_fn(cfg)
+    key = jax.random.PRNGKey(pcfg.seed)
+
+    xs = embed_calibration(model, params, calib)
+    blocks = params["blocks"]
+    prop_j = jax.jit(lambda b, x: block_fn(b, x))
+
+    # full-model gradient for the GBLM baseline (computed once, per-sample RMS)
+    gblm_G = None
+    if pcfg.method == "gblm":
+        gblm_G = _gblm_grads(model, params, calib)
+
+    reports = []
+    new_blocks = blocks
+
+    shared_fn = None
+    if cfg.family == "hybrid":
+        params, shared_rep = _prune_hybrid_shared(model, params, xs, pcfg, key)
+        reports.append(shared_rep)
+        shared_fn = jax.jit(
+            lambda b, x: make_shared_block_fn(cfg)(b, x))
+
+    for l in range(cfg.num_layers):
+        if cfg.family == "hybrid" and l % cfg.hybrid_attn_every == 0:
+            xs = shared_fn(params["shared_attn"], xs)
+        bp = jax.tree_util.tree_map(lambda a: a[l], blocks)
+        key, sub = jax.random.split(key)
+        if pcfg.method == "sparsegpt":
+            from repro.core.sparsegpt import sparsegpt_prune_block
+            bp, rep = sparsegpt_prune_block(block_fn, bp, xs, pcfg, prunable)
+        else:
+            G_l = (jax.tree_util.tree_map(lambda a: a[l], gblm_G)
+                   if gblm_G is not None else None)
+            bp, rep = prune_block(block_fn, bp, xs, pcfg, prunable, sub,
+                                  G_override=G_l)
+        rep["layer"] = l
+        xs = prop_j(bp, xs)
+        new_blocks = jax.tree_util.tree_map(
+            lambda a, b: a.at[l].set(b), new_blocks, bp)
+        reports.append(rep)
+        if progress:
+            progress(l, rep)
+
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out, reports
+
+
+def _gblm_grads(model: Model, params, calib):
+    """Full-model per-sample CE gradient RMS over the block weights (GBLM)."""
+    def loss_fn(p, batch):
+        return model.loss(p, batch)[0]
+
+    batches = {"tokens": calib[:, :-1][:, None, :], "labels": calib[:, 1:][:, None, :]}
+    G = full_model_grad_rms(loss_fn, params, batches, chunk=2)
+    return G["blocks"]
+
+
+def _prune_hybrid_shared(model: Model, params, xs, pcfg: PruneConfig, key):
+    """Zamba2: the shared attention block is pruned ONCE with statistics
+    aggregated over all of its application sites (weight sharing makes the
+    paper's per-site sequential recipe ill-posed; see DESIGN.md)."""
+    cfg = model.cfg
+    shared_fn = make_shared_block_fn(cfg)
+    block_fn = make_block_fn(cfg)
+    prop_shared = jax.jit(lambda b, x: shared_fn(b, x))
+    prop_mamba = jax.jit(lambda b, x: block_fn(b, x))
+
+    # collect inputs at every application site with dense weights
+    site_inputs = []
+    x = xs
+    for l in range(cfg.num_layers):
+        if l % cfg.hybrid_attn_every == 0:
+            site_inputs.append(x)
+            x = prop_shared(params["shared_attn"], x)
+        bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+        x = prop_mamba(bp, x)
+    xs_sites = jnp.concatenate(site_inputs, axis=0)  # sites as extra samples
+
+    prunable = B.PRUNABLE["hybrid_shared"]
+    if pcfg.method == "sparsegpt":
+        from repro.core.sparsegpt import sparsegpt_prune_block
+        shared_bp, rep = sparsegpt_prune_block(shared_fn, params["shared_attn"],
+                                               xs_sites, pcfg, prunable)
+    else:
+        shared_bp, rep = prune_block(shared_fn, params["shared_attn"], xs_sites,
+                                     pcfg, prunable, key)
+    rep["layer"] = "shared_attn"
+    out = dict(params)
+    out["shared_attn"] = shared_bp
+    return out, rep
+
+
+# ---------------------------------------------------------------------------
+# sparsity verification
+# ---------------------------------------------------------------------------
+
+def model_sparsity_report(model: Model, params) -> Dict[str, float]:
+    """Achieved zero-fraction per prunable weight (averaged over layers)."""
+    prunable = B.prunable_table(model.cfg)
+    rep = {}
+    for name, path in prunable.items():
+        w = tree_get(params["blocks"], path)
+        if w is None:
+            continue
+        rep[name] = float(jnp.mean((w == 0).astype(jnp.float32)))
+    if model.cfg.family == "hybrid":
+        for name, path in B.PRUNABLE["hybrid_shared"].items():
+            w = tree_get(params["shared_attn"], path)
+            if w is not None:
+                rep["shared." + name] = float(jnp.mean((w == 0).astype(jnp.float32)))
+    return rep

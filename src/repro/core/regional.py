@@ -1,0 +1,111 @@
+"""Regional gradients and per-linear input statistics for one decoder block.
+
+The paper's RGS loss (Sec 4.1):  L_RGS^l(X_n) = || f^l(X_n) ||_2 , one backward
+per calibration sample, gradients aggregated as RMS over samples (Eq. 3).
+
+Everything here is pure and jit-able; per-sample gradients are accumulated
+with a ``lax.scan`` over sample chunks so peak memory stays O(block), which is
+the paper's headline efficiency property.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def make_tapped_lin(taps: Dict[str, jnp.ndarray]):
+    """A ``lin`` backend that records per-input-channel sum-of-squares."""
+
+    def lin(name, p, xin):
+        flat = xin.reshape(-1, xin.shape[-1]).astype(jnp.float32)
+        ss = jnp.sum(flat * flat, axis=0)
+        taps[name] = taps.get(name, 0.0) + ss
+        return layers.linear(p, xin)
+
+    return lin
+
+
+def make_tapped_elin(taps: Dict[str, jnp.ndarray]):
+    """Expert einsum backend recording expert-conditional input sumsq.
+
+    xin: (B, E, C, In) -> taps[name]: (E, In). Only routed (slot-filled)
+    tokens contribute, which generalizes Wanda's ||X_j|| per expert.
+    """
+
+    def elin(name, w, xin, eq):
+        x32 = xin.astype(jnp.float32)
+        ss = jnp.sum(x32 * x32, axis=(0, 2))  # (E, In)
+        taps[name] = taps.get(name, 0.0) + ss
+        return jnp.einsum(eq, xin, w)
+
+    return elin
+
+
+def block_io_stats(block_fn: Callable, bp, xs: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One instrumented forward over the whole calibration set.
+
+    block_fn(bp, x, lin=, elin=) -> out.  xs: (N, S, D) calibration inputs.
+    Returns (dense_out (N,S,D), xnorm dict name->(.., in) L2 norms).
+    """
+    taps: Dict[str, jnp.ndarray] = {}
+    out = block_fn(bp, xs, lin=make_tapped_lin(taps), elin=make_tapped_elin(taps))
+    xnorm = {k: jnp.sqrt(v) for k, v in taps.items()}
+    return out, xnorm
+
+
+def regional_grad_rms(block_fn: Callable, bp, xs: jnp.ndarray, chunk: int = 8):
+    """RMS of per-sample regional gradients (Eq. 3). xs: (N, S, D).
+
+    Returns a pytree matching ``bp`` (float32 leaves).
+    """
+    N = xs.shape[0]
+    chunk = min(chunk, N)
+    assert N % chunk == 0, f"N={N} not divisible by grad chunk={chunk}"
+
+    def rgs_loss(bp_, x1):
+        out = block_fn(bp_, x1[None])
+        out = out.astype(jnp.float32)
+        return jnp.sqrt(jnp.sum(out * out))
+
+    gfn = jax.grad(rgs_loss)
+
+    def body(acc, xc):  # xc: (chunk, S, D)
+        gs = jax.vmap(lambda x1: gfn(bp, x1))(xc)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.sum(g.astype(jnp.float32) ** 2, axis=0), acc, gs)
+        return acc, 0
+
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), bp)
+    xs_c = xs.reshape(N // chunk, chunk, *xs.shape[1:])
+    acc, _ = jax.lax.scan(body, acc0, xs_c)
+    return jax.tree_util.tree_map(lambda a: jnp.sqrt(a / N), acc)
+
+
+def full_model_grad_rms(loss_fn: Callable, params, batches, chunk: int = 2):
+    """GBLM-style full-model gradient RMS (the expensive baseline the paper
+    contrasts against). loss_fn(params, batch)->scalar; batches: pytree with
+    leading dim N (per-sample batches)."""
+    N = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    chunk = min(chunk, N)
+    assert N % chunk == 0
+
+    gfn = jax.grad(loss_fn)
+
+    def body(acc, bc):
+        gs = jax.vmap(lambda b: gfn(params, b))(bc)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.sum(g.astype(jnp.float32) ** 2, axis=0), acc, gs)
+        return acc, 0
+
+    acc0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    bc = jax.tree_util.tree_map(
+        lambda b: b.reshape(N // chunk, chunk, *b.shape[1:]), batches)
+    acc, _ = jax.lax.scan(body, acc0, bc)
+    return jax.tree_util.tree_map(lambda a: jnp.sqrt(a / N), acc)

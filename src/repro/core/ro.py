@@ -1,0 +1,87 @@
+"""Regional Optimization (paper Sec 4.2).
+
+Minimizes  L_ro = ( f_dense(x) - f_pruned(x) )^2  over the weights of one
+decoder block, with per-sample RMSprop updates at lr=3e-7 (paper defaults).
+
+The paper performs one forward+backward+update per RO sample (M=32 samples
+per round, K=5 rounds). We run that loop as a ``lax.scan`` so a whole RO round
+is a single compiled program.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PruneConfig
+
+
+def rmsprop_init(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def rmsprop_update(params, grads, state, lr, decay=0.99, eps=1e-8):
+    new_state = jax.tree_util.tree_map(
+        lambda v, g: decay * v + (1 - decay) * jnp.square(g.astype(jnp.float32)),
+        state, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g, v: (p.astype(jnp.float32)
+                         - lr * g.astype(jnp.float32) / (jnp.sqrt(v) + eps)
+                         ).astype(p.dtype),
+        params, grads, new_state)
+    return new_params, new_state
+
+
+def select_ro_inputs(key, xs: jnp.ndarray, dense_out: jnp.ndarray, m: int):
+    """Randomly pick M of the N calibration inputs without replacement."""
+    n = xs.shape[0]
+    idx = jax.random.permutation(key, n)[:m]
+    return xs[idx], dense_out[idx]
+
+
+def ro_round(block_fn: Callable, bp, opt_state, xs_ro: jnp.ndarray,
+             dense_ro: jnp.ndarray, lr: float):
+    """One RO round: per-sample MSE step against the dense block output.
+
+    xs_ro: (M, S, D) inputs; dense_ro: (M, S, D) frozen dense outputs.
+    Returns (bp, opt_state, mean_loss_before_updates).
+    """
+
+    def ro_loss(bp_, x1, y1):
+        out = block_fn(bp_, x1[None])[0]
+        d = out.astype(jnp.float32) - y1.astype(jnp.float32)
+        return jnp.mean(d * d)
+
+    vg = jax.value_and_grad(ro_loss)
+
+    def body(carry, xy):
+        bp_, st = carry
+        x1, y1 = xy
+        loss, g = vg(bp_, x1, y1)
+        bp_, st = rmsprop_update(bp_, g, st, lr)
+        return (bp_, st), loss
+
+    (bp, opt_state), losses = jax.lax.scan(body, (bp, opt_state), (xs_ro, dense_ro))
+    return bp, opt_state, losses
+
+
+def ro_fit(block_fn: Callable, bp, xs: jnp.ndarray, dense_out: jnp.ndarray,
+           pcfg: PruneConfig, key, prune_fn: Callable = None):
+    """Full K-round RO loop for one block, with optional per-round re-pruning
+    (Alg. 1 steps 3-9: prune -> RO -> prune -> RO ...).
+
+    prune_fn(bp) -> bp applies the current RGS mask destructively.
+    Returns (bp, per-round mean losses).
+    """
+    opt_state = rmsprop_init(bp)
+    round_losses = []
+    for k in range(pcfg.ro_iters):
+        if prune_fn is not None:
+            bp = prune_fn(bp)
+        key, sub = jax.random.split(key)
+        xs_ro, dense_ro = select_ro_inputs(sub, xs, dense_out, pcfg.ro_samples)
+        bp, opt_state, losses = ro_round(block_fn, bp, opt_state, xs_ro,
+                                         dense_ro, pcfg.ro_lr)
+        round_losses.append(losses.mean())
+    return bp, jnp.stack(round_losses)

@@ -1,0 +1,43 @@
+"""Pruning scores. Canonical weight layout here is ``w_oi`` = (..., out, in);
+the pruner transposes native (in, out) weights (and (E, in, out) expert
+stacks) into this layout before scoring.
+
+  magnitude:  |W|                                   (Han et al.)
+  wanda:      |W| * ||X_j||_2                        (Eq. 1)
+  rgs/gblm:   (alpha * G + ||X_j||_2) * |W|          (Eq. 4 / Eq. 2)
+
+G is the RMS over per-sample gradients (Eq. 3); for RGS the gradient is the
+*regional* one (block-local L2 loss), for GBLM it is the full-model CE grad.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def magnitude_score(w_oi: jnp.ndarray) -> jnp.ndarray:
+    return jnp.abs(w_oi).astype(jnp.float32)
+
+
+def wanda_score(w_oi: jnp.ndarray, xnorm: jnp.ndarray) -> jnp.ndarray:
+    """xnorm: (..., in) L2 norm of each input channel over calibration tokens."""
+    return jnp.abs(w_oi).astype(jnp.float32) * xnorm[..., None, :].astype(jnp.float32)
+
+
+def rgs_score(w_oi: jnp.ndarray, xnorm: jnp.ndarray, g_oi: jnp.ndarray,
+              alpha: float) -> jnp.ndarray:
+    """Regional Gradient Score (paper Eq. 4). g_oi: gradient RMS, (.., out, in)."""
+    return (alpha * g_oi.astype(jnp.float32)
+            + xnorm[..., None, :].astype(jnp.float32)) * jnp.abs(w_oi).astype(jnp.float32)
+
+
+# GBLM uses the same blend with a full-model gradient (Eq. 2)
+gblm_score = rgs_score
+
+
+def to_oi(w: jnp.ndarray) -> jnp.ndarray:
+    """Native (in, out) / (E, in, out) -> canonical (out, in) / (E, out, in)."""
+    return jnp.swapaxes(w, -1, -2)
+
+
+def from_oi(w_oi: jnp.ndarray) -> jnp.ndarray:
+    return jnp.swapaxes(w_oi, -1, -2)

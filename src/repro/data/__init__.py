@@ -1,0 +1,3 @@
+from repro.data.calibration import (  # noqa: F401
+    calibration_batch, eval_batch, synthetic_lm_stream, SyntheticLM,
+)

@@ -1,0 +1,83 @@
+"""Synthetic C4-like token streams (offline container — no real C4).
+
+The generator is a seeded first-order Markov chain over a Zipfian vocabulary:
+unigram frequencies follow a power law (like natural text) and bigram
+structure gives models something learnable, so perplexity deltas between
+pruning methods are meaningful. Everything is deterministic in (seed, shape),
+and the iterator supports skip-ahead for fault-tolerant restart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seed: int = 0
+    # high branching + flat-ish Zipf keep benchmark models capacity-limited
+    # (like real LLMs), so pruning-method deltas are visible
+    branching: int = 16
+    zipf_a: float = 1.05
+
+    def _tables(self):
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        # Zipfian unigram distribution
+        ranks = np.arange(1, V + 1, dtype=np.float64)
+        uni = ranks ** (-self.zipf_a)
+        uni /= uni.sum()
+        # each token has `branching` successors drawn from the unigram dist
+        succ = rng.choice(V, size=(V, self.branching), p=uni)
+        sp = rng.dirichlet(np.ones(self.branching) * 0.5, size=V)
+        return uni, succ.astype(np.int32), sp.astype(np.float32)
+
+    def sample(self, n: int, seq_len: int, stream_seed: int = 0) -> np.ndarray:
+        """Returns int32 tokens (n, seq_len). Deterministic in all args."""
+        uni, succ, sp = self._tables()
+        rng = np.random.default_rng((self.seed, stream_seed))
+        out = np.empty((n, seq_len), np.int32)
+        cur = rng.choice(self.vocab_size, size=n, p=uni)
+        out[:, 0] = cur
+        # vectorized Markov walk with 10% unigram restarts (noise floor)
+        for t in range(1, seq_len):
+            u = rng.random(n)
+            choice = (rng.random(n)[:, None] < np.cumsum(sp[cur], -1)).argmax(-1)
+            nxt = succ[cur, choice]
+            restart = u < 0.1
+            if restart.any():
+                nxt[restart] = rng.choice(self.vocab_size, size=int(restart.sum()), p=uni)
+            out[:, t] = nxt
+            cur = nxt
+        return out
+
+
+def calibration_batch(vocab_size: int, n: int, seq_len: int, seed: int = 0):
+    """The paper's 128-sample C4 calibration set, synthetic version."""
+    return jnp.asarray(SyntheticLM(vocab_size, seed).sample(n, seq_len, stream_seed=1))
+
+
+def eval_batch(vocab_size: int, n: int, seq_len: int, seed: int = 0):
+    """Held-out eval stream (different stream_seed => disjoint from calib)."""
+    toks = SyntheticLM(vocab_size, seed).sample(n, seq_len + 1, stream_seed=2)
+    return {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+
+def synthetic_lm_stream(vocab_size: int, batch: int, seq_len: int,
+                        seed: int = 0, start_step: int = 0) -> Iterator[dict]:
+    """Infinite deterministic training stream with skip-ahead restart:
+    batch at step k is a pure function of (seed, k), so resuming from a
+    checkpoint at step k replays the exact same data order."""
+    gen = SyntheticLM(vocab_size, seed)
+    step = start_step
+    while True:
+        toks = gen.sample(batch, seq_len + 1, stream_seed=1000 + step)
+        yield {"tokens": jnp.asarray(toks[:, :-1]),
+               "labels": jnp.asarray(toks[:, 1:]),
+               "step": step}
+        step += 1

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    cache_shardings, input_shardings, make_rules, mesh_dp_axes, logical_spec_tree, param_shardings,
+)
+from repro.distributed.roofline import (  # noqa: F401
+    collective_bytes, roofline_report, HW,
+)

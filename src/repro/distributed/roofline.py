@@ -1,0 +1,262 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+    compute    = HLO_FLOPs   / (chips * peak_FLOPs)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = coll_bytes  / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed out of the optimized HLO text by summing operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# TPU v5e per chip (assignment-specified constants)
+@dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12   # bf16 FLOP/s
+    hbm_bw: float = 819e9        # bytes/s
+    link_bw: float = 50e9        # ICI bytes/s per link
+    hbm_bytes: float = 16e9      # capacity
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<single>\S+))\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the HLO, by op kind.
+
+    Uses the *result* shape on the lhs of each `<shape> <op-name>(...)` line;
+    for -done/-start pairs only the -start is counted.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shape>\([^=]*?\)|\S+\[[^\]]*\]\S*)\s*"
+            r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(?P<suffix>-start|-done)?\(", line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        out[op] = out.get(op, 0) + b
+    return out
+
+
+def roofline_report(cost: dict, coll: Dict[str, int], n_chips: int,
+                    model_flops: Optional[float] = None,
+                    bytes_per_chip: Optional[float] = None) -> Dict[str, float]:
+    """cost: compiled.cost_analysis(); coll: collective_bytes() output.
+
+    cost_analysis flops/bytes on an SPMD module are *per-program* (one chip's
+    share); collective bytes from HLO are likewise per-participant.
+    """
+    flops = float(cost.get("flops", 0.0))
+    if bytes_per_chip is None:
+        bytes_per_chip = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / HW.peak_flops
+    t_memory = bytes_per_chip / HW.hbm_bw
+    t_coll = coll_total / HW.link_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    rep = dict(terms)
+    rep["bottleneck"] = dom
+    rep["hlo_flops_per_chip"] = flops
+    rep["hlo_bytes_per_chip"] = bytes_per_chip
+    rep["collective_bytes_per_chip"] = coll_total
+    rep["coll_breakdown"] = dict(coll)
+    if model_flops is not None:
+        rep["model_flops_total"] = model_flops
+        # useful-fraction: model math vs compiled math across the whole mesh
+        rep["useful_flop_frac"] = (model_flops / (flops * n_chips)) if flops else 0.0
+        ideal = model_flops / (n_chips * HW.peak_flops)
+        rep["roofline_frac"] = ideal / max(max(terms.values()), 1e-30)
+    return rep
+
+
+def analytic_flops(cfg, shape, accum_steps: int = 1, remat: bool = False,
+                   remat_groups: int = 0) -> float:
+    """Exact executed FLOPs per step, summed over the whole mesh.
+
+    Needed because XLA's HloCostAnalysis visits ``while`` bodies once: every
+    lax.scan (layers, grad-accum, flash chunks, SSD chunks) is undercounted
+    by its trip count in ``compiled.cost_analysis()``. We know every matmul
+    in the model, so we count them directly: matmul params (6ND train / 2ND
+    fwd), the quadratic attention term, MoE capacity overhead, and the remat
+    recompute factor (8/6 with full block remat).
+    """
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    fwd_mult = 2.0
+    train = shape.kind == "train"
+    # attention quadratic term (per layer fwd): 4 * B * S^2 * H * hd ;
+    # decode: S_q=1 against S_kv cache -> 4 * B * S * H * hd
+    attn_fl = 0.0
+    hd = cfg.resolved_head_dim
+    n_attn_layers = 0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        n_attn_layers = cfg.num_layers
+    elif cfg.family == "hybrid":
+        n_attn_layers = (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+    if n_attn_layers:
+        if shape.kind == "decode":
+            attn_fl = 4.0 * shape.global_batch * shape.seq_len * cfg.num_heads * hd
+        else:
+            s_eff = shape.seq_len ** 2 / 2.0 if cfg.causal else shape.seq_len ** 2
+            attn_fl = 4.0 * shape.global_batch * s_eff * cfg.num_heads * hd
+        attn_fl *= n_attn_layers
+    # SSD chunk math (intra-chunk quadratic within Q): ~ 2*B*S*Q*(H*P + N(H->G))
+    ssd_fl = 0.0
+    if cfg.family in ("ssm", "hybrid") and shape.kind != "decode":
+        Q = min(cfg.ssm_chunk, shape.seq_len)
+        H, Pd, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        per_tok = 2 * Q * H * Pd + 2 * Q * H * N + 2 * H * Pd * N * 2
+        ssd_fl = cfg.num_layers * toks * per_tok
+    # MoE capacity overhead: tokens processed = k * capacity_factor vs k
+    moe_over = 1.0
+    if cfg.family == "moe":
+        # only the expert-FFN share is inflated by the capacity factor
+        expert_share = (cfg.top_k * 3 * cfg.d_model * cfg.d_ff * cfg.num_layers) / max(n_active, 1)
+        moe_over = 1.0 + expert_share * (cfg.moe_capacity_factor - 1.0)
+
+    base = fwd_mult * n_active * toks * moe_over + attn_fl + ssd_fl
+    if train:
+        # bwd = 2x fwd; full remat re-runs fwd once (4x); two-level scan
+        # remat re-runs group fwds too (5x)
+        factor = 3.0
+        if remat:
+            factor = 5.0 if remat_groups else 4.0
+        base *= factor
+    return base
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode: D=batch
+    new tokens. Forward-only shapes use 2*N*D."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# analytic traffic / collective model (scan-trip-count-aware)
+# ---------------------------------------------------------------------------
+
+def analytic_bytes(cfg, shape, *, param_bytes_per_chip: float,
+                   cache_bytes_per_chip: float = 0.0, accum_steps: int = 1,
+                   dp: int = 1, tp: int = 1, act_bytes: int = 2,
+                   act_reads: float = 12.0) -> float:
+    """Per-chip HBM traffic (bytes) per step.
+
+    Model: weights stream from HBM once per microbatch per pass (fwd,
+    recompute, bwd for train => 3x), activations move `act_reads` times per
+    token per layer (writes+reads of residual/intermediates; the flash path
+    keeps S^2 scores out of HBM), optimizer update touches params+grads+
+    states once, decode reads the KV cache once.
+    """
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    toks_chip = toks / max(dp, 1)
+    train = shape.kind == "train"
+    passes = 3.0 if train else 1.0
+    w_traffic = param_bytes_per_chip * passes * (accum_steps if train else 1)
+
+    d_eff = cfg.d_model / max(tp, 1) if cfg.family != "moe" else cfg.d_model
+    act_traffic = toks_chip * cfg.num_layers * d_eff * act_bytes * act_reads
+    if train:
+        act_traffic *= 2.5  # bwd re-reads saved carries + writes grads of acts
+
+    opt_traffic = 0.0
+    if train:
+        # grads(f32 r+w) + mu/nu (r+w) + params (r+w)
+        opt_traffic = param_bytes_per_chip * (2 * 4 / 2 + 2 * 2 / 2 * 2 + 2)
+
+    return w_traffic + act_traffic + opt_traffic + cache_bytes_per_chip
+
+
+def analytic_collectives(cfg, shape, *, param_bytes_per_chip: float,
+                         grad_bytes_per_chip: float = 0.0, accum_steps: int = 1,
+                         dp: int = 1, tp: int = 1, pods: int = 1,
+                         fsdp: bool = False, act_bytes: int = 2,
+                         dense_tp: bool = True, seq_shard: bool = False,
+                         moe_local_groups: bool = False) -> Dict[str, float]:
+    """Per-chip ICI/DCN bytes per step, by source. Ring-collective cost
+    per chip ~ 2*(n-1)/n * payload for all-reduce, (n-1)/n for all-gather.
+
+    dense_tp=False: attention/MLP weights replicated over `model` (only
+    experts/vocab sharded) — no Megatron activation all-reduces; instead,
+    seq-sharded attention gathers k/v for the local rows.
+    moe_local_groups: dispatch groups are shard-local (moe_group_tokens
+    aligned with the seq shard), so a2a scales with tokens/(dp*tp).
+    """
+    out: Dict[str, float] = {}
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    toks_chip = toks / max(dp, 1)
+    train = shape.kind == "train"
+    passes = 3.0 if train else 1.0
+
+    if train and dp > 1:
+        out["grad_allreduce"] = 2.0 * grad_bytes_per_chip
+    if train and fsdp:
+        # per-microbatch per-pass weight gather (fwd + recompute + bwd);
+        # gathered bytes per chip = shard-group total minus own share
+        out["fsdp_allgather"] = param_bytes_per_chip * (dp - 1) * 3 * accum_steps
+
+    n_l_attn = cfg.num_layers if cfg.family != "hybrid" else \
+        (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+    if tp > 1 and dense_tp and cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        # Megatron TP: ~2 activation all-reduces per layer (AG+RS under SP —
+        # same bytes). Sequence-sharding changes memory, not these bytes.
+        ar = 2.0 * toks_chip * cfg.d_model * act_bytes * 2 * cfg.num_layers
+        out["tp_allreduce"] = ar * passes
+    elif tp > 1 and not dense_tp and seq_shard and cfg.num_heads > 0:
+        # replicated dense weights + seq-sharded activations: attention
+        # gathers the other (tp-1)/tp of k/v for the locally-owned rows
+        kvd = cfg.num_kv_heads * cfg.resolved_head_dim
+        gather = 2.0 * toks_chip * kvd * act_bytes * (tp - 1) / tp * n_l_attn
+        out["attn_kv_gather"] = gather * passes
+
+    if cfg.family == "moe" and tp > 1:
+        toks_moe = toks / (dp * tp) if (moe_local_groups and seq_shard) else toks_chip
+        a2a = toks_moe * cfg.top_k * cfg.moe_capacity_factor * cfg.d_model \
+            * act_bytes * 2 * cfg.num_layers
+        out["moe_alltoall"] = a2a * passes
+    return out

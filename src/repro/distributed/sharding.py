@@ -1,0 +1,214 @@
+"""Logical-axis sharding: every param dim gets a logical name by path rules,
+and a per-(arch x shape-kind) rule table maps logical names to mesh axes.
+
+Robustness: a logical->mesh mapping is dropped automatically when the dim is
+not divisible by the mesh axis (e.g. kv_heads=8 on a 16-way model axis, or
+qwen2-vl's 12 heads) — the framework never produces an invalid sharding; it
+degrades to replication for that dim. This auto-degradation is also why one
+rule table serves all 10 assigned architectures.
+
+Default strategy (hillclimbed further in EXPERIMENTS.md §Perf):
+  * TP over `model`: attention heads, MLP ffn, experts (EP), vocab
+  * DP over `pod`+`data`: batch; FSDP (weights' embed dim over `data`) for
+    >=70B configs so params+optimizer fit v5e HBM
+  * decode: KV-cache length over `model` (flash-decode style context split)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# logical axis assignment by path regex (first match wins)
+# ---------------------------------------------------------------------------
+
+_PATH_RULES = [
+    # embeddings / head (the table's d_model dim is never FSDP-sharded:
+    # token gathers against a 2-way-sharded table force SPMD full-remat)
+    (r"^embed$", ("vocab", "embed_table")),
+    (r"^head$", ("embed_table", "vocab")),
+    # attention (leading "layers" dim added automatically for stacked blocks)
+    (r"attn/wq/w$", ("embed", "heads")),
+    (r"attn/wk/w$", ("embed", "kv_heads")),
+    (r"attn/wv/w$", ("embed", "kv_heads")),
+    (r"attn/wo/w$", ("heads", "embed")),
+    (r"attn/wq/b$", ("heads",)),
+    (r"attn/w[kv]/b$", ("kv_heads",)),
+    (r"attn/.*lora_a$", ("embed", None)),
+    (r"attn/.*lora_b$", (None, "heads")),
+    # MLP
+    (r"mlp/w[gu1]/w$", ("embed", "ffn")),
+    (r"mlp/w[d2]/w$", ("ffn", "embed")),
+    (r"mlp/w\w/b$", (None,)),
+    # MoE
+    (r"moe/router/w$", ("embed", None)),
+    (r"moe/wg$", ("experts", "embed", None)),
+    (r"moe/wu$", ("experts", "embed", None)),
+    (r"moe/wd$", ("experts", None, "embed")),
+    (r"moe/shared/w[gu]/w$", ("embed", "ffn")),
+    (r"moe/shared/wd/w$", ("ffn", "embed")),
+    # Mamba2
+    (r"mamba/in_proj/w$", ("embed", "inner")),
+    (r"mamba/out_proj/w$", ("inner", "embed")),
+    (r"mamba/conv_w$", (None, "inner")),
+    (r"mamba/conv_b$", ("inner",)),
+    (r"mamba/(A_log|D|dt_bias)$", ("ssm_heads",)),
+    (r"mamba/norm/scale$", ("inner",)),
+]
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def logical_spec_tree(params: Any) -> Any:
+    """Pytree of logical-axis tuples matching `params` (shapes or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        spec: Optional[Tuple] = None
+        for pat, logical in _PATH_RULES:
+            if re.search(pat, ps):
+                spec = tuple(logical)
+                break
+        if spec is None:
+            spec = (None,) * ndim
+        # stacked blocks / shared caches carry extra leading dims
+        if len(spec) < ndim:
+            spec = ("layers",) * (ndim - len(spec)) + spec
+        specs.append(spec[:ndim])
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# rule tables: logical axis -> mesh axis (or tuple of axes)
+# ---------------------------------------------------------------------------
+
+def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, kind: str,
+               overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    """Logical->mesh rules for (arch, shape-kind). `overrides` is the perf
+    hillclimb lever (launch/dryrun.py --rules)."""
+    tp = mesh.shape.get("model", 1)
+    # FSDP / 2-D weight sharding whenever TP-only weights would blow HBM:
+    # training threshold is lower (grads+opt states), inference higher.
+    per_chip_tp = cfg.param_count() * 2 / tp
+    fsdp = per_chip_tp > (3e9 if kind == "train" else 8e9)
+    rules: Dict[str, Any] = {
+        "layers": None,
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "embed_table": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "inner": "model",
+        "ssm_heads": "model",
+        # activations
+        "batch": mesh_dp_axes(mesh),
+        "seq": None,
+        "kv_len": "model" if kind == "decode" else None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _spec_for(shape, logical, rules, mesh) -> P:
+    axes = []
+    used = set()
+    for dim, lg in zip(shape, logical):
+        mesh_ax = rules.get(lg) if lg else None
+        if mesh_ax is None:
+            axes.append(None)
+            continue
+        ax_tuple = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        ax_tuple = tuple(a for a in ax_tuple if a in mesh.axis_names and a not in used)
+        size = 1
+        for a in ax_tuple:
+            size *= mesh.shape[a]
+        if not ax_tuple or dim % size != 0:
+            axes.append(None)  # auto-degrade to replication
+            continue
+        used.update(ax_tuple)
+        axes.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+    return P(*axes)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params: Any, kind: str,
+                    overrides: Optional[Dict] = None) -> Any:
+    """NamedSharding pytree for the param tree (arrays or ShapeDtypeStructs)."""
+    rules = make_rules(cfg, mesh, kind, overrides)
+    logical = logical_spec_tree(params)
+    return jax.tree_util.tree_map(
+        lambda leaf, lg: NamedSharding(mesh, _spec_for(leaf.shape, lg, rules, mesh)),
+        params, logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# input / cache shardings per shape kind
+# ---------------------------------------------------------------------------
+
+def input_shardings(mesh: Mesh, cfg: ModelConfig, specs: Dict, kind: str,
+                    overrides: Optional[Dict] = None) -> Dict:
+    rules = make_rules(cfg, mesh, kind, overrides)
+    dp = rules["batch"]
+    seq = rules.get("seq")
+    out = {}
+    for name, s in specs.items():
+        nd = len(s.shape)
+        if name in ("tokens", "labels", "mask"):
+            out[name] = NamedSharding(mesh, _spec_for(s.shape, ("batch", "seq"), rules, mesh))
+        elif name in ("frames", "vision_embeds"):
+            out[name] = NamedSharding(mesh, _spec_for(s.shape, ("batch", "seq", None), rules, mesh))
+        elif name == "token":
+            out[name] = NamedSharding(mesh, _spec_for(s.shape, ("batch",), rules, mesh))
+        else:  # scalars (pos, ...)
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any, kind: str = "decode",
+                    overrides: Optional[Dict] = None) -> Any:
+    """KV/state cache shardings: (L, B, S, KV, hd) -> batch over dp, S over
+    model (context-parallel decode); SSM states: heads over model."""
+    rules = make_rules(cfg, mesh, kind, overrides)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 5:  # (L|apps, B, S, KV, hd) attention cache
+            return _spec_for(leaf.shape, (None, "batch", "kv_len", "kv_heads", None), rules, mesh)
+        if nd == 5 - 1:  # (L, B, K-1, conv_dim) conv state
+            return _spec_for(leaf.shape, (None, "batch", None, "inner"), rules, mesh)
+        return _spec_for(leaf.shape, (None, "batch") + (None,) * (nd - 2), rules, mesh)
+
+    def to_ns(leaf):
+        # ssm state (L, B, H, P, N): heads over model, batch over dp
+        if len(leaf.shape) == 5 and leaf.dtype == jnp.float32 and cfg.family in ("ssm", "hybrid"):
+            return NamedSharding(mesh, _spec_for(
+                leaf.shape, (None, "batch", "ssm_heads", None, None), rules, mesh))
+        return NamedSharding(mesh, spec(leaf))
+
+    return jax.tree_util.tree_map(to_ns, cache)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the pruning/serving hot-spots (see DESIGN.md §4)."""
+from repro.kernels.ops import (  # noqa: F401
+    compact24, masked_matmul, nm_mask, sparse_matmul24, sparsity_check24,
+)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: masked matmul  y = x @ (W * mask).
+
+Sparse fine-tuning forward: the N:M mask is applied at tile load so the
+masked weight tensor is never materialized in HBM (the int8 mask costs 0.5x
+extra weight traffic vs 1x for a materialized masked copy; on-the-fly
+masking also keeps a single source of truth for W during RO, where pruned
+weights may be regrown and re-pruned).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, m_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...] * m_ref[...].astype(w_ref.dtype)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32
+                          ).astype(o_ref.dtype)
+
+
+def masked_matmul_pallas(x, w, mask, *, block_m: int = 128, block_n: int = 128,
+                         block_k: int = 512, interpret: bool = True):
+    """x: (M, K); w: (K, N); mask: (K, N) int8/bool. Returns (M, N) f32."""
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w, mask.astype(jnp.int8))

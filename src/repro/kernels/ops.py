@@ -1,0 +1,69 @@
+"""Jit'd public wrappers for the Pallas kernels + packing utilities.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in Python for correctness validation) and False on
+TPU, where pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul import masked_matmul_pallas
+from repro.kernels.nm_mask import nm_mask_pallas
+from repro.kernels.sparse_matmul24 import sparse_matmul24_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "n", "m"))
+def nm_mask(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0, n: int = 2,
+            m: int = 4):
+    """Fused score + N:M mask (int8). See kernels/nm_mask.py."""
+    return nm_mask_pallas(w_oi, xnorm, g_oi, alpha=alpha, n=n, m=m,
+                          interpret=_interpret_default())
+
+
+@jax.jit
+def sparse_matmul24(x, vals, idx):
+    """y = x @ decompress_2:4(vals, idx). See kernels/sparse_matmul24.py."""
+    return sparse_matmul24_pallas(x, vals, idx,
+                                  interpret=_interpret_default())
+
+
+@jax.jit
+def masked_matmul(x, w, mask):
+    """y = x @ (w * mask) with the mask applied at tile load."""
+    return masked_matmul_pallas(x, w, mask, interpret=_interpret_default())
+
+
+# ---------------------------------------------------------------------------
+# 2:4 packing (offline, at model-export time)
+# ---------------------------------------------------------------------------
+
+def compact24(w) -> tuple:
+    """Pack a 2:4-sparse (K, N) weight into (vals, idx), both (K/2, N).
+
+    Within every group of 4 consecutive rows there must be <= 2 nonzeros
+    (guaranteed by the 2:4 pruner); ties broken by position.
+    """
+    K, N = w.shape
+    assert K % 4 == 0
+    g = w.reshape(K // 4, 4, N)
+    is_zero = (g == 0)
+    # stable argsort: nonzero positions first, original order preserved
+    order = jnp.argsort(is_zero.astype(jnp.int32), axis=1, stable=True)
+    top2 = order[:, :2, :].astype(jnp.int8)  # (K/4, 2, N)
+    vals = jnp.take_along_axis(g, top2.astype(jnp.int32), axis=1)  # (K/4, 2, N)
+    return vals.reshape(K // 2, N), top2.reshape(K // 2, N)
+
+
+def sparsity_check24(w) -> bool:
+    """True iff every group of 4 along K has >= 2 zeros."""
+    K, N = w.shape
+    g = (w.reshape(K // 4, 4, N) == 0).sum(axis=1)
+    return bool((g >= 2).all())

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.masks import nm_mask as _nm_mask_ref
+
+
+def nm_mask_ref(w_oi, xnorm, g_oi=None, *, alpha=100.0, n=2, m=4):
+    w32 = jnp.abs(w_oi).astype(jnp.float32)
+    xn = xnorm.astype(jnp.float32)[None, :]
+    s = (alpha * g_oi.astype(jnp.float32) + xn) * w32 if g_oi is not None \
+        else xn * w32
+    return _nm_mask_ref(s, n, m).astype(jnp.int8)
+
+
+def decompress24_ref(vals, idx, K):
+    """vals/idx: (K/2, N) -> dense (K, N)."""
+    N = vals.shape[1]
+    dense = jnp.zeros((K, N), vals.dtype)
+    groups = K // 4
+    for t in range(2):
+        v = vals[t::2, :]  # (K/4, N)
+        i = idx[t::2, :].astype(jnp.int32)
+        rows = jnp.arange(groups)[:, None] * 4 + i  # (K/4, N) dense row ids
+        cols = jnp.broadcast_to(jnp.arange(N)[None, :], rows.shape)
+        dense = dense.at[rows, cols].add(v)
+    return dense
+
+
+def sparse_matmul24_ref(x, vals, idx):
+    dense = decompress24_ref(vals, idx, x.shape[1])
+    return (x.astype(jnp.float32) @ dense.astype(jnp.float32))
+
+
+def masked_matmul_ref(x, w, mask):
+    return x.astype(jnp.float32) @ (w * mask.astype(w.dtype)).astype(jnp.float32)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: 2:4 compacted-weight matmul  y = x @ decompress(W).
+
+TPU adaptation of the paper's NVIDIA-sparse-tensor-core deployment story
+(Appendix B.1): TPUs have no sparse MXU, but decode is weight-bandwidth
+bound, so the win is moving HALF the weight bytes HBM->VMEM and expanding
+to a dense tile on-chip for the MXU.
+
+Storage: vals (K/2, N) keeps the 2 surviving values per group of 4 along K;
+idx (K/2, N) int8 in [0,4) records each value's offset inside its group.
+Decompression is two broadcast-compares against an iota (no gathers — TPU
+vector units hate gathers):
+
+    dense[k, n] = sum_t vals[g*2+t, n] * (idx[g*2+t, n] == k % 4),  g = k//4
+
+Grid (M/bm, N/bn, K/bk) with K innermost: the output tile lives in VMEM
+across the K loop (revisiting), initialized at k==0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, vals_ref, idx_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                       # (bm, bk)
+    vals = vals_ref[...]                 # (bk/2, bn)
+    idx = idx_ref[...].astype(jnp.int32)  # (bk/2, bn)
+    bk = x.shape[1]
+    bn = vals.shape[1]
+
+    # expand to a dense (bk, bn) tile in VMEM with 2 broadcast-compares
+    within = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) % 4  # k % 4
+    v0 = vals[0::2, :]   # (bk/4, bn) first kept value per group
+    v1 = vals[1::2, :]
+    i0 = idx[0::2, :]
+    i1 = idx[1::2, :]
+    rep = lambda a: jnp.repeat(a, 4, axis=0)  # group -> 4 dense rows
+    dense = (rep(v0) * (rep(i0) == within).astype(v0.dtype)
+             + rep(v1) * (rep(i1) == within).astype(v1.dtype))
+    o_ref[...] += jnp.dot(x, dense, preferred_element_type=jnp.float32
+                          ).astype(o_ref.dtype)
+
+
+def sparse_matmul24_pallas(x, vals, idx, *, block_m: int = 128,
+                           block_n: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """x: (M, K); vals/idx: (K/2, N). Returns (M, N) in f32."""
+    M, K = x.shape
+    N = vals.shape[1]
+    assert vals.shape[0] == K // 2 and idx.shape == vals.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % 4 == 0
+    grid = (M // bm, N // bn, K // bk)
+
+    return pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, vals, idx)

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+Single pod = 16x16 = 256 chips (v5e pod slice); multi-pod adds a leading
+`pod` axis (2 x 256 = 512 chips). The `pod` axis carries only data
+parallelism (one gradient all-reduce per step crosses the DCN), so scaling
+to 1000+ nodes means growing `pod` — the step functions are pod-count
+agnostic.
+
+These are FUNCTIONS (not module constants) so importing never touches jax
+device state; the dry-run sets XLA_FLAGS before calling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh for multi-device CPU tests (subprocess sets device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

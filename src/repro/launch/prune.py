@@ -1,0 +1,77 @@
+"""Pruning launcher: run Wanda++ (or any baseline) against an arch config.
+
+    PYTHONPATH=src python -m repro.launch.prune --arch llama1-7b --smoke \
+        --method wanda++ --pattern 2:4
+
+At production scale the same per-block jitted functions run under the mesh:
+calibration samples shard over `data`, the block's weights over `model`
+(see DESIGN.md §7); memory stays O(one block) either way, which is the
+paper's central efficiency claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import PruneConfig
+from repro.data import calibration_batch, eval_batch
+from repro.core.pruner import model_sparsity_report, prune_model
+from repro.models.model import Model
+
+
+def run(arch: str, method: str, pattern: str, sparsity: float, smoke: bool,
+        n_calib: int, calib_len: int, ro_iters: int, eval_ppl: bool = True):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(method=method, pattern=pattern, sparsity=sparsity,
+                       n_calib=n_calib, calib_len=calib_len, ro_iters=ro_iters)
+    if cfg.family == "audio":
+        import jax.numpy as jnp
+        calib = jax.random.normal(jax.random.PRNGKey(1),
+                                  (n_calib, calib_len, cfg.d_model))
+    else:
+        calib = calibration_batch(cfg.vocab_size, n_calib, calib_len)
+
+    t0 = time.time()
+    pruned, reports = prune_model(
+        model, params, calib, pcfg,
+        progress=lambda l, r: print(f"[prune] block {l}: {r.get('seconds', 0):.1f}s"))
+    dt = time.time() - t0
+    sparsity_rep = model_sparsity_report(model, pruned)
+    print(json.dumps({"arch": cfg.name, "method": method, "pattern": pattern,
+                      "seconds": round(dt, 1), "sparsity": sparsity_rep}))
+
+    if eval_ppl and cfg.family not in ("audio",):
+        import jax.numpy as jnp
+        ev = eval_batch(cfg.vocab_size, 8, calib_len)
+        loss_d = float(model.loss(params, ev)[0])
+        loss_p = float(model.loss(pruned, ev)[0])
+        print(f"[prune] eval loss dense={loss_d:.4f} pruned={loss_p:.4f} "
+              f"(ppl {jnp.exp(loss_d):.2f} -> {jnp.exp(loss_p):.2f})")
+    return pruned, reports
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama1-7b")
+    ap.add_argument("--method", default="wanda++")
+    ap.add_argument("--pattern", default="2:4")
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n-calib", type=int, default=16)
+    ap.add_argument("--calib-len", type=int, default=64)
+    ap.add_argument("--ro-iters", type=int, default=2)
+    args = ap.parse_args()
+    run(args.arch, args.method, args.pattern, args.sparsity, args.smoke,
+        args.n_calib, args.calib_len, args.ro_iters)
+
+
+if __name__ == "__main__":
+    main()

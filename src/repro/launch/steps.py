@@ -1,0 +1,116 @@
+"""Step functions lowered by the dry-run and driven by train.py / serve.py.
+
+``make_train_step`` builds the full production step: gradient accumulation
+(lax.scan over microbatches), remat'd blocks, global-norm clipping, AdamW
+with configurable state dtype, cosine schedule, optional sparsity-preserving
+grad masking and top-k gradient compression with error feedback.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.model import Model
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_warmup, topk_compress_update)
+from repro.optim.optimizers import adafactor_init, adafactor_update
+
+
+def init_train_state(model: Model, params, tc: TrainConfig,
+                     compress_ratio: Optional[float] = None) -> Dict[str, Any]:
+    sd = jnp.bfloat16 if tc.optimizer_state_dtype == "bfloat16" else jnp.float32
+    opt = (adafactor_init(params) if tc.optimizer == "adafactor"
+           else adamw_init(params, sd))
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    if compress_ratio:
+        state["ef_error"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_train_step(model: Model, tc: TrainConfig, trainable=None,
+                    grad_mask=None, compress_ratio: Optional[float] = None,
+                    act_pspec=None):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=tc.remat,
+                                   remat_groups=tc.remat_groups,
+                                   act_pspec=act_pspec)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    acc_dt = jnp.bfloat16 if tc.accum_dtype == "bfloat16" else jnp.float32
+
+    def compute_grads(params, batch):
+        if tc.accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape(tc.accum_steps, x.shape[0] // tc.accum_steps,
+                             *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, mb):
+            loss_a, metrics_a, g_a = acc
+            (loss, metrics), g = grad_fn(params, mb)
+            g_a = jax.tree_util.tree_map(
+                lambda a, b: (a + b.astype(acc_dt)).astype(acc_dt), g_a, g)
+            return (loss_a + loss, metrics_a, g_a), 0
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        metrics0 = {"lm_loss": jnp.zeros((), jnp.float32),
+                    "aux_loss": jnp.zeros((), jnp.float32)}
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), metrics0, zeros), micro)
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) / tc.accum_steps), grads)
+        return loss / tc.accum_steps, metrics, grads
+
+    def step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if compress_ratio:
+            grads, ef = topk_compress_update(grads, state["ef_error"],
+                                             compress_ratio)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = cosine_warmup(state["step"], tc.learning_rate, tc.warmup_steps,
+                           tc.total_steps)
+        update = adafactor_update if tc.optimizer == "adafactor" else adamw_update
+        new_params, new_opt = update(
+            params, grads, state["opt"], tc, lr,
+            trainable=trainable, grad_mask=grad_mask)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if compress_ratio:
+            new_state["ef_error"] = ef
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return new_state, out_metrics
+
+    return step
+
+
+def make_serve_step(model: Model):
+    """Greedy single-token decode: (params, cache, inputs) -> (token, cache)."""
+
+    def step(params, cache, inputs):
+        logits, new_cache = model.decode_step(params, inputs, cache)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return step
+
+
+def make_prefill_step(model: Model):
+    def step(params, inputs):
+        # production prefill: only the last position's logits are needed
+        logits, aux = model.forward(params, inputs, last_only=True)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    return step

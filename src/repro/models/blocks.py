@@ -1,0 +1,226 @@
+"""Decoder/encoder blocks per architecture family.
+
+Every block exposes the same contract so the layer scan, the Wanda++ pruner,
+and the serving path treat all families uniformly:
+
+    block_apply(bp, x, cfg, positions, cache=None, cache_index=None,
+                lin=None, elin=None) -> (x_out, new_cache, aux)
+
+``PRUNABLE[family]`` maps each matmul's tap name (the string passed to
+``lin``/``elin``) to its weight path inside the block param tree — the pruner
+uses this to attach scores/masks to the right tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba2, moe
+from repro.models.layers import init_rmsnorm, rmsnorm, scoped
+
+
+# tap name -> weight path within block params. 2-D matmul weights only
+# (norms / biases / SSM diagonals are never pruned, matching the paper).
+PRUNABLE = {
+    "dense": {
+        "attn.wq": ("attn", "wq", "w"),
+        "attn.wk": ("attn", "wk", "w"),
+        "attn.wv": ("attn", "wv", "w"),
+        "attn.wo": ("attn", "wo", "w"),
+        "mlp.wg": ("mlp", "wg", "w"),
+        "mlp.wu": ("mlp", "wu", "w"),
+        "mlp.wd": ("mlp", "wd", "w"),
+    },
+    "encoder": {
+        "attn.wq": ("attn", "wq", "w"),
+        "attn.wk": ("attn", "wk", "w"),
+        "attn.wv": ("attn", "wv", "w"),
+        "attn.wo": ("attn", "wo", "w"),
+        "mlp.w1": ("mlp", "w1", "w"),
+        "mlp.w2": ("mlp", "w2", "w"),
+    },
+    "moe": {
+        "attn.wq": ("attn", "wq", "w"),
+        "attn.wk": ("attn", "wk", "w"),
+        "attn.wv": ("attn", "wv", "w"),
+        "attn.wo": ("attn", "wo", "w"),
+        "moe.router": ("moe", "router", "w"),
+        "moe.wg": ("moe", "wg"),  # (E, D, F) expert-stacked
+        "moe.wu": ("moe", "wu"),
+        "moe.wd": ("moe", "wd"),
+        "moe.shared.wg": ("moe", "shared", "wg", "w"),
+        "moe.shared.wu": ("moe", "shared", "wu", "w"),
+        "moe.shared.wd": ("moe", "shared", "wd", "w"),
+    },
+    "ssm": {
+        "mamba.in_proj": ("mamba", "in_proj", "w"),
+        "mamba.out_proj": ("mamba", "out_proj", "w"),
+    },
+    "hybrid": {
+        "mamba.in_proj": ("mamba", "in_proj", "w"),
+        "mamba.out_proj": ("mamba", "out_proj", "w"),
+    },
+    # Zamba2's shared attention block (pruned once; weights shared across sites)
+    "hybrid_shared": {
+        "attn.wq": ("attn", "wq", "w"),
+        "attn.wk": ("attn", "wk", "w"),
+        "attn.wv": ("attn", "wv", "w"),
+        "attn.wo": ("attn", "wo", "w"),
+        "mlp.wg": ("mlp", "wg", "w"),
+        "mlp.wu": ("mlp", "wu", "w"),
+        "mlp.wd": ("mlp", "wd", "w"),
+    },
+}
+
+
+def prunable_table(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm"):
+        return PRUNABLE["dense"]
+    if cfg.family == "audio":
+        return PRUNABLE["encoder"]
+    if cfg.num_shared_experts == 0 and cfg.family == "moe":
+        return {k: v for k, v in PRUNABLE["moe"].items() if "shared" not in k}
+    return PRUNABLE[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# dense / vlm / audio transformer block
+# ---------------------------------------------------------------------------
+
+def init_transformer_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": layers.init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": layers.init_mlp(k2, cfg, dtype),
+    }
+
+
+def transformer_block(bp, x, cfg, positions, cache=None, cache_index=None,
+                      lin=None, elin=None):
+    h, new_cache = layers.attention(
+        bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
+        kv_cache=cache, cache_index=cache_index, lin=scoped(lin, "attn"),
+    )
+    x = x + h
+    x = x + layers.mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg,
+                       lin=scoped(lin, "mlp"))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MoE block
+# ---------------------------------------------------------------------------
+
+def init_moe_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": layers.init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "moe": moe.init_moe(k2, cfg, dtype),
+    }
+
+
+def moe_block(bp, x, cfg, positions, cache=None, cache_index=None,
+              lin=None, elin=None):
+    h, new_cache = layers.attention(
+        bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
+        kv_cache=cache, cache_index=cache_index, lin=scoped(lin, "attn"),
+    )
+    x = x + h
+    h, aux = moe.moe_mlp(bp["moe"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg,
+                         lin=scoped(lin, "moe"), elin=_scoped_elin(elin, "moe"))
+    return x + h, new_cache, aux
+
+
+def _scoped_elin(elin, prefix):
+    if elin is None:
+        elin = moe.default_elin
+    return lambda name, w, xin, eq: elin(f"{prefix}.{name}", w, xin, eq)
+
+
+# ---------------------------------------------------------------------------
+# SSM (Mamba2) block
+# ---------------------------------------------------------------------------
+
+def init_ssm_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "mamba": mamba2.init_mamba_block(key, cfg, dtype),
+    }
+
+
+def ssm_block(bp, x, cfg, positions, cache=None, cache_index=None,
+              lin=None, elin=None):
+    xin = rmsnorm(bp["ln"], x, cfg.norm_eps)
+    ml = scoped(lin, "mamba")
+    if cache is None or x.shape[1] > 1:
+        ssm_state = cache[0] if cache is not None else None
+        h, new_cache = mamba2.mamba_block(bp["mamba"], xin, cfg,
+                                          ssm_state=ssm_state, lin=ml)
+    else:
+        h, new_cache = mamba2.mamba_decode_step(
+            bp["mamba"], xin, cfg, cache[0], cache[1], lin=ml)
+    return x + h, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (Zamba2): mamba backbone + ONE shared attention block every k layers
+# ---------------------------------------------------------------------------
+
+def init_shared_attn_block(key, cfg: ModelConfig, dtype):
+    return init_transformer_block(key, cfg, dtype)
+
+
+def hybrid_layer(bp_mamba, shared_bp, x, cfg, positions, layer_idx,
+                 mamba_cache=None, attn_cache=None, cache_index=None,
+                 lin=None, elin=None):
+    """One hybrid layer: maybe-shared-attention, then a mamba block.
+
+    attn_cache: (k, v) slice for this layer's application site or None.
+    Returns (x, new_mamba_cache, new_attn_cache, aux).
+    """
+    every = cfg.hybrid_attn_every
+    is_attn = (layer_idx % every) == 0
+
+    def with_attn(x):
+        y, kv, _ = transformer_block(
+            shared_bp, x, cfg, positions, cache=attn_cache,
+            cache_index=cache_index, lin=scoped(lin, "shared"))
+        return y, kv
+
+    def without_attn(x):
+        if attn_cache is not None:
+            return x, attn_cache
+        B, S = x.shape[0], x.shape[1]
+        hd = cfg.resolved_head_dim
+        kv = (jnp.zeros((B, S, cfg.num_kv_heads, hd), x.dtype),
+              jnp.zeros((B, S, cfg.num_kv_heads, hd), x.dtype))
+        return x, kv
+
+    x, new_attn_cache = jax.lax.cond(is_attn, with_attn, without_attn, x)
+    x, new_mamba_cache, aux = ssm_block(
+        {"ln": bp_mamba["ln"], "mamba": bp_mamba["mamba"]}, x, cfg, positions,
+        cache=mamba_cache, cache_index=cache_index, lin=lin)
+    return x, new_mamba_cache, new_attn_cache, aux
+
+
+INIT = {
+    "dense": init_transformer_block,
+    "vlm": init_transformer_block,
+    "audio": init_transformer_block,
+    "moe": init_moe_block,
+    "ssm": init_ssm_block,
+    "hybrid": init_ssm_block,  # per-layer part; shared block separate
+}
+
+APPLY = {
+    "dense": transformer_block,
+    "vlm": transformer_block,
+    "audio": transformer_block,
+    "moe": moe_block,
+    "ssm": ssm_block,
+}

@@ -1,0 +1,126 @@
+"""Chunked (flash-style) attention with a custom VJP — pure JAX.
+
+Online-softmax over KV chunks inside a ``lax.scan``: the (Sq x Skv) score
+matrix never materializes in HBM, bounding attention memory at
+O(Sq * chunk). The custom VJP recomputes scores per chunk in the backward
+pass (saving only out + logsumexp), so long-context prefill fits the v5e
+HBM roofline. Lowered to plain HLO => works under SPMD on any backend.
+
+Layout matches layers._sdpa: q (B, Sq, KV, G, hd); k, v (B, Skv, KV, hd).
+Causality is positional: q_pos (B, Sq), kv_pos (B, Skv); None => bidirectional.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunks(x, axis, size):
+    n = x.shape[axis]
+    assert n % size == 0, (n, size)
+    nc = n // size
+    new_shape = x.shape[:axis] + (nc, size) + x.shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(new_shape), axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(q, k, v, q_pos, kv_pos, scale: float, chunk: int):
+    out, _ = _fwd_impl(q, k, v, q_pos, kv_pos, scale, chunk)
+    return out
+
+
+def _fwd_impl(q, k, v, q_pos, kv_pos, scale, chunk):
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    qf = q.astype(jnp.float32)
+    kc = _chunks(k.astype(jnp.float32), 1, chunk)  # (nc, B, c, KV, hd)
+    vc = _chunks(v.astype(jnp.float32), 1, chunk)
+    pc = _chunks(kv_pos, 1, chunk) if kv_pos is not None else None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if pc is None:
+            k_i, v_i = xs
+            mask = None
+        else:
+            k_i, v_i, p_i = xs
+            mask = p_i[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_i) * scale
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", p, v_i)
+        return (m_new, l, acc), 0
+
+    xs = (kc, vc) if pc is None else (kc, vc, pc)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None])
+    out = jnp.moveaxis(out, -2, 1)  # (B, KV, G, Sq, hd) -> (B, Sq, KV, G, hd)
+    lse = m + jnp.log(l_safe)  # (B, KV, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, scale, chunk):
+    out, lse = _fwd_impl(q, k, v, q_pos, kv_pos, scale, chunk)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(scale, chunk, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    chunk_ = min(chunk, Skv)
+    qf = q.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    of = out.astype(jnp.float32)
+    # delta = rowwise(dout . out)
+    delta = jnp.einsum("bqkgh,bqkgh->bkgq", do, of)  # (B,KV,G,Sq)
+
+    kc = _chunks(k.astype(jnp.float32), 1, chunk_)
+    vc = _chunks(v.astype(jnp.float32), 1, chunk_)
+    pc = _chunks(kv_pos, 1, chunk_) if kv_pos is not None else None
+
+    dq0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+
+    def body(dq, xs):
+        if pc is None:
+            k_i, v_i = xs
+            mask = None
+        else:
+            k_i, v_i, p_i = xs
+            mask = p_i[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_i) * scale
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,KV,G,Sq,c)
+        dv_i = jnp.einsum("bkgqs,bqkgh->bskh", p, do)
+        dp = jnp.einsum("bqkgh,bskh->bkgqs", do, v_i)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqs,bskh->bqkgh", ds, k_i)
+        dk_i = jnp.einsum("bkgqs,bqkgh->bskh", ds, qf)
+        return dq, (dk_i, dv_i)
+
+    xs = (kc, vc) if pc is None else (kc, vc, pc)
+    dq, (dkc, dvc) = jax.lax.scan(body, dq0, xs)
+    dk = jnp.moveaxis(dkc, 0, 1).reshape(B, Skv, KV, hd)
+    dv = jnp.moveaxis(dvc, 0, 1).reshape(B, Skv, KV, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,259 @@
+"""Core neural layers: RMSNorm, RoPE / M-RoPE, GQA attention, (Sw)i(GLU) MLP.
+
+Functional style: ``init_*`` build param dicts, ``apply`` functions are pure.
+All block stacks are driven by ``lax.scan`` upstream, so every function here
+must be shape-polymorphic in the batch/sequence dims only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, fan_in):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False):
+    p = {"w": _normal(key, (d_in, d_out), dtype, d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    if "lora_a" in p:  # LoRA adapter (scale folded as constant, see core/lora.py)
+        y = y + 2.0 * ((x @ p["lora_a"]) @ p["lora_b"]).astype(y.dtype)
+    return y
+
+
+def default_lin(name, p, x):
+    """Pluggable matmul backend. Swapped out to (a) tap per-layer inputs for
+    Wanda/RGS statistics, (b) apply sparsity masks in-flight, or (c) dispatch
+    to the Pallas 2:4 compacted kernel on the serving path."""
+    return linear(p, x)
+
+
+def scoped(lin, prefix):
+    if lin is None:
+        lin = default_lin
+    return lambda name, p, x: lin(f"{prefix}.{name}", p, x)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL). positions: (3, B, S) (t, h, w)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs[None, None, None, :]  # (3,B,S,hd/2)
+    # select which of the 3 position streams drives each frequency band;
+    # sections are proportional so reduced head_dims keep the same split
+    half = hd // 2
+    total = sum(sections)
+    edges = [round(half * sum(sections[: i + 1]) / total) for i in range(len(sections))]
+    sizes = [edges[0]] + [edges[i] - edges[i - 1] for i in range(1, len(edges))]
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sizes)]
+    )  # (hd/2,)
+    ang = jnp.take_along_axis(ang, sec[None, None, :][None], axis=0)[0]  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional qk_norm / qkv bias / M-RoPE / KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.num_heads * hd, dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.num_heads * hd, cfg.d_model, dtype, False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+# Sequences >= this use chunked flash attention (see models/flash.py)
+FLASH_MIN_SEQ = 2048
+FLASH_CHUNK = 512
+# int8 KV-cache symmetric quantization scale (decode weight/cache traffic
+# is the TPOT bound; int8 halves cache bytes — beyond-paper serving opt)
+KV_QSCALE = 32.0
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,KV,G,hd)  k,v: (B,Skv,KV,hd)  mask: (B,Sq,Skv) bool or None."""
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out
+
+
+def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
+              cache_index=None, attn_mask=None, lin=None):
+    """Returns (out, new_kv_cache).
+
+    Training / prefill: ``kv_cache=None`` — causal (or bidirectional) full attn;
+    new cache returned as the (k, v) of this call.
+    Decode: ``kv_cache=(k,v)`` of shape (B, S_max, KV, hd); x is (B, 1, D) and
+    ``cache_index`` is the write position (scalar int32).
+    """
+    if lin is None:
+        lin = default_lin
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G = H // KV
+
+    q = lin("wq", p["wq"], x).reshape(B, S, H, hd)
+    k = lin("wk", p["wk"], x).reshape(B, S, KV, hd)
+    v = lin("wv", p["wv"], x).reshape(B, S, KV, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        kv_pos = positions[0]  # temporal stream orders causality
+    elif cfg.num_heads > 0 and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+    else:
+        kv_pos = positions if positions.ndim == 2 else positions[0]
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        if ck.dtype == jnp.int8:
+            kq = jnp.clip(jnp.round(k.astype(jnp.float32) * KV_QSCALE), -127, 127)
+            vq = jnp.clip(jnp.round(v.astype(jnp.float32) * KV_QSCALE), -127, 127)
+            ck = jax.lax.dynamic_update_slice(ck, kq.astype(jnp.int8),
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vq.astype(jnp.int8),
+                                              (0, cache_index, 0, 0))
+            k_full = (ck.astype(jnp.float32) / KV_QSCALE).astype(k.dtype)
+            v_full = (cv.astype(jnp.float32) / KV_QSCALE).astype(v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            k_full, v_full = ck, cv
+        S_kv = ck.shape[1]
+        kv_slots = jnp.arange(S_kv, dtype=jnp.int32)
+        mask = kv_slots[None, None, :] <= (cache_index + jnp.arange(S, dtype=jnp.int32))[None, :, None]
+        mask = jnp.broadcast_to(mask, (B, S, S_kv))
+        new_cache = (ck, cv)
+    else:
+        k_full, v_full = k, v
+        new_cache = (k, v)
+        if attn_mask is None and S >= FLASH_MIN_SEQ:
+            # chunked online-softmax attention: no (Sq x Skv) tensor in HBM
+            from repro.models.flash import flash_attention
+            qq = q.reshape(B, S, KV, G, hd)
+            qp = kv_pos if cfg.causal else None
+            out = flash_attention(qq, k, v, qp, qp, 1.0 / math.sqrt(hd),
+                                  FLASH_CHUNK)
+            out = out.reshape(B, S, H * hd)
+            return lin("wo", p["wo"], out), new_cache
+        if cfg.causal:
+            mask = kv_pos[:, None, :] <= kv_pos[:, :, None]  # (B, Sq, Skv)
+        else:
+            mask = None
+        if attn_mask is not None:
+            mask = attn_mask if mask is None else (mask & attn_mask)
+
+    q = q.reshape(B, S, KV, G, hd)
+    out = _sdpa(q, k_full, v_full, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(B, S, H * hd)
+    return lin("wo", p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "wg": init_linear(ks[0], cfg.d_model, d_ff, dtype),
+            "wu": init_linear(ks[1], cfg.d_model, d_ff, dtype),
+            "wd": init_linear(ks[2], d_ff, cfg.d_model, dtype),
+        }
+    return {
+        "w1": init_linear(ks[0], cfg.d_model, d_ff, dtype),
+        "w2": init_linear(ks[1], d_ff, cfg.d_model, dtype),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig, lin=None):
+    if lin is None:
+        lin = default_lin
+    if "wg" in p:
+        return lin("wd", p["wd"], jax.nn.silu(lin("wg", p["wg"], x)) * lin("wu", p["wu"], x))
+    return lin("w2", p["w2"], jax.nn.gelu(lin("w1", p["w1"], x)))

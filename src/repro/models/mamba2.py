@@ -1,0 +1,203 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD: quadratic attention-like math *within* fixed-size chunks, linear
+recurrence *across* chunks via ``lax.scan`` (carry = SSM state). This is the
+TPU-friendly formulation: every chunk op is an MXU einsum and the scan keeps
+HLO size and activation memory independent of sequence length.
+
+Decode is a single-token recurrence — O(1) state, which is what makes the
+``long_500k`` cell runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import default_lin, init_linear, linear, rmsnorm
+
+
+def _inv_softplus(x):
+    return x + math.log(-math.expm1(-x))
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    di = cfg.d_inner
+    ds, ng, nh, K = cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads, cfg.ssm_conv
+    d_in_proj = 2 * di + 2 * ng * ds + nh
+    conv_dim = di + 2 * ng * ds
+    ks = jax.random.split(key, 5)
+    # dt init: softplus(dt_bias) ~ U[1e-3, 1e-1] (official init)
+    u = jax.random.uniform(ks[2], (nh,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": init_linear(ks[0], D, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32) / math.sqrt(K)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": init_linear(ks[4], di, D, dtype),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv via K shifted adds (K is tiny). xBC: (B, S, C)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = jnp.zeros_like(xBC)
+    for k in range(K):
+        out = out + pad[:, k : k + S, :] * conv_w[k]
+    return jax.nn.silu(out + conv_b)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ds, ng, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ng * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ng * ds :]
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC):
+    di, ds, ng = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    x = xBC[..., :di]
+    B_ = xBC[..., di : di + ng * ds]
+    C_ = xBC[..., di + ng * ds :]
+    return x, B_, C_
+
+
+def ssd_chunked(x, dt, A, B_, C_, cfg: ModelConfig, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)  dt: (B, S, H) post-softplus  A: (H,) negative
+    B_, C_: (B, S, G, N).  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[-2], B_.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = B_.reshape(Bsz, nc, Q, G, N)
+    Cc = C_.reshape(Bsz, nc, Q, G, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(h, inp):
+        xq, dtq, Bq, Cq = inp  # (B,Q,H,P) (B,Q,H) (B,Q,G,N) (B,Q,G,N)
+        dtq = dtq.astype(jnp.float32)
+        dA = dtq * A  # (B,Q,H) negative log-decay per step
+        cs = jnp.cumsum(dA, axis=1)  # inclusive
+        Bh = jnp.repeat(Bq, rep, axis=2).astype(jnp.float32)  # (B,Q,H,N)
+        Ch = jnp.repeat(Cq, rep, axis=2).astype(jnp.float32)
+        xf = xq.astype(jnp.float32)
+        csT = cs.transpose(0, 2, 1)  # (B,H,Q)
+        dtT = dtq.transpose(0, 2, 1)  # (B,H,Q)
+        # intra-chunk ("attention" dual form)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Ch, Bh)
+        ddec = csT[:, :, :, None] - csT[:, :, None, :]  # cs[i]-cs[j]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        M = jnp.where(tri[None, None], jnp.exp(ddec), 0.0) * dtT[:, :, None, :]
+        y = jnp.einsum("bhqk,bkhp->bqhp", scores * M, xf)
+        # inter-chunk (contribution of carried state)
+        y = y + jnp.einsum("bqhn,bhpn->bqhp", Ch * jnp.exp(cs)[..., None], h)
+        # new carry
+        dec_end = jnp.exp(cs[:, -1:, :] - cs)  # (B,Q,H)
+        state = jnp.einsum("bqhn,bqhp->bhpn", Bh * (dec_end * dtq)[..., None], xf)
+        h = h * jnp.exp(cs[:, -1, :])[:, :, None, None] + state
+        return h, y.astype(x.dtype)
+
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3, 4),
+        Cc.transpose(1, 0, 2, 3, 4),
+    )
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba_block(p, u, cfg: ModelConfig, *, ssm_state=None, conv_state=None, lin=None):
+    """Full-sequence forward (train/prefill). u: (B, S, D).
+
+    Returns (out, (ssm_state, conv_state)) — states returned for cache priming.
+    """
+    if lin is None:
+        lin = default_lin
+    Bsz, S, _ = u.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = lin("in_proj", p["in_proj"], u)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x, B_, C_ = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ssd_chunked(
+        x.reshape(Bsz, S, H, P), dt, A,
+        B_.reshape(Bsz, S, G, N), C_.reshape(Bsz, S, G, N), cfg,
+        h0=ssm_state,
+    )
+    y = y + (p["D"][None, None, :, None] * x.reshape(Bsz, S, H, P)).astype(y.dtype)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = lin("out_proj", p["out_proj"], y)
+    K = cfg.ssm_conv
+    new_conv = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))[:, S : S + K - 1, :] \
+        if S < K - 1 else xBC[:, S - (K - 1):, :]
+    return out, (h_final, new_conv)
+
+
+def mamba_decode_step(p, u, cfg: ModelConfig, ssm_state, conv_state, lin=None):
+    """Single-token recurrence. u: (B, 1, D); states from init_mamba_cache.
+
+    ssm_state: (B, H, P, N) f32; conv_state: (B, K-1, conv_dim).
+    """
+    if lin is None:
+        lin = default_lin
+    Bsz = u.shape[0]
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = lin("in_proj", p["in_proj"], u[:, 0, :])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state, xBC[:, None, :].astype(conv_state.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :]
+    x, B_, C_ = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B, H)
+    xh = x.reshape(Bsz, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(B_.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    new_state = ssm_state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh * dt[..., None], xh
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state) + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = lin("out_proj", p["out_proj"], y)[:, None, :]
+    return out, (new_state, new_conv_state)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return (
+        jnp.zeros((batch, H, P, N), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )

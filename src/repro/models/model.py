@@ -1,0 +1,358 @@
+"""Unified model wrapper: init / forward / loss / decode for every family.
+
+Blocks are *stacked* on a leading layer axis and driven by ``lax.scan`` so the
+HLO (and SPMD partitioning time) is depth-independent — this is what makes the
+126-layer 405B dry-run compile on one CPU core.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import blocks as B
+from repro.models.layers import default_positions, init_rmsnorm, rmsnorm
+
+
+def _dtype(name: str):
+    if not isinstance(name, str):
+        return name
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "int8": jnp.int8}[name]
+
+
+class Model:
+    """Functional model: all methods are pure and jit/pjit friendly."""
+
+    def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32,
+                 kv_dtype=None):
+        self.cfg = cfg
+        self.param_dtype = _dtype(param_dtype)
+        self.kv_dtype = _dtype(kv_dtype) if kv_dtype is not None else None
+        self.block_init = B.INIT[cfg.family]
+        self.block_apply = B.APPLY.get(cfg.family)  # None for hybrid
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.param_dtype
+        k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        if cfg.family != "audio":
+            params["embed"] = (
+                jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                / math.sqrt(cfg.d_model)
+            ).astype(dt)
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        params["blocks"] = jax.vmap(lambda k: self.block_init(k, cfg, dt))(keys)
+        if cfg.family == "hybrid":
+            params["shared_attn"] = B.init_shared_attn_block(k_shared, cfg, dt)
+        params["final_norm"] = init_rmsnorm(cfg.d_model, dt)
+        if cfg.family == "audio" or not cfg.tie_embeddings:
+            params["head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / math.sqrt(cfg.d_model)
+            ).astype(dt)
+        return params
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def embed(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def unembed(self, params, x):
+        if "head" in params:
+            return x @ params["head"]
+        return x @ params["embed"].T
+
+    # ------------------------------------------------------------------
+    # input assembly per family
+    # ------------------------------------------------------------------
+    def _assemble(self, params, inputs):
+        """Returns (x, positions) for a full-sequence pass."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = inputs["frames"].astype(self.param_dtype)
+            Bsz, S = x.shape[0], x.shape[1]
+            return x, default_positions(Bsz, S)
+        if cfg.family == "vlm":
+            vis = inputs["vision_embeds"].astype(self.param_dtype)
+            txt = self.embed(params, inputs["tokens"])
+            x = jnp.concatenate([vis, txt], axis=1)
+            positions = mrope_positions(cfg, x.shape[0], vis.shape[1],
+                                        inputs["tokens"].shape[1])
+            return x, positions
+        tokens = inputs["tokens"]
+        x = self.embed(params, tokens)
+        Bsz, S = tokens.shape
+        return x, inputs.get("positions", default_positions(Bsz, S))
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (train / prefill)
+    # ------------------------------------------------------------------
+    def forward(self, params, inputs, *, remat=False, remat_groups=0,
+                lin=None, elin=None, return_cache=False, last_only=False,
+                act_pspec=None):
+        """act_pspec: optional PartitionSpec pinned on the residual stream at
+        every block boundary (sequence parallelism: the saved remat carries
+        shard over `model`, cutting activation HBM by the TP degree)."""
+        cfg = self.cfg
+        x, positions = self._assemble(params, inputs)
+        if act_pspec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_pspec)
+
+        if cfg.family == "hybrid":
+            x, aux, cache = self._hybrid_forward(params, x, positions, remat,
+                                                 lin, elin)
+        else:
+            apply = self.block_apply
+
+            def body(carry, bp):
+                h, aux = carry
+                h, new_cache, a = apply(bp, h, cfg, positions, lin=lin, elin=elin)
+                if act_pspec is not None:
+                    h = jax.lax.with_sharding_constraint(h, act_pspec)
+                return (h, aux + a), (new_cache if return_cache else 0)
+
+            if remat:
+                body = jax.checkpoint(body)
+            carry0 = (x, jnp.zeros((), jnp.float32))
+            if remat_groups and not return_cache \
+                    and cfg.num_layers % remat_groups == 0 and remat_groups > 1:
+                # two-level scan remat: only G group-boundary activations are
+                # saved; each group recomputes its layers on the backward pass
+                # (sqrt-style activation memory; ~+25% executed fwd FLOPs)
+                G = remat_groups
+                per = cfg.num_layers // G
+                grouped = jax.tree_util.tree_map(
+                    lambda a: a.reshape(G, per, *a.shape[1:]), params["blocks"])
+
+                def group_body(carry, bg):
+                    c, _ = jax.lax.scan(body, carry, bg)
+                    return c, 0
+
+                (x, aux), cache = jax.lax.scan(jax.checkpoint(group_body),
+                                               carry0, grouped)
+            else:
+                (x, aux), cache = jax.lax.scan(body, carry0, params["blocks"])
+
+        if last_only:
+            x = x[:, -1:, :]  # unembed only the final position (prefill)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self.unembed(params, x)
+        if return_cache:
+            return logits, aux, cache
+        return logits, aux
+
+    def _hybrid_forward(self, params, x, positions, remat, lin, elin):
+        cfg = self.cfg
+
+        def body(carry, bp):
+            h, aux, idx = carry
+            h, _, kv, a = B.hybrid_layer(
+                bp, params["shared_attn"], h, cfg, positions, idx,
+                lin=lin, elin=elin)
+            return (h, aux + a, idx + 1), 0
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux, _), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), jnp.int32(0)), params["blocks"])
+        return x, aux, None
+
+    # ------------------------------------------------------------------
+    # losses
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, *, remat=False, remat_groups=0,
+             aux_coef=0.01, lin=None, elin=None, act_pspec=None):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat,
+                                   remat_groups=remat_groups, lin=lin,
+                                   elin=elin, act_pspec=act_pspec)
+        if cfg.family == "audio":
+            lm = _masked_ce(logits, batch["labels"], batch["mask"])
+        elif cfg.family == "vlm":
+            P = batch["vision_embeds"].shape[1]
+            T = batch["tokens"].shape[1]
+            lm = _ce(logits[:, P - 1 : P + T - 1], batch["labels"])
+        else:
+            lm = _ce(logits, batch["labels"])
+        total = lm + (aux_coef * aux if cfg.family == "moe" else 0.0)
+        return total, {"lm_loss": lm, "aux_loss": aux}
+
+    # ------------------------------------------------------------------
+    # KV / state caches
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg, dt = self.cfg, self.param_dtype
+        kv_dt = self.kv_dtype or dt
+        L = cfg.num_layers
+        hd = cfg.resolved_head_dim
+        if cfg.family in ("dense", "vlm", "moe"):
+            kv = lambda: jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), kv_dt)
+            return (kv(), kv())
+        if cfg.family == "ssm":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            return (
+                jnp.zeros((L, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+                jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
+            )
+        if cfg.family == "hybrid":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            n_apps = _n_apps(cfg)
+            return {
+                "ssm": jnp.zeros((L, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
+                "attn_k": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dt),
+                "attn_v": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dt),
+            }
+        raise ValueError(f"no cache for family {cfg.family}")
+
+    # ------------------------------------------------------------------
+    # single-token decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params, inputs, cache, *, lin=None, elin=None):
+        """inputs: {"token": (B,) int32, "pos": () int32}. Returns (logits, cache)."""
+        cfg = self.cfg
+        token, pos = inputs["token"], inputs["pos"]
+        Bsz = token.shape[0]
+        x = self.embed(params, token)[:, None, :]
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (3, Bsz, 1))
+        else:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (Bsz, 1))
+
+        if cfg.family == "hybrid":
+            x, new_cache = self._hybrid_decode(params, x, positions, pos, cache,
+                                               lin, elin)
+        else:
+            apply = self.block_apply
+
+            def body(h, xs):
+                bp, cache_l = xs
+                h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
+                                    cache_index=pos, lin=lin, elin=elin)
+                return h, new_c
+
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self.unembed(params, x)[:, 0, :]
+        return logits, new_cache
+
+    def _hybrid_decode(self, params, x, positions, pos, cache, lin, elin):
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+
+        def body(carry, xs):
+            h, ak, av, idx = carry
+            bp, ssm_l, conv_l = xs
+            app = idx // every
+            ak_l = jax.lax.dynamic_index_in_dim(ak, app, 0, keepdims=False)
+            av_l = jax.lax.dynamic_index_in_dim(av, app, 0, keepdims=False)
+            h, new_mamba, (nak, nav), _ = B.hybrid_layer(
+                bp, params["shared_attn"], h, cfg, positions, idx,
+                mamba_cache=(ssm_l, conv_l), attn_cache=(ak_l, av_l),
+                cache_index=pos, lin=lin, elin=elin)
+            ak = jax.lax.dynamic_update_index_in_dim(ak, nak, app, 0)
+            av = jax.lax.dynamic_update_index_in_dim(av, nav, app, 0)
+            return (h, ak, av, idx + 1), new_mamba
+
+        carry0 = (x, cache["attn_k"], cache["attn_v"], jnp.int32(0))
+        (x, ak, av, _), new_mamba = jax.lax.scan(
+            body, carry0, (params["blocks"], cache["ssm"], cache["conv"]))
+        new_cache = {"ssm": new_mamba[0], "conv": new_mamba[1],
+                     "attn_k": ak, "attn_v": av}
+        return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _n_apps(cfg: ModelConfig) -> int:
+    return (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+
+
+def _ce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _masked_ce(logits, labels, mask):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_tok = (logz - gold) * mask.astype(jnp.float32)
+    return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, n_patches: int, n_text: int):
+    """Qwen2-VL M-RoPE: vision prefix gets (t=0, h, w) grid positions; text
+    tokens get equal (t, h, w) sequential positions continuing after the grid."""
+    grid = int(math.ceil(math.sqrt(n_patches)))
+    ph = jnp.repeat(jnp.arange(grid, dtype=jnp.int32), grid)[:n_patches]
+    pw = jnp.tile(jnp.arange(grid, dtype=jnp.int32), grid)[:n_patches]
+    pt = jnp.zeros((n_patches,), jnp.int32)
+    start = grid  # text starts after max(grid) per Qwen2-VL convention
+    tx = start + jnp.arange(n_text, dtype=jnp.int32)
+    p3 = jnp.stack([
+        jnp.concatenate([pt, tx]),
+        jnp.concatenate([ph, tx]),
+        jnp.concatenate([pw, tx]),
+    ])  # (3, S)
+    return jnp.broadcast_to(p3[:, None, :], (3, batch, n_patches + n_text))
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, param_dtype=jnp.bfloat16,
+                kv_dtype=None):
+    """Stand-in inputs for (arch x shape). For decode shapes, also returns the
+    cache spec via eval_shape (never allocated)."""
+    Bsz, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            specs = {"frames": jax.ShapeDtypeStruct((Bsz, S, cfg.d_model), param_dtype)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((Bsz, S), i32)
+                specs["mask"] = jax.ShapeDtypeStruct((Bsz, S), jnp.bool_)
+            return specs, None
+        if cfg.family == "vlm":
+            P = cfg.vision_patches
+            specs = {
+                "vision_embeds": jax.ShapeDtypeStruct((Bsz, P, cfg.d_model), param_dtype),
+                "tokens": jax.ShapeDtypeStruct((Bsz, S - P), i32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((Bsz, S - P), i32)
+            return specs, None
+        specs = {"tokens": jax.ShapeDtypeStruct((Bsz, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((Bsz, S), i32)
+        return specs, None
+
+    # decode: one new token against a cache of length seq_len
+    model = Model(cfg, param_dtype, kv_dtype=kv_dtype)
+    cache = jax.eval_shape(lambda: model.init_cache(Bsz, S))
+    specs = {"token": jax.ShapeDtypeStruct((Bsz,), i32),
+             "pos": jax.ShapeDtypeStruct((), i32)}
+    return specs, cache
+
+
+def build_model(name_or_cfg, param_dtype=jnp.float32) -> Model:
+    if isinstance(name_or_cfg, str):
+        from repro.configs import get_config
+        name_or_cfg = get_config(name_or_cfg)
+    return Model(name_or_cfg, param_dtype)

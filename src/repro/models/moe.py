@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based ragged dispatch with
+per-group capacity (GShard-style drops), optional shared experts.
+
+FLOP-honest: only routed tokens hit expert matmuls (no dense E× dispatch
+einsum), so the roofline compute term reflects active params. Expert weights
+carry the "experts" logical axis → EP-sharded over the ``model`` mesh axis.
+
+Grouping: the batch dim is the dispatch group (capacity is per sequence), so
+the sort/scatter stays local to the data shard under pjit.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import default_lin, init_linear, linear, scoped
+
+
+def default_elin(name, w, xin, eq):
+    """Pluggable expert-einsum backend (tap point for expert-conditional
+    Wanda statistics and masked expert weights)."""
+    return jnp.einsum(eq, xin, w)
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "router": init_linear(ks[0], D, E, dtype),
+        "wg": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F)).astype(dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        sf = cfg.num_shared_experts * F
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": init_linear(sks[0], D, sf, dtype),
+            "wu": init_linear(sks[1], D, sf, dtype),
+            "wd": init_linear(sks[2], sf, D, dtype),
+        }
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = math.ceil(cfg.top_k * tokens_per_group * cfg.moe_capacity_factor / cfg.num_experts)
+    return max(int(c), 1)
+
+
+def _dispatch_group(xg, expert_ids, gate_vals, E: int, C: int):
+    """Per-group ragged dispatch. xg: (S, D); expert_ids/gate_vals: (S, k).
+
+    Returns (expert_in (E, C, D), slot (S*k,), kept (S*k,), order (S*k,)).
+    ``slot``/``kept``/``order`` let the combine step scatter outputs back.
+    """
+    S, D = xg.shape
+    k = expert_ids.shape[-1]
+    flat_e = expert_ids.reshape(-1)  # (S*k,) copy i = token i//k, choice i%k
+    order = jnp.argsort(flat_e)  # stable → FIFO within expert (GShard drop rule)
+    se = flat_e[order]
+    # position within the expert's segment of the sorted array
+    seg_start = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(S * k, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    kept = pos < C
+    slot = jnp.where(kept, se * C + pos, E * C)  # dropped copies → trash row
+    token_of = (order // k).astype(jnp.int32)
+    buf = jnp.zeros((E * C + 1, D), xg.dtype)
+    buf = buf.at[slot].set(xg[token_of], mode="drop")
+    return buf[: E * C].reshape(E, C, D), slot, kept, order
+
+
+def _combine_group(out_ec, slot, kept, order, gate_vals, S: int):
+    """out_ec: (E, C, D) expert outputs → (S, D) weighted combine."""
+    k = gate_vals.shape[-1]
+    D = out_ec.shape[-1]
+    flat_gate = gate_vals.reshape(-1)[order]  # sorted copy order
+    token_of = (order // k).astype(jnp.int32)
+    out_flat = out_ec.reshape(-1, D)
+    contrib = jnp.where(
+        kept[:, None],
+        jnp.take(out_flat, jnp.minimum(slot, out_flat.shape[0] - 1), axis=0),
+        0.0,
+    )
+    contrib = contrib * flat_gate[:, None].astype(contrib.dtype)
+    y = jnp.zeros((S, D), out_ec.dtype)
+    return y.at[token_of].add(contrib)
+
+
+def moe_mlp(p, x, cfg: ModelConfig, lin=None, elin=None):
+    """x: (B, S, D) → (B, S, D), plus aux load-balance loss (scalar, f32)."""
+    if lin is None:
+        lin = default_lin
+    if elin is None:
+        elin = default_elin
+    B0, S0, D = x.shape
+    g = cfg.moe_group_tokens
+    if g and S0 % g == 0 and S0 != g:
+        # sub-row dispatch groups (see ModelConfig.moe_group_tokens)
+        x = x.reshape(B0 * (S0 // g), g, D)
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = _capacity(cfg, S)
+
+    logits = lin("router", p["router"], x).astype(jnp.float32)  # (B, S, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(gates, k)  # (B, S, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=(0, 1))  # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32)
+    fe = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+
+    dispatch = jax.vmap(lambda xg, ei, gv: _dispatch_group(xg, ei, gv, E, C))
+    expert_in, slot, kept, order = dispatch(x, expert_ids, gate_vals)
+    # (B, E, C, D): batch groups sharded over data, experts over model
+    h_g = elin("wg", p["wg"], expert_in, "becd,edf->becf")
+    h_u = elin("wu", p["wu"], expert_in, "becd,edf->becf")
+    out_ec = elin("wd", p["wd"], jax.nn.silu(h_g) * h_u, "becf,efd->becd")
+
+    combine = jax.vmap(lambda oe, sl, kp, od, gv: _combine_group(oe, sl, kp, od, gv, S))
+    y = combine(out_ec, slot, kept, order, gate_vals)
+
+    if "shared" in p:
+        sp = p["shared"]
+        sl = scoped(lin, "shared")
+        y = y + sl("wd", sp["wd"], jax.nn.silu(sl("wg", sp["wg"], x)) * sl("wu", sp["wu"], x))
+    if (B, S) != (B0, S0):
+        y = y.reshape(B0, S0, D)
+    return y, aux

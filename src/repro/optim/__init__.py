@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw_init, adamw_update, rmsprop_init, rmsprop_update,
+    clip_by_global_norm, Optimizer, make_optimizer,
+)
+from repro.optim.schedule import cosine_warmup  # noqa: F401
+from repro.optim.grad_compress import topk_compress_update  # noqa: F401

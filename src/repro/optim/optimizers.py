@@ -1,0 +1,175 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW with configurable state dtype — bf16 states halve optimizer HBM, which
+is what lets the 405B config fit v5e chips under full (FSDP x TP) sharding.
+Supports a `trainable` boolean pytree (LoRA fine-tuning freezes base weights)
+and a `grad_mask` pytree (sparsity-preserving fine-tuning: masked weights
+receive zero update, keeping N:M patterns exact).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def _tmap(f, *ts):
+    return jax.tree_util.tree_map(f, *ts)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {"mu": _tmap(zeros, params), "nu": _tmap(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, tc: TrainConfig, lr,
+                 trainable=None, grad_mask=None):
+    step = state["step"] + 1
+    b1, b2 = tc.beta1, tc.beta2
+
+    if grad_mask is not None:
+        grads = _tmap(lambda g, m: g * m.astype(g.dtype) if m is not None else g,
+                      grads, grad_mask)
+
+    mu = _tmap(lambda m, g: (b1 * m.astype(jnp.float32)
+                             + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+               state["mu"], grads)
+    nu = _tmap(lambda v, g: (b2 * v.astype(jnp.float32)
+                             + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+               state["nu"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / c1
+        vhat = v.astype(jnp.float32) / c2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = _tmap(upd, params, mu, nu)
+    if trainable is not None:
+        new_params = _tmap(lambda n, o, t: n if t else o,
+                           new_params, params, trainable)
+    return new_params, {"mu": mu, "nu": nu, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — near-zero optimizer HBM; what lets the
+# 405B config fit v5e chips together with bf16 grad accumulation)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    def st(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": _tmap(st, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _adafactor_leaf(p, g, s, lr, tc, beta2):
+    g32 = g.astype(jnp.float32)
+    if p.ndim >= 2:
+        vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g32 * g32, axis=-1)
+        vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g32 * g32, axis=-2)
+        # rank-1 reconstruction of the second moment
+        denom = (vr[..., None] * vc[..., None, :]
+                 / jnp.maximum(jnp.mean(vr, axis=-1)[..., None, None], 1e-30))
+        upd = g32 / (jnp.sqrt(denom) + tc.eps)
+        new_s = {"vr": vr, "vc": vc}
+    else:
+        v = beta2 * s["v"] + (1 - beta2) * g32 * g32
+        upd = g32 / (jnp.sqrt(v) + tc.eps)
+        new_s = {"v": v}
+    # Adafactor update clipping (d=1.0)
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    new_p = (p.astype(jnp.float32)
+             - lr * (upd + tc.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+    return new_p, new_s
+
+
+def adafactor_update(params, grads, state, tc: TrainConfig, lr,
+                     trainable=None, grad_mask=None):
+    step = state["step"] + 1
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8  # paper schedule
+    if grad_mask is not None:
+        grads = _tmap(lambda g, m: g * m.astype(g.dtype) if m is not None else g,
+                      grads, grad_mask)
+    is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_s = jax.tree_util.tree_flatten(state["v"], is_leaf=is_state)[0]
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = _adafactor_leaf(p, g, s, lr, tc, beta2)
+        new_p.append(np_)
+        new_s.append(ns_)
+    new_params = jax.tree_util.tree_unflatten(tdef, new_p)
+    new_state = {"v": jax.tree_util.tree_unflatten(tdef, new_s), "step": step}
+    if trainable is not None:
+        new_params = _tmap(lambda n, o, t: n if t else o,
+                           new_params, params, trainable)
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# RMSprop (Regional Optimizer uses this per the paper)
+# ---------------------------------------------------------------------------
+
+def rmsprop_init(params, state_dtype=jnp.float32):
+    return _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+
+def rmsprop_update(params, grads, state, lr, decay=0.99, eps=1e-8):
+    new_state = _tmap(
+        lambda v, g: (decay * v.astype(jnp.float32)
+                      + (1 - decay) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+        state, grads)
+    new_params = _tmap(
+        lambda p, g, v: (p.astype(jnp.float32)
+                         - lr * g.astype(jnp.float32)
+                         / (jnp.sqrt(v.astype(jnp.float32)) + eps)).astype(p.dtype),
+        params, grads, new_state)
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Optimizer:
+    init: Callable
+    update: Callable  # (params, grads, state, lr) -> (params, state)
+
+
+def make_optimizer(tc: TrainConfig, trainable=None, grad_mask=None) -> Optimizer:
+    sd = jnp.bfloat16 if tc.optimizer_state_dtype == "bfloat16" else jnp.float32
+
+    def init(params):
+        return adamw_init(params, sd)
+
+    def update(params, grads, state, lr):
+        grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+        p, s = adamw_update(params, grads, state, tc, lr,
+                            trainable=trainable, grad_mask=grad_mask)
+        return p, s, gn
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see exactly 1 CPU device.
+# Multi-device SPMD tests spawn subprocesses (test_distributed.py).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

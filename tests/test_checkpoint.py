@@ -1,0 +1,90 @@
+"""Checkpoint store/manager: atomicity, auto-resume, failure recovery,
+bitwise-reproducible restart of training."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.store import load_pytree, save_pytree
+
+
+def _state(x=1.0):
+    return {"params": {"w": jnp.full((4, 4), x), "b": jnp.zeros(3, jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+class TestStore:
+    def test_roundtrip(self, tmp_path):
+        s = _state(3.0)
+        save_pytree(str(tmp_path / "ck"), s, extra={"step": 7})
+        out = load_pytree(str(tmp_path / "ck"), s)
+        np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                      np.asarray(s["params"]["w"]))
+        assert out["params"]["b"].dtype == jnp.bfloat16
+
+    def test_atomic_overwrite(self, tmp_path):
+        p = str(tmp_path / "ck")
+        save_pytree(p, _state(1.0))
+        save_pytree(p, _state(2.0))
+        out = load_pytree(p, _state())
+        assert float(out["params"]["w"][0, 0]) == 2.0
+
+
+class TestManager:
+    def test_resume_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(10, _state(1.0))
+        mgr.save(20, _state(2.0))
+        state, extra = mgr.restore(_state())
+        assert extra["step"] == 20
+        assert float(state["params"]["w"][0, 0]) == 2.0
+
+    def test_corrupt_checkpoint_skipped(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(10, _state(1.0))
+        mgr.save(20, _state(2.0))
+        # corrupt the newest (simulates crash mid-publish on shared fs)
+        os.remove(os.path.join(str(tmp_path), "step_20", "leaf_0.npy"))
+        state, extra = mgr.restore(_state())
+        assert extra["step"] == 10
+
+    def test_retention_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _state(float(s)))
+        assert mgr.steps() == [3, 4]
+
+
+class TestTrainRestart:
+    def test_restart_is_bitwise_identical(self, tmp_path):
+        """Train 8 steps straight vs 4 + crash + resume 4: same final loss."""
+        from repro.launch.train import train_loop
+        d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+        _, losses_straight = train_loop("llama1-7b", 8, ckpt_dir=d1,
+                                        smoke=True, ckpt_every=100,
+                                        batch=2, seq_len=16, log_every=100)
+        try:
+            train_loop("llama1-7b", 8, ckpt_dir=d2, smoke=True, ckpt_every=4,
+                       batch=2, seq_len=16, log_every=100, die_at_step=4)
+        except SystemExit as e:
+            assert e.code == 42
+        _, losses_resumed = train_loop("llama1-7b", 8, ckpt_dir=d2,
+                                       smoke=True, ckpt_every=4,
+                                       batch=2, seq_len=16, log_every=100)
+        np.testing.assert_allclose(losses_straight[-1], losses_resumed[-1],
+                                   rtol=1e-5)
+
+    def test_elastic_restore_reshards(self, tmp_path):
+        """Save params, then restore with explicit (trivial) shardings —
+        the elastic path: device_put with regenerated shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("data",))
+        s = _state(5.0)
+        save_pytree(str(tmp_path / "ck"), s)
+        sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), s)
+        out = load_pytree(str(tmp_path / "ck"), s, shardings=sh)
+        assert out["params"]["w"].sharding == NamedSharding(mesh, P())

@@ -1,0 +1,103 @@
+"""Flash attention vs dense oracle (shapes/dtypes sweep) + LoRA adapters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import flash_attention
+from repro.models.layers import _sdpa, default_positions
+
+
+def _qkv(B, Sq, Skv, KV, G, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, KV, G, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+class TestFlash:
+    @pytest.mark.parametrize("dims", [(1, 32, 1, 1, 8), (2, 64, 2, 4, 16),
+                                      (2, 128, 4, 1, 32)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("chunk", [8, 32])
+    def test_causal_vs_dense(self, dims, dtype, chunk):
+        B, S, KV, G, hd = dims
+        q, k, v = _qkv(B, S, S, KV, G, hd, dtype)
+        pos = default_positions(B, S)
+        mask = pos[:, None, :] <= pos[:, :, None]
+        scale = 1.0 / np.sqrt(hd)
+        want = _sdpa(q, k, v, mask, scale)
+        got = flash_attention(q, k, v, pos, pos, scale, chunk)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_bidirectional(self):
+        B, S, KV, G, hd = 2, 64, 2, 2, 16
+        q, k, v = _qkv(B, S, S, KV, G, hd, jnp.float32)
+        scale = 1.0 / np.sqrt(hd)
+        want = _sdpa(q, k, v, None, scale)
+        got = flash_attention(q, k, v, None, None, scale, 16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_gradients_match(self):
+        B, S, KV, G, hd = 2, 32, 2, 2, 8
+        q, k, v = _qkv(B, S, S, KV, G, hd, jnp.float32)
+        pos = default_positions(B, S)
+        mask = pos[:, None, :] <= pos[:, :, None]
+        scale = 1.0 / np.sqrt(hd)
+        gf = jax.grad(lambda *a: jnp.sum(flash_attention(*a, pos, pos, scale, 8) ** 2),
+                      argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: jnp.sum(_sdpa(*a, mask, scale) ** 2),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gf, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+
+
+class TestLoRA:
+    def _model(self):
+        from repro.configs import get_config
+        from repro.models.model import Model
+        cfg = get_config("llama1-7b").reduced(num_layers=2, d_model=64, d_ff=128)
+        model = Model(cfg)
+        return model, model.init(jax.random.PRNGKey(0))
+
+    def test_zero_init_is_identity(self):
+        from repro.core.lora import add_lora
+        model, params = self._model()
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  model.cfg.vocab_size)
+        l0, _ = model.forward(params, {"tokens": toks})
+        lp = add_lora(params, jax.random.PRNGKey(2), rank=4)
+        l1, _ = model.forward(lp, {"tokens": toks})
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
+
+    def test_merge_matches_adapter_forward(self):
+        from repro.core.lora import add_lora, merge_lora
+        model, params = self._model()
+        lp = add_lora(params, jax.random.PRNGKey(2), rank=4)
+        # make B nonzero so the adapters actually do something
+        lp["blocks"]["attn"]["wq"]["lora_b"] = 0.01 * jax.random.normal(
+            jax.random.PRNGKey(3), lp["blocks"]["attn"]["wq"]["lora_b"].shape)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  model.cfg.vocab_size)
+        l_adapter, _ = model.forward(lp, {"tokens": toks})
+        merged = merge_lora(lp)
+        assert "lora_a" not in merged["blocks"]["attn"]["wq"]
+        l_merged, _ = model.forward(merged, {"tokens": toks})
+        np.testing.assert_allclose(np.asarray(l_adapter), np.asarray(l_merged),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_trainable_mask_only_lora(self):
+        from repro.core.lora import add_lora, lora_trainable
+        model, params = self._model()
+        lp = add_lora(params, jax.random.PRNGKey(2), rank=4)
+        tr = lora_trainable(lp)
+        flags = [(any("lora" in str(k) for k in path), v) for path, v in
+                 jax.tree_util.tree_flatten_with_path(tr)[0]]
+        for is_lora, v in flags:
+            assert v == is_lora

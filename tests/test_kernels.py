@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.masks import nm_mask as core_nm
+from repro.kernels import ops, ref
+
+
+def _rand(shape, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestNMMaskKernel:
+    @pytest.mark.parametrize("shape", [(8, 16), (64, 128), (256, 512), (128, 1024)])
+    @pytest.mark.parametrize("nm", [(2, 4), (4, 8)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, shape, nm, dtype):
+        n, m = nm
+        w = _rand(shape, dtype, 1)
+        xn = jnp.abs(_rand((shape[1],), jnp.float32, 2))
+        g = jnp.abs(_rand(shape, jnp.float32, 3))
+        got = ops.nm_mask(w, xn, g, alpha=100.0, n=n, m=m)
+        want = ref.nm_mask_ref(w, xn, g, alpha=100.0, n=n, m=m)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_no_grad_variant(self):
+        w = _rand((64, 64), jnp.float32, 1)
+        xn = jnp.abs(_rand((64,), jnp.float32, 2))
+        got = ops.nm_mask(w, xn, None)
+        want = ref.nm_mask_ref(w, xn, None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_core_mask(self):
+        """Kernel == core/masks.py == what the pruner applies."""
+        w = _rand((32, 64), jnp.float32, 5)
+        xn = jnp.abs(_rand((64,), jnp.float32, 6))
+        from repro.core.scores import wanda_score
+        s = wanda_score(w, xn)
+        np.testing.assert_array_equal(
+            np.asarray(core_nm(s, 2, 4)).astype(np.int8),
+            np.asarray(ops.nm_mask(w, xn, None)))
+
+
+class TestSparseMatmul24:
+    @pytest.mark.parametrize("mkn", [(4, 128, 128), (128, 256, 128),
+                                     (256, 512, 256), (64, 1024, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, mkn, dtype):
+        M, K, N = mkn
+        w = _rand((K, N), dtype, 1)
+        mask = core_nm(jnp.abs(w.astype(jnp.float32).T), 2, 4).T
+        ws = jnp.where(mask, w, 0)
+        vals, idx = ops.compact24(ws)
+        x = _rand((M, K), dtype, 2)
+        got = ops.sparse_matmul24(x, vals, idx)
+        want = ref.sparse_matmul24_ref(x, vals, idx)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    def test_compact_roundtrip(self):
+        w = _rand((512, 128), jnp.float32, 3)
+        mask = core_nm(jnp.abs(w.T), 2, 4).T
+        ws = jnp.where(mask, w, 0)
+        assert ops.sparsity_check24(ws)
+        vals, idx = ops.compact24(ws)
+        assert vals.shape == (256, 128) and idx.dtype == jnp.int8
+        np.testing.assert_allclose(
+            np.asarray(ref.decompress24_ref(vals, idx, 512)), np.asarray(ws))
+
+    def test_equals_dense_matmul(self):
+        """Compacted path == dense matmul on the sparse weights."""
+        w = _rand((256, 128), jnp.float32, 4)
+        mask = core_nm(jnp.abs(w.T), 2, 4).T
+        ws = jnp.where(mask, w, 0)
+        vals, idx = ops.compact24(ws)
+        x = _rand((32, 256), jnp.float32, 5)
+        np.testing.assert_allclose(np.asarray(ops.sparse_matmul24(x, vals, idx)),
+                                   np.asarray(x @ ws), rtol=1e-4, atol=1e-4)
+
+
+class TestMaskedMatmul:
+    @pytest.mark.parametrize("mkn", [(128, 512, 256), (8, 128, 128)])
+    def test_vs_ref(self, mkn):
+        M, K, N = mkn
+        x = _rand((M, K), jnp.float32, 1)
+        w = _rand((K, N), jnp.float32, 2)
+        mask = core_nm(jnp.abs(w.T), 2, 4).T
+        got = ops.masked_matmul(x, w, mask)
+        want = ref.masked_matmul_ref(x, w, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,90 @@
+"""Mask + score unit and property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+from repro.core import scores as SC
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+class TestNM:
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (1, 4), (3, 8)])
+    def test_exact_n_of_m(self, n, m):
+        s = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32 * m)))
+        mask = M.nm_mask(s, n, m)
+        counts = mask.reshape(64, -1, m).sum(-1)
+        assert (counts == n).all()
+
+    def test_keeps_top_scores(self):
+        s = jnp.asarray([[9.0, 1.0, 8.0, 2.0, 0.1, 0.2, 0.4, 0.3]])
+        mask = M.nm_mask(s, 2, 4)
+        np.testing.assert_array_equal(
+            np.asarray(mask[0]), [1, 0, 1, 0, 0, 0, 1, 1])
+
+    def test_ties_exact_count(self):
+        s = jnp.ones((8, 16))  # all equal: tie-break by index must hold
+        mask = M.nm_mask(s, 2, 4)
+        assert (mask.reshape(8, 4, 4).sum(-1) == 2).all()
+
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([(2, 4), (4, 8)]))
+    def test_property_counts(self, seed, nm):
+        n, m = nm
+        s = jnp.asarray(np.random.default_rng(seed).normal(size=(16, 8 * m)))
+        mask = M.nm_mask(s, n, m)
+        assert (mask.reshape(16, -1, m).sum(-1) == n).all()
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_property_monotone(self, seed):
+        """Raising one kept weight's score never unkeeps it."""
+        rng = np.random.default_rng(seed)
+        s = rng.normal(size=(4, 16)) ** 2
+        mask = np.asarray(M.nm_mask(jnp.asarray(s), 2, 4)).astype(bool)
+        i, j = rng.integers(4), rng.integers(16)
+        if mask[i, j]:
+            s2 = s.copy()
+            s2[i, j] += 10.0
+            mask2 = np.asarray(M.nm_mask(jnp.asarray(s2), 2, 4)).astype(bool)
+            assert mask2[i, j]
+
+
+class TestUnstructured:
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.sampled_from([0.25, 0.5, 0.6, 0.7, 0.8]))
+    def test_row_sparsity(self, seed, sp):
+        s = jnp.asarray(np.random.default_rng(seed).normal(size=(32, 128)))
+        mask = M.unstructured_mask(s, sp)
+        keep = int(round(128 * (1 - sp)))
+        assert (mask.sum(-1) == keep).all()
+
+
+class TestRow:
+    def test_row_structured(self):
+        s = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32)))
+        mask = M.row_mask(s, 0.5)
+        rows = np.asarray(mask).all(axis=1) | (~np.asarray(mask)).all(axis=1)
+        assert rows.all()  # every row fully kept or fully dropped
+        assert np.asarray(mask).all(axis=1).sum() == 32
+
+
+class TestScores:
+    def test_wanda_matches_paper_eq1(self):
+        w = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])  # (out, in)
+        xn = jnp.asarray([2.0, 1.0])
+        s = SC.wanda_score(w, xn)
+        np.testing.assert_allclose(np.asarray(s), [[2.0, 2.0], [6.0, 0.5]])
+
+    def test_rgs_alpha_blend(self):
+        w = jnp.ones((2, 2))
+        xn = jnp.zeros(2)
+        g = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+        s = SC.rgs_score(w, xn, g, alpha=100.0)
+        np.testing.assert_allclose(np.asarray(s), 100.0 * np.asarray(g))
+
+    def test_to_oi_roundtrip(self):
+        w = jnp.arange(24).reshape(2, 3, 4).astype(jnp.float32)
+        assert (SC.from_oi(SC.to_oi(w)) == w).all()

@@ -1,0 +1,170 @@
+"""Wanda++ pruning engine: correctness + the paper's qualitative claims."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PruneConfig, TrainConfig
+from repro.core.pruner import (make_block_fn, model_sparsity_report,
+                               prune_block, prune_model, tree_get)
+from repro.core.regional import block_io_stats, regional_grad_rms
+from repro.data import calibration_batch, eval_batch
+from repro.models import blocks as B
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("llama1-7b").reduced(num_layers=2, d_model=64, d_ff=128)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batch(cfg.vocab_size, 16, 32)
+    return model, params, calib
+
+
+def _prune(model, params, calib, method, pattern="2:4", ro_iters=2, **kw):
+    # ro_lr=1e-3 is the benchmark-scale RO step size (the paper's 3e-7 is a
+    # no-op on a tiny non-converged model; see EXPERIMENTS.md §Repro sweep)
+    kw.setdefault("ro_lr", 1e-3)
+    pcfg = PruneConfig(method=method, pattern=pattern, ro_iters=ro_iters,
+                       ro_samples=4, n_calib=calib.shape[0], **kw)
+    return prune_model(model, params, calib, pcfg)
+
+
+class TestSparsityInvariants:
+    @pytest.mark.parametrize("method", ["magnitude", "wanda", "wanda++rgs",
+                                        "wanda++ro", "wanda++", "sparsegpt"])
+    def test_exact_24(self, tiny_lm, method):
+        model, params, calib = tiny_lm
+        pruned, _ = _prune(model, params, calib, method)
+        rep = model_sparsity_report(model, pruned)
+        for name, sp in rep.items():
+            assert abs(sp - 0.5) < 1e-6, (name, sp)
+        # every 4-group along d_in has exactly 2 zeros
+        w = pruned["blocks"]["mlp"]["wg"]["w"][0]  # (d_in, d_out)
+        z = (np.asarray(w.T).reshape(w.shape[1], -1, 4) == 0).sum(-1)
+        assert (z >= 2).all()
+
+    def test_unstructured_ratio(self, tiny_lm):
+        model, params, calib = tiny_lm
+        pruned, _ = _prune(model, params, calib, "wanda",
+                           pattern="unstructured", sparsity=0.7)
+        rep = model_sparsity_report(model, pruned)
+        for name, sp in rep.items():
+            assert abs(sp - 0.7) < 0.02, (name, sp)
+
+    def test_embeddings_never_pruned(self, tiny_lm):
+        model, params, calib = tiny_lm
+        pruned, _ = _prune(model, params, calib, "wanda++")
+        assert float((pruned["embed"] == 0).mean()) < 0.01
+        assert float((pruned["head"] == 0).mean()) < 0.01
+
+
+class TestRegionalGradients:
+    def test_rgs_grad_matches_manual(self, tiny_lm):
+        """Eq. 3: G = sqrt(mean_n grad_n^2), per-sample grads of ||f(x)||_2."""
+        model, params, calib = tiny_lm
+        cfg = model.cfg
+        block_fn = make_block_fn(cfg)
+        bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        xs = jnp.take(params["embed"], calib[:4], axis=0)
+        G = regional_grad_rms(block_fn, bp, xs, chunk=2)
+
+        def loss_one(bp_, x1):
+            out = block_fn(bp_, x1[None]).astype(jnp.float32)
+            return jnp.sqrt((out ** 2).sum())
+
+        gs = [jax.grad(loss_one)(bp, xs[i]) for i in range(4)]
+        manual = jax.tree_util.tree_map(
+            lambda *g: jnp.sqrt(sum(x.astype(jnp.float32) ** 2 for x in g) / 4), *gs)
+        a = tree_get(G, ("attn", "wq", "w"))
+        b = tree_get(manual, ("attn", "wq", "w"))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4)
+
+    def test_taps_match_manual_norm(self, tiny_lm):
+        """||X_j||_2 tap equals the norm of the actual layer input."""
+        model, params, calib = tiny_lm
+        cfg = model.cfg
+        block_fn = make_block_fn(cfg)
+        bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        xs = jnp.take(params["embed"], calib[:4], axis=0)
+        _, xnorm = block_io_stats(block_fn, bp, xs)
+        # manual: input to attn.wq is rmsnorm(ln1, x)
+        from repro.models.layers import rmsnorm
+        xin = rmsnorm(bp["ln1"], xs, cfg.norm_eps).reshape(-1, cfg.d_model)
+        manual = jnp.linalg.norm(xin.astype(jnp.float32), axis=0)
+        np.testing.assert_allclose(np.asarray(xnorm["attn.wq"]),
+                                   np.asarray(manual), rtol=1e-4)
+
+
+class TestRO:
+    def test_ro_reduces_block_mse(self, tiny_lm):
+        """RO losses decrease across rounds (the optimizer works)."""
+        model, params, calib = tiny_lm
+        pruned, reports = _prune(model, params, calib, "wanda++")
+        for rep in reports:
+            ro = rep.get("ro_losses")
+            if ro:
+                assert ro[-1] <= ro[0] * 1.05, ro
+
+    def test_ro_improves_over_rgs_only(self, tiny_lm):
+        """Wanda++ (with RO) <= Wanda++RGS on held-out loss (paper Table 1)."""
+        model, params, calib = tiny_lm
+        ev = eval_batch(model.cfg.vocab_size, 8, 32)
+        p_rgs, _ = _prune(model, params, calib, "wanda++rgs")
+        p_full, _ = _prune(model, params, calib, "wanda++", ro_iters=3)
+        l_rgs = float(model.loss(p_rgs, ev)[0])
+        l_full = float(model.loss(p_full, ev)[0])
+        assert l_full <= l_rgs + 0.02, (l_full, l_rgs)
+
+
+class TestMethodOrdering:
+    def test_wanda_beats_magnitude_on_scaled_inputs(self):
+        """Wanda's premise: with wildly-scaled input channels, |W|*||X||
+        beats |W| (single linear layer reconstruction)."""
+        key = jax.random.PRNGKey(0)
+        d_in, d_out, n = 64, 64, 256
+        w = jax.random.normal(key, (d_in, d_out)) / 8.0
+        scales = jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (d_in,)) * 2)
+        x = jax.random.normal(jax.random.PRNGKey(2), (n, d_in)) * scales
+        y = x @ w
+        from repro.core import masks as M
+        from repro.core import scores as SC
+        xn = jnp.linalg.norm(x, axis=0)
+        for pattern in ["2:4"]:
+            m_mag = M.make_mask(SC.magnitude_score(w.T), pattern, 0.5)
+            m_wanda = M.make_mask(SC.wanda_score(w.T, xn), pattern, 0.5)
+            e_mag = float(((x @ jnp.where(m_mag.T, w, 0) - y) ** 2).mean())
+            e_wanda = float(((x @ jnp.where(m_wanda.T, w, 0) - y) ** 2).mean())
+            assert e_wanda < e_mag, (e_wanda, e_mag)
+
+
+class TestHybridShared:
+    def test_shared_block_pruned_once(self):
+        cfg = get_config("zamba2-7b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        calib = calibration_batch(cfg.vocab_size, 8, 16)
+        pruned, reports = _prune(model, params, calib, "wanda++", ro_iters=1)
+        assert reports[0]["layer"] == "shared_attn"
+        w = pruned["shared_attn"]["attn"]["wq"]["w"]
+        assert abs(float((w == 0).mean()) - 0.5) < 1e-6
+
+
+class TestMoEExpertStats:
+    def test_expert_conditional_norms(self):
+        """Expert taps have shape (E, d_in) and are expert-specific."""
+        cfg = get_config("deepseek-moe-16b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        block_fn = make_block_fn(cfg)
+        xs = jnp.take(params["embed"],
+                      calibration_batch(cfg.vocab_size, 8, 16), axis=0)
+        _, xnorm = block_io_stats(block_fn, bp, xs)
+        assert xnorm["moe.wg"].shape == (cfg.num_experts, cfg.d_model)
+        # routed tokens differ per expert => norms differ
+        assert float(jnp.std(xnorm["moe.wg"].sum(-1))) > 0
