@@ -1,0 +1,21 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-serving serve
+
+# tier-1 gate: every test file must collect and pass (includes tests/test_serve.py)
+test:
+	$(PY) -m pytest -x -q
+
+# skip the multi-process SPMD tests (slow marker)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-serving:
+	$(PY) -m benchmarks.run table9
+
+serve:
+	$(PY) -m repro.launch.serve --arch qwen3-8b --smoke --batch 8 \
+	    --prompt-len 32 --gen 32

@@ -1,6 +1,7 @@
 """Render dry-run JSONL records into the EXPERIMENTS.md roofline tables.
 
     PYTHONPATH=src python results/report.py results/dryrun_v2.jsonl [--mesh 16x16]
+    PYTHONPATH=src python results/report.py results/table9_serving.jsonl --serving
 """
 import json
 import sys
@@ -50,6 +51,24 @@ def table(recs, mesh="16x16"):
     return "\n".join(rows)
 
 
+def serving_table(path):
+    """Markdown table for benchmarks/table9_serving.py JSONL records."""
+    rows = ["| arch | batch | loop tok/s | engine tok/s | speedup | "
+            "pruned tok/s | 2:4 weight ratio | req/s | TTFT p50/p95 | "
+            "TPOT p50/p95 |",
+            "|" + "---|" * 10]
+    for line in open(path):
+        r = json.loads(line)
+        rows.append(
+            f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
+            f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
+            f"{r['pruned_tok_per_s']:.0f} | {r['tpu_weight_ratio']:.3f} | "
+            f"{r['req_per_s']:.1f} | "
+            f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
+            f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} |")
+    return "\n".join(rows)
+
+
 def summary(recs):
     n_ok = sum(1 for r in recs.values() if r["status"] == "OK")
     n_skip = sum(1 for r in recs.values() if r["status"].startswith("SKIP"))
@@ -62,6 +81,9 @@ def summary(recs):
 
 
 if __name__ == "__main__":
+    if "--serving" in sys.argv:
+        print(serving_table(sys.argv[1]))
+        sys.exit(0)
     recs = load(sys.argv[1])
     mesh = sys.argv[3] if len(sys.argv) > 3 else "16x16"
     if "--mesh" in sys.argv:

@@ -54,6 +54,19 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Newer jaxlibs return a per-program *list* of dicts (one entry per
+    executable); older ones return the dict directly. Either way this
+    returns a plain dict (empty if the backend reports nothing).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum result-shape bytes of every collective op in the HLO, by op kind.
 

@@ -26,7 +26,7 @@ from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.distributed.roofline import (HW, analytic_bytes,
                                         analytic_collectives, analytic_flops,
                                         collective_bytes, model_flops_for,
-                                        roofline_report)
+                                        roofline_report, xla_cost)
 from repro.distributed.sharding import (cache_shardings, input_shardings,
                                         param_shardings)
 from repro.launch.mesh import make_production_mesh
@@ -233,7 +233,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["memory"] = {"error": str(e)}
 
     # ---- cost + collectives + roofline ------------------------------------
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     rec["cost"] = {k: float(v) for k, v in cost.items()

@@ -1,11 +1,19 @@
-"""Batched serving driver: prefill once, then greedy decode with a KV cache.
+"""Serving CLI — a thin shell over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        --batch 4 --prompt-len 32 --gen 16 [--pruned 2:4]
+        --batch 4 --prompt-len 32 --gen 16 [--pruned 2:4] [--requests 16] \
+        [--temperature 0.8 --top-k 40]
 
-Demonstrates the paper's deployment story: the same model runs dense or
-Wanda++-pruned (2:4 zeros in the weights); benchmarks/table7 quantifies the
-weight-traffic reduction the sparsity buys on the decode path.
+Two modes:
+  * default: one same-shape wave through ``Engine.generate`` — prefill once,
+    then a single jitted scan over the decode steps (two device syncs total).
+  * ``--requests N``: N mixed-length requests through the continuous-batching
+    ``Scheduler`` (admit-on-free, length-bucketed prefill), reporting TTFT /
+    TPOT percentiles.
+
+Demonstrates the paper's deployment story: the same engine serves dense or
+Wanda++-pruned (2:4 zeros) weights; benchmarks/table9_serving.py quantifies
+the throughput + latency effect.
 """
 from __future__ import annotations
 
@@ -13,24 +21,26 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import PruneConfig
 from repro.data import calibration_batch
 from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, Request, SamplingConfig
+from repro.serve.scheduler import Scheduler, percentile
 
 
-def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
-          smoke: bool = True, pruned: str = None, max_len: int = None):
+def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
+                 smoke: bool = True, pruned: str = None, max_len: int = None,
+                 sampling: SamplingConfig = SamplingConfig(),
+                 chunk: int = None, n_slots: int = None):
+    """Returns (engine, cfg). Prunes the weights first when requested."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
-    if cfg.is_encoder_only:
-        raise SystemExit("encoder-only arch has no decode path")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-
     if pruned:
         from repro.core.pruner import prune_model
         pcfg = PruneConfig(method="wanda++", pattern=pruned, n_calib=8,
@@ -38,55 +48,95 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
         calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
         params, _ = prune_model(model, params, calib, pcfg)
         print(f"[serve] pruned with wanda++ {pruned}")
+    ecfg = EngineConfig(
+        n_slots=n_slots or batch,
+        max_len=max_len or (prompt_len + gen),
+        chunk=chunk or max(gen - 1, 1),
+        prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
+    )
+    return Engine(model, params, ecfg, sampling), cfg
 
-    max_len = max_len or (prompt_len + gen)
-    prompts = calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7)
 
-    # prefill: full forward, prime the cache, grab the first token
+def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
+          smoke: bool = True, pruned: str = None, max_len: int = None,
+          sampling: SamplingConfig = SamplingConfig()):
+    """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
+    engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
+                               pruned=pruned, max_len=max_len,
+                               sampling=sampling)
+    prompts = np.asarray(
+        calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
     t0 = time.perf_counter()
-    logits, _, cache_s = jax.jit(
-        lambda p, b: model.forward(p, b, return_cache=True))(
-            params, {"tokens": prompts})
-    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-    # pad the prefill cache out to max_len slots
-    cache = model.init_cache(batch, max_len)
-    if cfg.family in ("dense", "vlm", "moe"):
-        k_s, v_s = cache_s
-        ck = jax.lax.dynamic_update_slice(cache[0], k_s, (0, 0, 0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache[1], v_s, (0, 0, 0, 0, 0))
-        cache = (ck, cv)
-    elif cfg.family == "ssm":
-        cache = cache_s  # state caches carry no length dim
+    first = engine.admit_wave(list(prompts), list(range(batch)), [gen] * batch)
     ttft = time.perf_counter() - t0
-
-    step = jax.jit(lambda p, c, i: model.decode_step(p, i, c))
-    toks = [first]
-    tok = first
-    t1 = time.perf_counter()
-    for i in range(gen - 1):
-        logits, cache = step(params, cache,
-                             {"token": tok, "pos": jnp.int32(prompt_len + i)})
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
-    tpot = (time.perf_counter() - t1) / max(gen - 1, 1)
-    out = jnp.stack(toks, axis=1)
-    print(f"[serve] batch={batch} TTFT={ttft*1e3:.1f}ms TPOT={tpot*1e3:.2f}ms")
+    out = first[:, None]
+    tpot = 0.0
+    if gen > 1:
+        t1 = time.perf_counter()
+        toks, valid = engine.decode_chunk(gen - 1)
+        t, _, _, _ = engine.harvest(toks, valid)
+        tpot = (time.perf_counter() - t1) / (gen - 1)
+        out = np.concatenate([out, t[:, :batch].T], axis=1)
+    rate = f" ({batch / tpot:.0f} tok/s decode)" if tpot > 0 else ""
+    print(f"[serve] batch={batch} TTFT={ttft*1e3:.1f}ms "
+          f"TPOT={tpot*1e3:.2f}ms{rate}")
     print(f"[serve] generated tokens[0]: {out[0].tolist()}")
     return out
+
+
+def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
+                   prompt_len: int = 32, gen: int = 16, smoke: bool = True,
+                   pruned: str = None,
+                   sampling: SamplingConfig = SamplingConfig()):
+    """Mixed-length request stream through the continuous-batching scheduler."""
+    engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
+                               pruned=pruned, max_len=prompt_len + gen,
+                               sampling=sampling, chunk=max(gen // 2, 1))
+    rng = np.random.default_rng(7)
+    reqs = [Request(i,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(prompt_len // 2, prompt_len + 1)),
+                                 ).astype(np.int32),
+                    int(rng.integers(max(gen // 2, 1), gen + 1)))
+            for i in range(n_requests)]
+    t0 = time.perf_counter()
+    comps = Scheduler(engine).run(reqs)
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(c.tokens) for c in comps)
+    ttfts = [c.ttft_s for c in comps]
+    tpots = [t for c in comps for t in c.tpot_s]
+    pct = percentile
+    print(f"[serve] {len(comps)} requests, {n_tok} tokens in {wall:.2f}s "
+          f"({len(comps) / wall:.1f} req/s, {n_tok / wall:.0f} tok/s)")
+    print(f"[serve] TTFT p50={pct(ttfts, .5)*1e3:.0f}ms p95={pct(ttfts, .95)*1e3:.0f}ms  "
+          f"TPOT p50={pct(tpots, .5)*1e3:.1f}ms p95={pct(tpots, .95)*1e3:.1f}ms")
+    return comps
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama1-7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="slots / wave size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--pruned", default=None, help="e.g. 2:4")
+    ap.add_argument("--requests", type=int, default=0,
+                    help=">0: run a mixed-length request stream through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve(args.arch, args.batch, args.prompt_len, args.gen,
-          smoke=args.smoke, pruned=args.pruned)
+    sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
+    if args.requests > 0:
+        serve_requests(args.arch, args.requests, args.batch, args.prompt_len,
+                       args.gen, smoke=args.smoke, pruned=args.pruned,
+                       sampling=sampling)
+    else:
+        serve(args.arch, args.batch, args.prompt_len, args.gen,
+              smoke=args.smoke, pruned=args.pruned, sampling=sampling)
 
 
 if __name__ == "__main__":

@@ -142,6 +142,29 @@ FLASH_CHUNK = 512
 KV_QSCALE = 32.0
 
 
+def _cache_write(c, new, index):
+    """Write ``new`` (B, S, KV, hd) into cache ``c`` (B, S_max, KV, hd) at
+    time offset ``index`` — a scalar (whole-batch decode) or a (B,) vector
+    (slot-batched serving, every sequence at its own length)."""
+    if getattr(index, "ndim", 0) == 1:
+        return jax.vmap(
+            lambda cb, nb, i: jax.lax.dynamic_update_slice(cb, nb, (i, 0, 0))
+        )(c, new, index)
+    return jax.lax.dynamic_update_slice(c, new, (0, index, 0, 0))
+
+
+def _cache_mask(cache_index, B, S, S_kv):
+    """Causal mask (B, S, S_kv) against a cache: position p attends cache
+    slots <= its own write index."""
+    kv_slots = jnp.arange(S_kv, dtype=jnp.int32)
+    off = jnp.arange(S, dtype=jnp.int32)
+    if getattr(cache_index, "ndim", 0) == 1:
+        q_pos = cache_index[:, None] + off[None, :]  # (B, S)
+        return kv_slots[None, None, :] <= q_pos[:, :, None]
+    mask = kv_slots[None, None, :] <= (cache_index + off)[None, :, None]
+    return jnp.broadcast_to(mask, (B, S, S_kv))
+
+
 def _sdpa(q, k, v, mask, scale):
     """q: (B,Sq,KV,G,hd)  k,v: (B,Skv,KV,hd)  mask: (B,Sq,Skv) bool or None."""
     logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
@@ -159,7 +182,9 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
     Training / prefill: ``kv_cache=None`` — causal (or bidirectional) full attn;
     new cache returned as the (k, v) of this call.
     Decode: ``kv_cache=(k,v)`` of shape (B, S_max, KV, hd); x is (B, 1, D) and
-    ``cache_index`` is the write position (scalar int32).
+    ``cache_index`` is the write position — scalar int32 when the whole batch
+    decodes in lockstep, or (B,) int32 for slot-batched serving where every
+    sequence sits at its own length.
     """
     if lin is None:
         lin = default_lin
@@ -192,20 +217,15 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
         if ck.dtype == jnp.int8:
             kq = jnp.clip(jnp.round(k.astype(jnp.float32) * KV_QSCALE), -127, 127)
             vq = jnp.clip(jnp.round(v.astype(jnp.float32) * KV_QSCALE), -127, 127)
-            ck = jax.lax.dynamic_update_slice(ck, kq.astype(jnp.int8),
-                                              (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, vq.astype(jnp.int8),
-                                              (0, cache_index, 0, 0))
+            ck = _cache_write(ck, kq.astype(jnp.int8), cache_index)
+            cv = _cache_write(cv, vq.astype(jnp.int8), cache_index)
             k_full = (ck.astype(jnp.float32) / KV_QSCALE).astype(k.dtype)
             v_full = (cv.astype(jnp.float32) / KV_QSCALE).astype(v.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            ck = _cache_write(ck, k.astype(ck.dtype), cache_index)
+            cv = _cache_write(cv, v.astype(cv.dtype), cache_index)
             k_full, v_full = ck, cv
-        S_kv = ck.shape[1]
-        kv_slots = jnp.arange(S_kv, dtype=jnp.int32)
-        mask = kv_slots[None, None, :] <= (cache_index + jnp.arange(S, dtype=jnp.int32))[None, :, None]
-        mask = jnp.broadcast_to(mask, (B, S, S_kv))
+        mask = _cache_mask(cache_index, B, S, ck.shape[1])
         new_cache = (ck, cv)
     else:
         k_full, v_full = k, v

@@ -218,15 +218,26 @@ class Model:
     # single-token decode
     # ------------------------------------------------------------------
     def decode_step(self, params, inputs, cache, *, lin=None, elin=None):
-        """inputs: {"token": (B,) int32, "pos": () int32}. Returns (logits, cache)."""
+        """inputs: {"token": (B,) int32, "pos": () or (B,) int32}.
+
+        A scalar ``pos`` decodes the whole batch in lockstep (every sequence
+        at the same length); a (B,) vector decodes a *slot batch* where each
+        sequence sits at its own position (continuous-batching serving).
+        Returns (logits, cache).
+        """
         cfg = self.cfg
         token, pos = inputs["token"], inputs["pos"]
         Bsz = token.shape[0]
         x = self.embed(params, token)[:, None, :]
-        if cfg.mrope_sections is not None:
-            positions = jnp.broadcast_to(pos.astype(jnp.int32), (3, Bsz, 1))
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 1:
+            pos2d = pos[:, None]  # (B, 1) per-slot positions
         else:
-            positions = jnp.broadcast_to(pos.astype(jnp.int32), (Bsz, 1))
+            pos2d = jnp.broadcast_to(pos, (Bsz, 1))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos2d[None], (3, Bsz, 1))
+        else:
+            positions = pos2d
 
         if cfg.family == "hybrid":
             x, new_cache = self._hybrid_decode(params, x, positions, pos, cache,

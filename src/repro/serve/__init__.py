@@ -1,0 +1,24 @@
+"""Continuous-batching serving engine.
+
+Layout:
+    sampling.py  — ``SamplingConfig`` + pure on-device token sampling
+    slots.py     — slot-batched request state (the KV-cache pool bookkeeping)
+    engine.py    — jitted prefill / scan-decode programs + the ``Engine``
+    scheduler.py — request queue, length-bucketed admission, timing stats
+"""
+from repro.serve.engine import Engine, EngineConfig, generate
+from repro.serve.sampling import SamplingConfig, sample_tokens
+from repro.serve.scheduler import Completion, Request
+from repro.serve.slots import SlotState, init_slots
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "SamplingConfig",
+    "sample_tokens",
+    "SlotState",
+    "init_slots",
+    "Request",
+    "Completion",
+    "generate",
+]

@@ -1,0 +1,35 @@
+"""On-device token sampling for the serving engine.
+
+``SamplingConfig`` is a frozen (hashable) dataclass so it can close over the
+jitted decode program as a static value — greedy vs temperature vs top-k
+select different traced graphs, never a per-token host branch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0  # 0 => greedy argmax
+    top_k: int = 0  # 0 => sample the full softmax
+    seed: int = 0  # PRNG seed for the engine's sampling stream
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample_tokens(logits, key, sc: SamplingConfig):
+    """logits (B, V) -> sampled token ids (B,) int32. Pure and jit-safe;
+    ``sc`` must be static at trace time."""
+    if sc.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sc.temperature
+    if sc.top_k > 0:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

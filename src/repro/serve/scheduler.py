@@ -1,0 +1,128 @@
+"""Request scheduler: admit-on-free continuous batching over an Engine.
+
+Loop shape (one iteration == one host round-trip):
+
+    1. harvest the last decode chunk -> per-slot tokens + finished flags
+    2. release finished slots, emit Completions
+    3. admit queued requests into free slots, one prefill wave per
+       length bucket (so a long prompt never pads a short one)
+    4. launch the next jitted decode chunk
+
+Prefill interleaves with decode at chunk granularity: while a chunk is a
+single device program, admission happens between chunks, exactly like the
+iteration-level scheduling of Orca/vLLM-style engines.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Engine, _bucket_len
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile (p in [0, 1]); 0.0 on empty input. Shared by
+    the serve CLI and benchmarks so their p50/p95 always agree."""
+    xs = sorted(xs)
+    return xs[min(int(len(xs) * p), len(xs) - 1)] if xs else 0.0
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # (P,) int32 prompt
+    max_new: int = 16
+
+
+@dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray  # (n_generated,) int32, includes the prefill token
+    ttft_s: float  # submit -> first token
+    tpot_s: List[float] = field(default_factory=list)  # per decoded token
+
+
+class Scheduler:
+    """Drives an Engine over an arbitrary request stream."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        n = engine.cfg.n_slots
+        self._slot_rid: List[Optional[int]] = [None] * n
+
+    def run(self, requests: List[Request], progress=None) -> List[Completion]:
+        eng = self.engine
+        eng.reset()
+        queue = deque(requests)
+        t_submit = {r.rid: time.perf_counter() for r in requests}
+        partial: Dict[int, List[int]] = {}
+        ttft: Dict[int, float] = {}
+        tpot: Dict[int, List[float]] = {}
+        req_of = {r.rid: r for r in requests}
+        done: List[Completion] = []
+
+        self._slot_rid = [None] * eng.cfg.n_slots
+        pending_chunk = None
+
+        while queue or any(r is not None for r in self._slot_rid):
+            # -- 1+2: harvest the in-flight chunk, free finished slots ------
+            if pending_chunk is not None:
+                toks, valid, t_launch = pending_chunk
+                t_np, v_np, fin, _pos = eng.harvest(toks, valid)
+                chunk_dt = time.perf_counter() - t_launch  # dispatch+compute
+                T = t_np.shape[0]
+                freed = []
+                for s, rid in enumerate(self._slot_rid):
+                    if rid is None:
+                        continue
+                    new = t_np[v_np[:, s], s]
+                    partial[rid].extend(int(t) for t in new)
+                    tpot[rid].extend([chunk_dt / T] * len(new))
+                    if fin[s]:
+                        done.append(Completion(
+                            rid, len(req_of[rid].tokens),
+                            np.asarray(partial.pop(rid), np.int32),
+                            ttft.pop(rid), tpot.pop(rid)))
+                        self._slot_rid[s] = None
+                        freed.append(s)
+                        if progress:
+                            progress(done[-1])
+                if freed:
+                    eng.release(freed)
+                pending_chunk = None
+
+            # -- 3: admission, one wave per prompt-length bucket ------------
+            free = [s for s, r in enumerate(self._slot_rid) if r is None]
+            if free and queue:
+                take = [queue.popleft() for _ in range(min(len(free), len(queue)))]
+                waves: Dict[int, List[Request]] = {}
+                for r in take:
+                    b = _bucket_len(eng.cfg.prefill_buckets, len(r.tokens),
+                                    eng.cfg.max_len)
+                    waves.setdefault(b, []).append(r)
+                for b, wave in sorted(waves.items()):
+                    slots = [free.pop(0) for _ in wave]
+                    t0 = time.perf_counter()
+                    first = eng.admit_wave([r.tokens for r in wave], slots,
+                                           [r.max_new for r in wave])
+                    t1 = time.perf_counter()
+                    for r, s, f in zip(wave, slots, first):
+                        self._slot_rid[s] = r.rid
+                        partial[r.rid] = [int(f)]
+                        ttft[r.rid] = t1 - t_submit[r.rid]
+                        tpot[r.rid] = []
+                # instantly-finished requests (max_new==1 / prefill EOS) are
+                # swept up by the finished flags of the next harvest
+
+            # -- 4: next decode chunk (single jitted program) ---------------
+            if any(rid is not None for rid in self._slot_rid):
+                t0 = time.perf_counter()
+                toks, valid = eng.decode_chunk()
+                pending_chunk = (toks, valid, t0)
+
+        return done

@@ -1,0 +1,86 @@
+"""Slot-batched request state for continuous batching.
+
+The engine owns a fixed pool of ``n_slots`` request slots backed by one
+KV cache of shape (L, n_slots, max_len, KV, hd) (``model.init_cache``).
+Every per-slot scalar lives in ``SlotState`` — a NamedTuple of device
+arrays, so the whole thing threads through ``lax.scan`` as a pytree and
+admission/release are single scatter ops.
+
+Slot lifecycle:  free --admit--> active --(EOS | length)--> finished
+                 --harvest/release--> free
+A slot is *frozen* (still computed, outputs masked) from the step it
+finishes until the host harvests it at the next chunk boundary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SlotState(NamedTuple):
+    last_token: jnp.ndarray  # (S,) int32 — token fed at the next decode step
+    pos: jnp.ndarray  # (S,) int32 — cache write index == tokens cached so far
+    prompt_len: jnp.ndarray  # (S,) int32
+    max_total: jnp.ndarray  # (S,) int32 — prompt_len + max_new - 1 (cache cap)
+    active: jnp.ndarray  # (S,) bool — slot holds a live request
+    finished: jnp.ndarray  # (S,) bool — done, awaiting host harvest
+
+
+def init_slots(n_slots: int) -> SlotState:
+    # distinct buffers per field: the engine donates the whole state into
+    # its jitted programs, and XLA rejects donating one buffer twice
+    i32 = jnp.int32
+    return SlotState(
+        last_token=jnp.zeros((n_slots,), i32),
+        pos=jnp.zeros((n_slots,), i32),
+        prompt_len=jnp.zeros((n_slots,), i32),
+        max_total=jnp.zeros((n_slots,), i32),
+        active=jnp.zeros((n_slots,), bool),
+        finished=jnp.zeros((n_slots,), bool),
+    )
+
+
+def admit(state: SlotState, slots, first_token, prompt_len,
+          max_total) -> SlotState:
+    """Scatter a wave of freshly-prefilled requests into their slots.
+
+    slots: (K,) int32 slot indices; padding rows use index n_slots which is
+    out of bounds and therefore dropped by the scatter (mode="drop") — this
+    keeps admission shapes bucketable so the program is traced once per
+    bucket, not once per wave.
+    """
+    kw = dict(mode="drop")
+    return SlotState(
+        last_token=state.last_token.at[slots].set(first_token, **kw),
+        pos=state.pos.at[slots].set(prompt_len, **kw),
+        prompt_len=state.prompt_len.at[slots].set(prompt_len, **kw),
+        max_total=state.max_total.at[slots].set(max_total, **kw),
+        active=state.active.at[slots].set(True, **kw),
+        finished=state.finished.at[slots].set(False, **kw),
+    )
+
+
+def release(state: SlotState, slots) -> SlotState:
+    """Free harvested slots (admit-on-free: the scheduler refills them)."""
+    kw = dict(mode="drop")
+    return state._replace(
+        active=state.active.at[slots].set(False, **kw),
+        finished=state.finished.at[slots].set(False, **kw),
+    )
+
+
+def check_invariants(state: SlotState) -> None:
+    """Host-side sanity checks (used by tests; cheap, call sparingly)."""
+    import numpy as np
+
+    active = np.asarray(state.active)
+    finished = np.asarray(state.finished)
+    pos = np.asarray(state.pos)
+    plen = np.asarray(state.prompt_len)
+    mt = np.asarray(state.max_total)
+    assert not (finished & ~active).any(), "finished slot must be active"
+    live = active & ~finished
+    assert (pos[live] >= plen[live]).all(), "live slot behind its prompt"
+    assert (pos[live] <= mt[live]).all(), "live slot past its budget"
+    assert (pos[finished] <= mt[finished]).all()

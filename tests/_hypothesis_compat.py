@@ -1,0 +1,94 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+When ``hypothesis`` is installed the real library is re-exported unchanged.
+When it is missing (the CI container does not ship it), ``@given`` degrades
+to a deterministic ``pytest.mark.parametrize`` over a fixed sample of each
+strategy — the same assertions run on a representative grid of inputs, so
+the file still collects and the properties still get exercised.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    st = strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    import functools
+    import inspect
+    import itertools
+    import random
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _MAX_EXAMPLES = 8  # per @given, after taking the product of strategies
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo=0, hi=1 << 30):
+            rng = random.Random(0xC0FFEE ^ lo ^ hi)
+            span = hi - lo
+            ex = [lo, hi, lo + span // 2]
+            ex += [lo + rng.randrange(span + 1) for _ in range(5)]
+            return _Strategy(dict.fromkeys(ex))  # dedup, keep order
+
+        @staticmethod
+        def floats(lo, hi, **_kw):
+            mid = (lo + hi) / 2.0
+            return _Strategy(dict.fromkeys([lo, hi, mid, lo + (hi - lo) * 0.25]))
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    st = strategies = _Strategies()
+
+    class settings:  # noqa: N801 - mirrors hypothesis API
+        def __init__(self, *a, **kw):
+            pass
+
+        @staticmethod
+        def register_profile(name, **kw):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+    def given(*strats, **kw_strats):
+        """Parametrize over a deterministic subsample of the strategy product."""
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = [p for p in sig.parameters if p != "self"]
+            pos_names = names[: len(strats)]
+            all_names = pos_names + list(kw_strats)
+            pools = [s.examples for s in strats] + \
+                    [s.examples for s in kw_strats.values()]
+            combos = list(itertools.product(*pools))
+            if len(combos) > _MAX_EXAMPLES:
+                rng = random.Random(0)
+                keep = sorted(rng.sample(range(len(combos)), _MAX_EXAMPLES))
+                combos = [combos[i] for i in keep]
+            if len(all_names) == 1:
+                values = [c[0] for c in combos]
+            else:
+                values = combos
+            mark = pytest.mark.parametrize(",".join(all_names), values)
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                return fn(*a, **kw)
+
+            return mark(wrapper)
+        return deco

@@ -1,9 +1,9 @@
-"""Mask + score unit and property tests (hypothesis)."""
+"""Mask + score unit and property tests (hypothesis, optional — see shim)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import masks as M
 from repro.core import scores as SC

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.distributed.roofline import (analytic_flops, collective_bytes,
-                                        roofline_report)
+                                        roofline_report, xla_cost)
 
 
 class TestCollectiveParser:
@@ -64,7 +64,7 @@ class TestAnalyticFlops:
         params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         toks = jax.ShapeDtypeStruct((4, 64), jnp.int32)
         compiled = jax.jit(fwd_unrolled).lower(params, toks).compile()
-        xla_fl = float(compiled.cost_analysis()["flops"])
+        xla_fl = float(xla_cost(compiled)["flops"])
 
         shape = ShapeConfig("t", 64, 4, "prefill")
         ours = analytic_flops(cfg, shape)

@@ -1,0 +1,287 @@
+"""Serving engine: decode parity, slot invariants, sampling, trace counts,
+and 2:4-pruned end-to-end serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve import (Engine, EngineConfig, Request, SamplingConfig,
+                         sample_tokens)
+from repro.serve import slots as SLOT
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = get_config("deepseek-moe-16b").reduced()
+    # dropless routing (cf = E/k): single-token decode cannot reproduce
+    # prefill capacity drops, same caveat as test_decode_matches_forward
+    cfg = dataclasses.replace(cfg,
+                              moe_capacity_factor=cfg.num_experts / cfg.top_k)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+def assert_greedy_continuation(model, params, prompt, gen_toks):
+    """Every generated token must be the argmax continuation of the sequence
+    so far — checked against ONE full forward over [prompt | generated]."""
+    prompt = np.asarray(prompt)
+    gen_toks = np.asarray(gen_toks)
+    seq = np.concatenate([prompt, gen_toks])[None].astype(np.int32)
+    logits, _ = model.forward(params, {"tokens": jnp.asarray(seq)})
+    P = len(prompt)
+    ref = np.asarray(jnp.argmax(logits[0], axis=-1))
+    for i, t in enumerate(gen_toks):
+        assert t == ref[P - 1 + i], (
+            f"token {i}: engine {t} != full-forward argmax {ref[P - 1 + i]}")
+
+
+# ---------------------------------------------------------------------------
+# decode parity: jitted scan decode == full forward, dense + moe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_generate_matches_full_forward(family, dense, moe, request):
+    model, params = dense if family == "dense" else moe
+    cfg = model.cfg
+    B, P, G = 4, 8, 6
+    prompts = _prompts(cfg, B, P)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
+                              prefill_buckets=(P,)))
+    out = eng.generate(prompts, G)
+    assert out.shape == (B, G)
+    assert eng.trace_counts["decode"] == 1
+    for b in range(B):
+        assert_greedy_continuation(model, params, prompts[b], out[b])
+
+
+def test_decode_step_vector_pos_matches_scalar(dense):
+    """Per-slot (B,) cache positions == scalar lockstep at equal values."""
+    model, params = dense
+    cfg = model.cfg
+    B, P = 2, 8
+    toks = jnp.asarray(_prompts(cfg, B, P))
+    _, _, cache_s = model.forward(params, {"tokens": toks}, return_cache=True)
+    cache0 = model.init_cache(B, P + 4)
+    ck = jax.lax.dynamic_update_slice(cache0[0], cache_s[0], (0, 0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache0[1], cache_s[1], (0, 0, 0, 0, 0))
+    tok = jnp.asarray([3, 7], jnp.int32)
+    lg_scalar, _ = model.decode_step(params, {"token": tok,
+                                              "pos": jnp.int32(P)}, (ck, cv))
+    lg_vec, _ = model.decode_step(
+        params, {"token": tok, "pos": jnp.full((B,), P, jnp.int32)}, (ck, cv))
+    np.testing.assert_allclose(np.asarray(lg_scalar), np.asarray(lg_vec),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# slot manager: admit / evict / finish invariants + continuous batching
+# ---------------------------------------------------------------------------
+
+def test_slot_admit_release_unit():
+    st = SLOT.init_slots(4)
+    slots = jnp.asarray([1, 3], jnp.int32)
+    st = SLOT.admit(st, slots, jnp.asarray([10, 11], jnp.int32),
+                    jnp.asarray([5, 7], jnp.int32),
+                    jnp.asarray([9, 12], jnp.int32))
+    assert np.asarray(st.active).tolist() == [False, True, False, True]
+    assert np.asarray(st.pos).tolist() == [0, 5, 0, 7]
+    SLOT.check_invariants(st)
+    # out-of-range padding index is dropped, not clipped onto slot 3
+    st2 = SLOT.admit(st, jnp.asarray([4], jnp.int32),
+                     jnp.asarray([99], jnp.int32), jnp.asarray([1], jnp.int32),
+                     jnp.asarray([2], jnp.int32))
+    assert np.asarray(st2.last_token).tolist() == np.asarray(st.last_token).tolist()
+    st3 = SLOT.release(st, jnp.asarray([1], jnp.int32))
+    assert np.asarray(st3.active).tolist() == [False, False, False, True]
+    SLOT.check_invariants(st3)
+
+
+def test_scheduler_continuous_batching(dense):
+    """More requests than slots, mixed prompt/gen lengths: every completion
+    is the exact greedy continuation, slots are reused, invariants hold."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 14))).astype(np.int32),
+                    int(rng.integers(1, 8)))
+            for rid in range(9)]
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=32, chunk=4,
+                              prefill_buckets=(8, 16)))
+    seen = []
+    comps = Scheduler(eng).run(
+        reqs, progress=lambda c: (seen.append(c.rid),
+                                  SLOT.check_invariants(eng.state)))
+    assert sorted(c.rid for c in comps) == list(range(9))
+    assert seen == [c.rid for c in comps]
+    # 9 requests through 4 slots forces admit-on-free slot reuse
+    assert eng.trace_counts["decode"] == 1, "one decode program, ever"
+    for c in comps:
+        r = reqs[c.rid]
+        assert len(c.tokens) == r.max_new
+        assert c.ttft_s > 0 and len(c.tpot_s) == r.max_new - 1
+        assert_greedy_continuation(model, params, r.tokens, c.tokens)
+    # pool drained back to empty
+    assert not np.asarray(eng.state.active).any()
+
+
+def test_eos_terminates_early(dense):
+    model, params = dense
+    cfg = model.cfg
+    prompt = _prompts(cfg, 1, 8, seed=3)[0]
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=32, chunk=4,
+                              prefill_buckets=(8,)))
+    ref = Scheduler(eng).run([Request(0, prompt, 8)])[0].tokens
+    # pick the first token value whose first occurrence is not at index 0
+    k = next(i for i in range(1, len(ref)) if ref[i] not in ref[:i])
+    eos = int(ref[k])
+    eng2 = Engine(model, params,
+                  EngineConfig(n_slots=2, max_len=32, chunk=4, eos_id=eos,
+                               prefill_buckets=(8,)))
+    out = Scheduler(eng2).run([Request(0, prompt, 8)])[0].tokens
+    assert len(out) == k + 1 and out[-1] == eos
+    np.testing.assert_array_equal(out, ref[: k + 1])
+
+
+def test_oversized_request_rejected(dense):
+    model, params = dense
+    eng = Engine(model, params, EngineConfig(n_slots=2, max_len=16,
+                                             prefill_buckets=(8, 16)))
+    with pytest.raises(ValueError, match="cache slots"):
+        eng.admit_wave([np.zeros(12, np.int32)], [0], [8])
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_tokens_topk_membership():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    sc = SamplingConfig(temperature=1.0, top_k=4)
+    toks = sample_tokens(logits, jax.random.PRNGKey(1), sc)
+    top4 = np.asarray(jax.lax.top_k(logits, 4)[1])
+    for b, t in enumerate(np.asarray(toks)):
+        assert t in top4[b]
+
+
+def test_sampling_deterministic_under_fixed_key(dense):
+    model, params = dense
+    cfg = model.cfg
+    prompts = _prompts(cfg, 4, 8)
+    mk = lambda seed: Engine(
+        model, params,
+        EngineConfig(n_slots=4, max_len=32, chunk=7, prefill_buckets=(8,)),
+        SamplingConfig(temperature=0.8, top_k=20, seed=seed))
+    a = mk(3).generate(prompts, 8)
+    b = mk(3).generate(prompts, 8)
+    np.testing.assert_array_equal(a, b)
+    c = mk(4).generate(prompts, 8)
+    assert not np.array_equal(a, c), "different seed, same stream?"
+
+
+# ---------------------------------------------------------------------------
+# the no-per-token-host-round-trip guarantee
+# ---------------------------------------------------------------------------
+
+def test_single_trace_single_sync_per_generation(dense, monkeypatch):
+    model, params = dense
+    cfg = model.cfg
+    B, P, G = 4, 8, 24
+    prompts = _prompts(cfg, B, P)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
+                              prefill_buckets=(P,)))
+    blocks = {"n": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        blocks["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", counting)
+    out = eng.generate(prompts, G)
+    assert out.shape == (B, G)
+    assert eng.trace_counts["decode"] == 1, \
+        "decode hot loop must be ONE jitted program for the whole generation"
+    assert eng.trace_counts["prefill"] == 1
+    assert blocks["n"] == 1, \
+        f"expected exactly one block_until_ready per generation, saw {blocks['n']}"
+    # second generation: zero retraces
+    eng.generate(prompts, G)
+    assert eng.trace_counts["decode"] == 1
+
+
+# ---------------------------------------------------------------------------
+# pruned serving end-to-end
+# ---------------------------------------------------------------------------
+
+def test_pruned_24_serving_end_to_end(dense):
+    """Wanda++ 2:4-pruned smoke model through the engine: sparsity exact,
+    logits finite, outputs still the pruned model's greedy continuation."""
+    from repro.configs.base import PruneConfig
+    from repro.core.pruner import model_sparsity_report, prune_model
+    from repro.data import calibration_batch
+
+    model, params = dense
+    cfg = model.cfg
+    pcfg = PruneConfig(method="wanda++", pattern="2:4", n_calib=4,
+                       calib_len=16, ro_iters=1, ro_samples=2)
+    calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
+    pruned, _ = prune_model(model, params, calib, pcfg)
+
+    rep = model_sparsity_report(model, pruned)
+    for name, frac in rep.items():
+        assert abs(frac - 0.5) < 1e-6, f"{name}: sparsity {frac} != 0.5"
+
+    B, P, G = 4, 8, 6
+    prompts = _prompts(cfg, B, P)
+    eng = Engine(model, pruned,
+                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
+                              prefill_buckets=(P,)))
+    out = eng.generate(prompts, G)
+    assert out.shape == (B, G)
+    seq = jnp.asarray(np.concatenate([prompts, out], axis=1))
+    logits, _ = model.forward(pruned, {"tokens": seq})
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits from pruned model"
+    for b in range(B):
+        assert_greedy_continuation(model, pruned, prompts[b], out[b])
+    # serving did not densify the weights
+    rep_after = model_sparsity_report(model, pruned)
+    assert rep_after == rep
+
+
+# ---------------------------------------------------------------------------
+# unsupported families fail loudly, not wrongly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,exc", [
+    ("mamba2-1.3b", NotImplementedError),
+    ("zamba2-7b", NotImplementedError),
+    ("hubert-xlarge", ValueError),
+])
+def test_unsupported_families_raise(arch, exc):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    with pytest.raises(exc):
+        Engine(model, None)
