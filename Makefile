@@ -1,14 +1,18 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-serving serve
+.PHONY: test test-fast ci bench bench-serving serve
 
-# tier-1 gate: every test file must collect and pass (includes tests/test_serve.py)
+# tier-1 gate: every test file must collect and pass (includes the
+# serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
 test:
 	$(PY) -m pytest -x -q
 
-# skip the multi-process SPMD tests (slow marker)
+# CI lane: skip the multi-process SPMD tests (slow marker); the paged
+# attention / allocator tests are NOT slow-marked, so they run here too
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+ci: test-fast
 
 bench:
 	$(PY) -m benchmarks.run

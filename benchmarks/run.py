@@ -81,6 +81,11 @@ def main() -> None:
         r = results["table9"]
         print(f"claim,table9_engine_2x_over_token_loop,{r['speedup'] >= 2.0}")
         print(f"claim,table9_engine_speedup,{r['speedup']:.1f}x")
+        if "paged_slots_ratio" in r:
+            print(f"claim,table9_paged_2x_slots_at_equal_hbm,"
+                  f"{r['paged_slots_ratio'] >= 2.0}")
+            print(f"claim,table9_paged_slots_ratio,"
+                  f"{r['paged_slots_ratio']:.1f}x")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,11 @@ measures:
      (CPU parity of plumbing + the TPU weight-traffic projection that
      produces the paper's TPOT win),
   4. a mixed-length request stream through the continuous-batching
-     scheduler: requests/s, tokens/s, TTFT/TPOT p50/p95.
+     scheduler: requests/s, tokens/s, TTFT/TPOT p50/p95,
+  5. dense KV pool vs the paged pool at EQUAL KV HBM: concurrent slots,
+     bytes per concurrent request, tokens/s — plus shared-prefix admission
+     (a registered system prompt is prefetched once; its pages are mapped,
+     not recomputed, into every request that starts with it).
 
 Rows land in the usual CSV; a JSONL record for results/report.py
 --serving is written next to the other results.
@@ -67,11 +71,15 @@ def seed_loop_decode(model, params, prompts, gen):
 
 
 def engine_decode(model, params, prompts, gen):
-    """Engine path: prefill wave + ONE jitted scan. Returns (tokens, dt)."""
+    """Engine path: prefill wave + ONE jitted scan. Returns (tokens, dt).
+
+    Pins the dense pool: this section isolates jitted-scan vs per-token
+    Python dispatch (same cache layout as the seed loop); section 5 measures
+    what paging buys on top."""
     B, P = prompts.shape
     eng = Engine(model, params,
                  EngineConfig(n_slots=B, max_len=P + gen, chunk=gen - 1,
-                              prefill_buckets=(P,)))
+                              prefill_buckets=(P,), paged=False))
     first = eng.admit_wave(list(np.asarray(prompts)), list(range(B)),
                            [gen] * B)
     _ = eng.harvest(*eng.decode_chunk())  # warm the decode trace
@@ -168,6 +176,65 @@ def run(model=None, params=None):
                ttft_p50_s=_pct(ttfts, .5), ttft_p95_s=_pct(ttfts, .95),
                tpot_p50_s=_pct(tpots, .5), tpot_p95_s=_pct(tpots, .95))
 
+    # 5: paged pool — concurrency + bytes/slot at EQUAL KV HBM ---------------
+    ps = 8
+    max_len = PROMPT + GEN
+    plen_s, gen_s = PROMPT // 2, GEN // 2  # typical request: ~half the cap
+
+    def kv_stream(paged, n_slots, n_pages=None, prefix=None, seed=5):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=n_slots, max_len=max_len, chunk=8,
+            prefill_buckets=(plen_s, PROMPT), paged=paged, page_size=ps,
+            n_pages=n_pages))
+        if prefix is not None:
+            eng.register_prefix(prefix)
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for i in range(4 * BATCH):
+            body = rng.integers(0, cfg.vocab_size, plen_s).astype(np.int32)
+            toks = body if prefix is None else np.concatenate([prefix, body])
+            reqs.append(Request(i, toks, gen_s))
+        Scheduler(eng).run(reqs[:2])  # warm the prefill/decode traces
+        sched = Scheduler(eng)
+        t0 = time.perf_counter()
+        comps = sched.run(reqs)
+        wall = time.perf_counter() - t0
+        kv_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                       for x in jax.tree_util.tree_leaves(eng.cache))
+        n_tok = sum(len(c.tokens) for c in comps)
+        return {"tok_per_s": n_tok / wall, "peak_slots": sched.peak_live,
+                "kv_bytes": kv_bytes,
+                "bytes_per_slot": kv_bytes / max(sched.peak_live, 1),
+                "shared_tokens_saved": eng.stats["shared_tokens_saved"]}
+
+    # dense baseline: BATCH slots x max_len; paged gets the SAME arena bytes
+    # (BATCH * max_len tokens worth of pages) but can pack ~2x the requests
+    # because a request only holds ceil(total/ps) pages, not a max_len row
+    equal_pages = BATCH * max_len // ps
+    d = kv_stream(False, BATCH)
+    p = kv_stream(True, 2 * BATCH, n_pages=equal_pages)
+    assert p["kv_bytes"] == d["kv_bytes"], "not an equal-HBM comparison"
+    slots_ratio = p["peak_slots"] / d["peak_slots"]
+    rows.append(("table9/dense_pool_bytes_per_slot", 0,
+                 f"{d['bytes_per_slot'] / 1e3:.0f}KB"))
+    rows.append(("table9/paged_pool_bytes_per_slot", 0,
+                 f"{p['bytes_per_slot'] / 1e3:.0f}KB"))
+    rows.append(("table9/paged_slots_at_equal_hbm", 0,
+                 f"{p['peak_slots']} vs {d['peak_slots']} ({slots_ratio:.1f}x)"))
+    rows.append(("table9/paged_stream_tok_per_s", 0, f"{p['tok_per_s']:.0f}"))
+    prefix = np.asarray(calibration_batch(cfg.vocab_size, 1, 2 * ps,
+                                          seed=11))[0]
+    s = kv_stream(True, 2 * BATCH, n_pages=equal_pages, prefix=prefix)
+    rows.append(("table9/shared_prefix_tokens_skipped", 0,
+                 f"{s['shared_tokens_saved']}"))
+    rec.update(dense_bytes_per_slot=d["bytes_per_slot"],
+               paged_bytes_per_slot=p["bytes_per_slot"],
+               dense_concurrent_slots=d["peak_slots"],
+               paged_concurrent_slots=p["peak_slots"],
+               paged_slots_ratio=slots_ratio,
+               paged_stream_tok_per_s=p["tok_per_s"],
+               shared_prefix_tokens_skipped=s["shared_tokens_saved"])
+
     emit(rows)
     try:
         os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)), exist_ok=True)
@@ -175,7 +242,8 @@ def run(model=None, params=None):
             f.write(json.dumps(rec) + "\n")
     except OSError:
         pass
-    return {"speedup": speedup, "rows": rows, "record": rec}
+    return {"speedup": speedup, "paged_slots_ratio": slots_ratio,
+            "rows": rows, "record": rec}
 
 
 if __name__ == "__main__":

@@ -55,17 +55,28 @@ def serving_table(path):
     """Markdown table for benchmarks/table9_serving.py JSONL records."""
     rows = ["| arch | batch | loop tok/s | engine tok/s | speedup | "
             "pruned tok/s | 2:4 weight ratio | req/s | TTFT p50/p95 | "
-            "TPOT p50/p95 |",
-            "|" + "---|" * 10]
+            "TPOT p50/p95 | paged slots (equal HBM) | KV bytes/slot | "
+            "prefix tokens skipped |",
+            "|" + "---|" * 13]
     for line in open(path):
         r = json.loads(line)
+        if "paged_concurrent_slots" in r:
+            paged = (f"{r['paged_concurrent_slots']} vs "
+                     f"{r['dense_concurrent_slots']} "
+                     f"({r['paged_slots_ratio']:.1f}x)")
+            bps = (f"{r['dense_bytes_per_slot'] / 1e3:.0f}KB → "
+                   f"{r['paged_bytes_per_slot'] / 1e3:.0f}KB")
+            skipped = str(r.get("shared_prefix_tokens_skipped", 0))
+        else:
+            paged = bps = skipped = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
             f"{r['pruned_tok_per_s']:.0f} | {r['tpu_weight_ratio']:.3f} | "
             f"{r['req_per_s']:.1f} | "
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
-            f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} |")
+            f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
+            f"{paged} | {bps} | {skipped} |")
     return "\n".join(rows)
 
 

@@ -34,7 +34,8 @@ from repro.serve.scheduler import Scheduler, percentile
 def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  smoke: bool = True, pruned: str = None, max_len: int = None,
                  sampling: SamplingConfig = SamplingConfig(),
-                 chunk: int = None, n_slots: int = None):
+                 chunk: int = None, n_slots: int = None, paged: bool = True,
+                 page_size: int = 16, n_pages: int = None):
     """Returns (engine, cfg). Prunes the weights first when requested."""
     cfg = get_config(arch)
     if smoke:
@@ -53,17 +54,20 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         max_len=max_len or (prompt_len + gen),
         chunk=chunk or max(gen - 1, 1),
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
+        paged=paged, page_size=page_size, n_pages=n_pages,
     )
     return Engine(model, params, ecfg, sampling), cfg
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           smoke: bool = True, pruned: str = None, max_len: int = None,
-          sampling: SamplingConfig = SamplingConfig()):
+          sampling: SamplingConfig = SamplingConfig(), paged: bool = True,
+          page_size: int = 16, n_pages: int = None):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
-                               sampling=sampling)
+                               sampling=sampling, paged=paged,
+                               page_size=page_size, n_pages=n_pages)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
     t0 = time.perf_counter()
@@ -87,22 +91,43 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
 def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    prompt_len: int = 32, gen: int = 16, smoke: bool = True,
                    pruned: str = None,
-                   sampling: SamplingConfig = SamplingConfig()):
-    """Mixed-length request stream through the continuous-batching scheduler."""
+                   sampling: SamplingConfig = SamplingConfig(),
+                   paged: bool = True, page_size: int = 16,
+                   n_pages: int = None, shared_prefix: int = 0):
+    """Mixed-length request stream through the continuous-batching scheduler.
+
+    ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
+    tokens to every request and registers it with the engine: its KV pages
+    are prefetched once and mapped (refcounted) into each request, so only
+    the per-request suffix is ever prefilled."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
-                               pruned=pruned, max_len=prompt_len + gen,
-                               sampling=sampling, chunk=max(gen // 2, 1))
+                               pruned=pruned,
+                               max_len=shared_prefix + prompt_len + gen,
+                               sampling=sampling, chunk=max(gen // 2, 1),
+                               paged=paged, page_size=page_size,
+                               n_pages=n_pages)
     rng = np.random.default_rng(7)
-    reqs = [Request(i,
-                    rng.integers(0, cfg.vocab_size,
-                                 int(rng.integers(prompt_len // 2, prompt_len + 1)),
-                                 ).astype(np.int32),
-                    int(rng.integers(max(gen // 2, 1), gen + 1)))
-            for i in range(n_requests)]
+    prefix = None
+    if shared_prefix > 0:
+        prefix = rng.integers(0, cfg.vocab_size, shared_prefix).astype(np.int32)
+        n_shared = engine.register_prefix(prefix)
+        print(f"[serve] shared prefix registered: {n_shared}/{shared_prefix} "
+              f"tokens ({n_shared // page_size} pages)")
+    reqs = []
+    for i in range(n_requests):
+        body = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(prompt_len // 2, prompt_len + 1)),
+                            ).astype(np.int32)
+        toks = body if prefix is None else np.concatenate([prefix, body])
+        reqs.append(Request(i, toks,
+                            int(rng.integers(max(gen // 2, 1), gen + 1))))
     t0 = time.perf_counter()
     comps = Scheduler(engine).run(reqs)
     wall = time.perf_counter() - t0
     n_tok = sum(len(c.tokens) for c in comps)
+    if shared_prefix > 0:
+        print(f"[serve] prefill tokens skipped via shared pages: "
+              f"{engine.stats['shared_tokens_saved']}")
     ttfts = [c.ttft_s for c in comps]
     tpots = [t for c in comps for t in c.tpot_s]
     pct = percentile
@@ -127,16 +152,31 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dense-pool", action="store_true",
+                    help="use the dense (L, n_slots, max_len) KV pool "
+                         "instead of the paged arena")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged pool)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV arena pages; default n_slots * ceil(max_len / "
+                         "page_size) (shrink it to cap KV HBM)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="with --requests: shared system-prompt tokens, "
+                         "prefetched once into refcounted pages")
     args = ap.parse_args()
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
                               seed=args.seed)
     if args.requests > 0:
         serve_requests(args.arch, args.requests, args.batch, args.prompt_len,
                        args.gen, smoke=args.smoke, pruned=args.pruned,
-                       sampling=sampling)
+                       sampling=sampling, paged=not args.dense_pool,
+                       page_size=args.page_size, n_pages=args.n_pages,
+                       shared_prefix=args.shared_prefix)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
-              smoke=args.smoke, pruned=args.pruned, sampling=sampling)
+              smoke=args.smoke, pruned=args.pruned, sampling=sampling,
+              paged=not args.dense_pool, page_size=args.page_size,
+              n_pages=args.n_pages)
 
 
 if __name__ == "__main__":

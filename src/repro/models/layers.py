@@ -176,7 +176,7 @@ def _sdpa(q, k, v, mask, scale):
 
 
 def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
-              cache_index=None, attn_mask=None, lin=None):
+              cache_index=None, attn_mask=None, block_table=None, lin=None):
     """Returns (out, new_kv_cache).
 
     Training / prefill: ``kv_cache=None`` — causal (or bidirectional) full attn;
@@ -185,6 +185,11 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
     ``cache_index`` is the write position — scalar int32 when the whole batch
     decodes in lockstep, or (B,) int32 for slot-batched serving where every
     sequence sits at its own length.
+    Paged decode/prefill: ``kv_cache=(k,v)`` is a shared page arena of shape
+    (n_pages, page_size, KV, hd) and ``block_table`` is (B, max_blocks) int32
+    page indices per row (``n_pages`` == unmapped: such writes drop, reads are
+    masked). x may be (B, S, D) for S >= 1 (chunked / shared-prefix prefill);
+    each row's tokens land at cache positions ``cache_index[b] + [0, S)``.
     """
     if lin is None:
         lin = default_lin
@@ -212,7 +217,41 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
     else:
         kv_pos = positions if positions.ndim == 2 else positions[0]
 
-    if kv_cache is not None:
+    if kv_cache is not None and block_table is not None:
+        # paged path: scatter new KV through the block table, gather the
+        # position-ordered view back for the (masked) attention read
+        ck, cv = kv_cache  # (n_pages, page_size, KV, hd) — this layer's arena
+        n_pages, page_size = ck.shape[0], ck.shape[1]
+        MB = block_table.shape[1]
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim == 0:
+            idx = jnp.broadcast_to(idx, (B,))
+        tok_pos = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B,S)
+        pidx = tok_pos // page_size
+        page = jnp.where(
+            pidx < MB,
+            jnp.take_along_axis(block_table, jnp.minimum(pidx, MB - 1), axis=1),
+            n_pages)  # past-the-table writes (frozen slots) must drop
+        off = tok_pos % page_size
+        if ck.dtype == jnp.int8:
+            k_new = jnp.clip(jnp.round(k.astype(jnp.float32) * KV_QSCALE),
+                             -127, 127).astype(jnp.int8)
+            v_new = jnp.clip(jnp.round(v.astype(jnp.float32) * KV_QSCALE),
+                             -127, 127).astype(jnp.int8)
+        else:
+            k_new, v_new = k.astype(ck.dtype), v.astype(cv.dtype)
+        ck = ck.at[page, off].set(k_new, mode="drop")
+        cv = cv.at[page, off].set(v_new, mode="drop")
+        k_full = ck.at[block_table].get(mode="fill", fill_value=0)
+        v_full = cv.at[block_table].get(mode="fill", fill_value=0)
+        k_full = k_full.reshape(B, MB * page_size, KV, hd)
+        v_full = v_full.reshape(B, MB * page_size, KV, hd)
+        if ck.dtype == jnp.int8:
+            k_full = (k_full.astype(jnp.float32) / KV_QSCALE).astype(k.dtype)
+            v_full = (v_full.astype(jnp.float32) / KV_QSCALE).astype(v.dtype)
+        mask = _cache_mask(idx, B, S, MB * page_size)
+        new_cache = (ck, cv)
+    elif kv_cache is not None:
         ck, cv = kv_cache
         if ck.dtype == jnp.int8:
             kq = jnp.clip(jnp.round(k.astype(jnp.float32) * KV_QSCALE), -127, 127)

@@ -214,19 +214,36 @@ class Model:
             }
         raise ValueError(f"no cache for family {cfg.family}")
 
+    def init_paged_cache(self, n_pages: int, page_size: int):
+        """Shared KV page arena for the paged serving pool: (k, v) each of
+        shape (L, n_pages, page_size, KV, hd). Slots map into it through
+        per-slot block tables (see serve/paging.py); HBM scales with the
+        pages actually allocated, not n_slots x max_len."""
+        cfg, dt = self.cfg, self.param_dtype
+        kv_dt = self.kv_dtype or dt
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(f"no paged KV cache for family {cfg.family}")
+        hd = cfg.resolved_head_dim
+        shape = (cfg.num_layers, n_pages, page_size, cfg.num_kv_heads, hd)
+        return (jnp.zeros(shape, kv_dt), jnp.zeros(shape, kv_dt))
+
     # ------------------------------------------------------------------
     # single-token decode
     # ------------------------------------------------------------------
     def decode_step(self, params, inputs, cache, *, lin=None, elin=None):
-        """inputs: {"token": (B,) int32, "pos": () or (B,) int32}.
+        """inputs: {"token": (B,) int32, "pos": () or (B,) int32, optional
+        "block_table": (B, max_blocks) int32}.
 
         A scalar ``pos`` decodes the whole batch in lockstep (every sequence
         at the same length); a (B,) vector decodes a *slot batch* where each
         sequence sits at its own position (continuous-batching serving).
+        With "block_table", ``cache`` is the paged (L, n_pages, page_size,
+        KV, hd) arena and reads/writes go through the table.
         Returns (logits, cache).
         """
         cfg = self.cfg
         token, pos = inputs["token"], inputs["pos"]
+        block_table = inputs.get("block_table")
         Bsz = token.shape[0]
         x = self.embed(params, token)[:, None, :]
         pos = jnp.asarray(pos, jnp.int32)
@@ -248,7 +265,8 @@ class Model:
             def body(h, xs):
                 bp, cache_l = xs
                 h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
-                                    cache_index=pos, lin=lin, elin=elin)
+                                    cache_index=pos, block_table=block_table,
+                                    lin=lin, elin=elin)
                 return h, new_c
 
             x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
@@ -256,6 +274,44 @@ class Model:
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = self.unembed(params, x)[:, 0, :]
         return logits, new_cache
+
+    def prefill_paged(self, params, inputs, cache, *, lin=None, elin=None):
+        """Prefill straight through the paged KV pool (shared-prefix path).
+
+        inputs: {"tokens": (B, S) int32 — each row's *suffix* (prompt minus
+        its shared prefix), "pos": (B,) int32 — first cache position of each
+        row (== its shared-prefix length; 0 for a fresh request), "last":
+        (B,) int32 — index of each row's last real suffix token,
+        "block_table": (B, max_blocks) int32}.
+
+        Writes the suffix KV through the block table and attends over
+        [shared prefix pages | suffix] per row — the shared pages were
+        prefetched once by ``Engine.register_prefix`` and are never
+        recomputed here. Returns (last-token logits (B, V), cache).
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"{cfg.name}: paged prefill serves dense/moe families")
+        tokens, pos = inputs["tokens"], jnp.asarray(inputs["pos"], jnp.int32)
+        block_table = inputs["block_table"]
+        Bsz, S = tokens.shape
+        x = self.embed(params, tokens)
+        positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        apply = self.block_apply
+
+        def body(h, xs):
+            bp, cache_l = xs
+            h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
+                                cache_index=pos, block_table=block_table,
+                                lin=lin, elin=elin)
+            return h, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        last = jnp.clip(jnp.asarray(inputs["last"], jnp.int32), 0, S - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        return self.unembed(params, x_last), new_cache
 
     def _hybrid_decode(self, params, x, positions, pos, cache, lin, elin):
         cfg = self.cfg

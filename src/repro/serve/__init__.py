@@ -2,11 +2,13 @@
 
 Layout:
     sampling.py  — ``SamplingConfig`` + pure on-device token sampling
-    slots.py     — slot-batched request state (the KV-cache pool bookkeeping)
+    slots.py     — slot-batched request state (per-slot scalars)
+    paging.py    — paged KV pool: block tables + jit-safe page allocator
     engine.py    — jitted prefill / scan-decode programs + the ``Engine``
     scheduler.py — request queue, length-bucketed admission, timing stats
 """
-from repro.serve.engine import Engine, EngineConfig, generate
+from repro.serve.engine import Engine, EngineConfig, PagesExhausted, generate
+from repro.serve.paging import PageState, init_pages
 from repro.serve.sampling import SamplingConfig, sample_tokens
 from repro.serve.scheduler import Completion, Request
 from repro.serve.slots import SlotState, init_slots
@@ -14,10 +16,13 @@ from repro.serve.slots import SlotState, init_slots
 __all__ = [
     "Engine",
     "EngineConfig",
+    "PagesExhausted",
     "SamplingConfig",
     "sample_tokens",
     "SlotState",
     "init_slots",
+    "PageState",
+    "init_pages",
     "Request",
     "Completion",
     "generate",

@@ -10,6 +10,15 @@ dispatch, which is the whole point of the Wanda++ 2:4 deployment story
 Prefill runs as a separate jitted program per (wave, bucket-length) shape;
 waves are padded to power-of-two sizes and prompt lengths to configured
 buckets so trace counts stay O(#buckets), not O(#requests).
+
+KV storage is a **paged pool** by default (``EngineConfig.paged``): slots
+map per-slot block tables into a shared (L, n_pages, page_size, KV, hd)
+arena (see serve/paging.py), so HBM scales with the tokens actually cached
+instead of n_slots x max_len, and a registered shared prompt prefix
+(:meth:`Engine.register_prefix`) is prefetched once into refcounted pages
+and mapped — never recomputed — into every request that starts with it.
+``paged=False`` keeps the dense (L, n_slots, max_len, KV, hd) pool as the
+parity/memory baseline.
 """
 from __future__ import annotations
 
@@ -23,18 +32,39 @@ import numpy as np
 
 from repro.models.layers import KV_QSCALE
 from repro.models.model import Model
+from repro.serve import paging as PAGE
 from repro.serve import slots as SLOT
+from repro.serve.paging import PageState
 from repro.serve.sampling import SamplingConfig, sample_tokens
 from repro.serve.slots import SlotState, init_slots
 
 
+class PagesExhausted(RuntimeError):
+    """Admission would need more KV pages than the free list holds; the
+    scheduler reacts by requeueing until decode releases live slots."""
+
+
 @dataclass(frozen=True)
 class EngineConfig:
-    n_slots: int = 8  # KV-cache pool size == max concurrent requests
-    max_len: int = 128  # cache length per slot
+    n_slots: int = 8  # max concurrent requests
+    max_len: int = 128  # cache length cap per request
     chunk: int = 16  # decode steps per host round-trip
     eos_id: Optional[int] = None  # None => length-only termination
     prefill_buckets: Tuple[int, ...] = (16, 32, 64, 128)
+    paged: bool = True  # block-table paged KV pool; False => dense pool
+    page_size: int = 16  # tokens per KV page
+    n_pages: Optional[int] = None  # arena size; None => n_slots * max_blocks
+
+    @property
+    def max_blocks(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def pool_pages(self) -> int:
+        # the default arena matches the dense pool's worst case, so shrinking
+        # n_pages below it is exactly the HBM saving paging buys
+        return self.n_pages if self.n_pages is not None \
+            else self.n_slots * self.max_blocks
 
 
 def _bucket_len(buckets: Sequence[int], plen: int, max_len: int) -> int:
@@ -88,16 +118,41 @@ class Engine:
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.state: SlotState = init_slots(cfg.n_slots)
-        self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
+        self.pstate: Optional[PageState] = None
+        if cfg.paged:
+            self.cache = model.init_paged_cache(cfg.pool_pages, cfg.page_size)
+            self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
+                                          cfg.max_blocks)
+        else:
+            self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
+        # host mirror of the device free list (allocation is deterministic,
+        # so admission can check capacity without a device round-trip)
+        self._free_pages = cfg.pool_pages
+        self._slot_pages = np.zeros(cfg.n_slots, np.int64)  # fresh pages/slot
+        # registered shared prefix (paged only)
+        self.prefix_tokens: Optional[np.ndarray] = None
+        self.prefix_pages: Optional[np.ndarray] = None
+        self.prefix_len = 0
+        self.stats = {"shared_tokens_saved": 0}
         # trace counters: the no-retrace-per-token guarantee is testable
         self.trace_counts = {"decode": 0, "prefill": 0}
         self._decode_jit = {}  # chunk length T -> compiled program
-        self._prefill_jit = jax.jit(self._prefill_impl, donate_argnums=(1, 2, 3))
+        if cfg.paged:
+            self._prefill_jit = jax.jit(self._prefill_paged_impl,
+                                        donate_argnums=(1, 2, 3, 4))
+            self._prefill_shared_jit = jax.jit(self._prefill_shared_impl,
+                                               donate_argnums=(1, 2, 3, 4))
+            self._register_jit = jax.jit(self._register_impl,
+                                         donate_argnums=(1, 2))
+        else:
+            self._prefill_jit = jax.jit(self._prefill_dense_impl,
+                                        donate_argnums=(1, 2, 3))
+        self._release_jit = jax.jit(self._release_impl, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     # jitted programs
     # ------------------------------------------------------------------
-    def _decode_impl(self, params, cache, state, key, *, T):
+    def _decode_impl(self, params, cache, state, key, block_tables, *, T):
         self.trace_counts["decode"] += 1
         sc, eos = self.sampling, self.cfg.eos_id
 
@@ -105,11 +160,14 @@ class Engine:
             cache, state, key = carry
             key, sub = jax.random.split(key)
             run = state.active & ~state.finished
-            logits, cache = self.model.decode_step(
-                params, {"token": state.last_token, "pos": state.pos}, cache)
+            inputs = {"token": state.last_token, "pos": state.pos}
+            if block_tables is not None:
+                inputs["block_table"] = block_tables
+            logits, cache = self.model.decode_step(params, inputs, cache)
             nxt = sample_tokens(logits, sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
             # the cache write lands on a position admission will overwrite
+            # (paged: on an unmapped block, where the scatter drops it)
             nxt = jnp.where(run, nxt, state.last_token)
             pos = state.pos + run.astype(jnp.int32)
             done = pos >= state.max_total
@@ -123,29 +181,15 @@ class Engine:
             step, (cache, state, key), None, length=T)
         return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
 
-    def _prefill_impl(self, params, cache, state, key, tokens, plens, slots,
-                      max_news):
-        """One admission wave: forward the (padded) prompts, sample each
-        request's first token, scatter KV + slot metadata into the pool."""
-        self.trace_counts["prefill"] += 1
-        logits, _, kvs = self.model.forward(params, {"tokens": tokens},
-                                            return_cache=True)
+    def _sample_first(self, logits, plens, key):
+        """Per-row last-prompt-position logits -> each request's first token."""
         last = jnp.take_along_axis(
             logits, jnp.maximum(plens - 1, 0)[:, None, None], axis=1)[:, 0]
         key, sub = jax.random.split(key)
-        first = sample_tokens(last, sub, self.sampling)
+        return sample_tokens(last, sub, self.sampling), key
 
-        ck, cv = cache
-        k_s, v_s = kvs  # (L, K, Lb, KV, hd)
-        if ck.dtype == jnp.int8:
-            k_s = jnp.clip(jnp.round(k_s.astype(jnp.float32) * KV_QSCALE),
-                           -127, 127)
-            v_s = jnp.clip(jnp.round(v_s.astype(jnp.float32) * KV_QSCALE),
-                           -127, 127)
-        Lb = tokens.shape[1]
-        ck = ck.at[:, slots, :Lb].set(k_s.astype(ck.dtype), mode="drop")
-        cv = cv.at[:, slots, :Lb].set(v_s.astype(cv.dtype), mode="drop")
-
+    def _admit_state(self, state, slots, first, plens, max_news):
+        """Scatter slot metadata for an admitted wave; returns (state, mt)."""
         max_total = plens + jnp.maximum(max_news, 1) - 1
         state = SLOT.admit(state, slots, first, plens, max_total)
         done0 = max_total <= plens  # max_new == 1: the prefill token is it
@@ -153,7 +197,118 @@ class Engine:
             done0 = done0 | (first == self.cfg.eos_id)
         state = state._replace(
             finished=state.finished.at[slots].set(done0, mode="drop"))
+        return state, max_total
+
+    def _quantize_like(self, ck, k_s, v_s):
+        if ck.dtype == jnp.int8:
+            k_s = jnp.clip(jnp.round(k_s.astype(jnp.float32) * KV_QSCALE),
+                           -127, 127)
+            v_s = jnp.clip(jnp.round(v_s.astype(jnp.float32) * KV_QSCALE),
+                           -127, 127)
+        return k_s.astype(ck.dtype), v_s.astype(ck.dtype)
+
+    def _prefill_dense_impl(self, params, cache, state, key, tokens, plens,
+                            slots, max_news):
+        """One admission wave into the dense pool: forward the (padded)
+        prompts, sample first tokens, scatter KV + slot metadata."""
+        self.trace_counts["prefill"] += 1
+        logits, _, kvs = self.model.forward(params, {"tokens": tokens},
+                                            return_cache=True)
+        first, key = self._sample_first(logits, plens, key)
+        ck, cv = cache
+        k_s, v_s = self._quantize_like(ck, *kvs)  # (L, K, Lb, KV, hd)
+        Lb = tokens.shape[1]
+        ck = ck.at[:, slots, :Lb].set(k_s, mode="drop")
+        cv = cv.at[:, slots, :Lb].set(v_s, mode="drop")
+        state, _ = self._admit_state(state, slots, first, plens, max_news)
         return (ck, cv), state, key, first
+
+    def _prefill_paged_impl(self, params, cache, state, pstate, key, tokens,
+                            plens, slots, max_news):
+        """Fresh-request admission into the paged pool. Same forward as the
+        dense path (bit-exact parity); only the KV scatter goes through the
+        freshly-allocated block tables."""
+        self.trace_counts["prefill"] += 1
+        cfg = self.cfg
+        logits, _, kvs = self.model.forward(params, {"tokens": tokens},
+                                            return_cache=True)
+        first, key = self._sample_first(logits, plens, key)
+
+        max_total = plens + jnp.maximum(max_news, 1) - 1
+        n_blocks = (max_total + cfg.page_size - 1) // cfg.page_size
+        pstate, ok = PAGE.alloc(pstate, slots, n_blocks)
+        bt = pstate.block_tables.at[slots].get(
+            mode="fill", fill_value=cfg.pool_pages)  # (K, MB)
+
+        ck, cv = cache
+        k_s, v_s = self._quantize_like(ck, *kvs)  # (L, K, Lb, KV, hd)
+        K, Lb = tokens.shape
+        tpos = jnp.broadcast_to(jnp.arange(Lb, dtype=jnp.int32)[None, :],
+                                (K, Lb))
+        pidx = tpos // cfg.page_size
+        page = jnp.where(
+            pidx < cfg.max_blocks,
+            jnp.take_along_axis(bt, jnp.minimum(pidx, cfg.max_blocks - 1),
+                                axis=1),
+            cfg.pool_pages)  # bucket padding past the allocation: dropped
+        off = tpos % cfg.page_size
+        ck = ck.at[:, page, off].set(k_s, mode="drop")
+        cv = cv.at[:, page, off].set(v_s, mode="drop")
+
+        new_state, _ = self._admit_state(state, slots, first, plens, max_news)
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), new_state, state)
+        return (ck, cv), state, pstate, key, first, ok
+
+    def _prefill_shared_impl(self, params, cache, state, pstate, key, tokens,
+                             suff_lens, shared_lens, slots, max_news,
+                             shared_pages):
+        """Shared-prefix admission: map the registered prefix pages
+        (refcounted) into each slot's block table, then prefill ONLY the
+        suffix through the paged pool — the shared pages' prefill is skipped
+        entirely."""
+        self.trace_counts["prefill"] += 1
+        cfg = self.cfg
+        plens = shared_lens + suff_lens
+        max_total = plens + jnp.maximum(max_news, 1) - 1
+        n_blocks = (max_total + cfg.page_size - 1) // cfg.page_size
+        n_shared = shared_lens // cfg.page_size
+        pstate, ok = PAGE.alloc(pstate, slots, n_blocks, n_shared, shared_pages)
+        bt = pstate.block_tables.at[slots].get(
+            mode="fill", fill_value=cfg.pool_pages)
+
+        last, cache = self.model.prefill_paged(
+            params, {"tokens": tokens, "pos": shared_lens,
+                     "last": suff_lens - 1, "block_table": bt}, cache)
+        key, sub = jax.random.split(key)
+        first = sample_tokens(last, sub, self.sampling)
+
+        new_state, _ = self._admit_state(state, slots, first, plens, max_news)
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), new_state, state)
+        return cache, state, pstate, key, first, ok
+
+    def _register_impl(self, params, cache, pstate, tokens):
+        """Prefetch a shared prefix: reserve pages off the free list with a
+        permanent hold and prefill the prefix KV into them once."""
+        cfg = self.cfg
+        n_full = tokens.shape[1] // cfg.page_size
+        pstate, pages, ok = PAGE.reserve(pstate, n_full)
+        bt = jnp.full((1, cfg.max_blocks), cfg.pool_pages,
+                      jnp.int32).at[0, :n_full].set(pages)
+        _, cache = self.model.prefill_paged(
+            params, {"tokens": tokens, "pos": jnp.zeros((1,), jnp.int32),
+                     "last": jnp.asarray([tokens.shape[1] - 1], jnp.int32),
+                     "block_table": bt}, cache)
+        return cache, pstate, pages, ok
+
+    def _release_impl(self, state, pstate, slots):
+        """Free harvested slots; with a paged pool the SAME program also
+        unmaps their block tables and returns the pages to the free list."""
+        state = SLOT.release(state, slots)
+        if pstate is not None:
+            pstate = PAGE.release(pstate, slots)
+        return state, pstate
 
     def _decode_fn(self, T: int):
         if T not in self._decode_jit:
@@ -166,44 +321,182 @@ class Engine:
     # host-side driver ops (used by scheduler.Scheduler and generate())
     # ------------------------------------------------------------------
     def reset(self):
-        self.state = init_slots(self.cfg.n_slots)
-        self.cache = self.model.init_cache(self.cfg.n_slots, self.cfg.max_len)
+        cfg = self.cfg
+        self.state = init_slots(cfg.n_slots)
+        if cfg.paged:
+            self.cache = self.model.init_paged_cache(cfg.pool_pages,
+                                                     cfg.page_size)
+            self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
+                                          cfg.max_blocks)
+        else:
+            self.cache = self.model.init_cache(cfg.n_slots, cfg.max_len)
+        self._free_pages = cfg.pool_pages
+        self._slot_pages[:] = 0
+        self.stats = {"shared_tokens_saved": 0}
         self.key = jax.random.PRNGKey(self.sampling.seed)
+        ptoks = self.prefix_tokens
+        self.prefix_tokens, self.prefix_pages, self.prefix_len = None, None, 0
+        if ptoks is not None:  # a registered prefix survives resets
+            self.register_prefix(ptoks)
+
+    @property
+    def free_pages(self) -> int:
+        return self._free_pages
+
+    def _shared_len(self, prompt: np.ndarray) -> int:
+        """Tokens of ``prompt`` covered by the registered prefix (whole pages
+        only; 0 when no prefix matches or no suffix token would remain)."""
+        if self.prefix_pages is None:
+            return 0
+        n = self.prefix_len
+        if len(prompt) <= n:  # need >= 1 suffix token for first-token logits
+            return 0
+        return n if np.array_equal(prompt[:n], self.prefix_tokens) else 0
+
+    def pages_needed(self, prompt, max_new: int) -> int:
+        """Fresh pages admission of this request would take (0 on a dense
+        pool). The scheduler checks this against :attr:`free_pages`."""
+        if not self.cfg.paged:
+            return 0
+        prompt = np.asarray(prompt)
+        mt = len(prompt) + max(max_new, 1) - 1
+        n_blocks = -(-mt // self.cfg.page_size)
+        return n_blocks - self._shared_len(prompt) // self.cfg.page_size
+
+    def register_prefix(self, tokens) -> int:
+        """Prefetch a shared prompt prefix (system prompt) into refcounted
+        pages. Only whole pages are shared; returns the shared token count.
+        Subsequent admissions whose prompt starts with those tokens map the
+        pages instead of recomputing their prefill."""
+        if not self.cfg.paged:
+            raise ValueError("shared-prefix reuse requires paged=True")
+        if self.prefix_pages is not None:
+            raise ValueError("a shared prefix is already registered")
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n_full = len(tokens) // self.cfg.page_size
+        if n_full == 0:
+            return 0
+        shared_len = n_full * self.cfg.page_size
+        if shared_len >= self.cfg.max_len:
+            raise ValueError(
+                f"shared prefix of {shared_len} tokens leaves no room under "
+                f"max_len={self.cfg.max_len}")
+        if n_full > self._free_pages:
+            raise PagesExhausted(
+                f"prefix needs {n_full} pages, {self._free_pages} free")
+        self.cache, self.pstate, pages, ok = self._register_jit(
+            self.params, self.cache, self.pstate,
+            jnp.asarray(tokens[:shared_len][None]))
+        assert bool(ok), "host free-page mirror out of sync with device"
+        self.prefix_pages = np.asarray(pages)
+        self.prefix_tokens = tokens[:shared_len]
+        self.prefix_len = shared_len
+        self._free_pages -= n_full
+        return shared_len
 
     def admit_wave(self, prompts, slot_ids, max_news):
-        """Prefill `prompts` (list of 1-D int arrays, same bucket length
-        after padding) into `slot_ids`. Returns each request's first
-        generated token as a (K,) numpy array (this is the TTFT sync)."""
+        """Prefill `prompts` (list of 1-D int arrays) into `slot_ids`.
+        Returns each request's first generated token as a (K,) numpy array
+        (this is the TTFT sync). Raises :class:`PagesExhausted` when the
+        paged pool cannot hold the wave (no partial admission happens).
+
+        Paged engines split the wave internally: requests matching the
+        registered prefix go through the suffix-only shared program, the
+        rest through the fresh-prefill program."""
         assert len(prompts) == len(slot_ids) == len(max_news)
-        K = len(prompts)
-        plens = [len(p) for p in prompts]
-        Lb = _bucket_len(self.cfg.prefill_buckets, max(plens), self.cfg.max_len)
-        for p, mn in zip(plens, max_news):
-            if p + max(mn, 1) - 1 > self.cfg.max_len:
+        prompts = [np.asarray(p, np.int32) for p in prompts]
+        for p, mn in zip(prompts, max_news):
+            if len(p) + max(mn, 1) - 1 > self.cfg.max_len:
                 raise ValueError(
-                    f"request needs {p + mn - 1} cache slots > "
+                    f"request needs {len(p) + mn - 1} cache slots > "
                     f"max_len={self.cfg.max_len}")
+        if not self.cfg.paged:
+            return self._admit_dense(prompts, slot_ids, max_news)
+        need = [self.pages_needed(p, mn) for p, mn in zip(prompts, max_news)]
+        if sum(need) > self._free_pages:
+            raise PagesExhausted(
+                f"wave needs {sum(need)} pages, {self._free_pages} free")
+        shared = [self._shared_len(p) for p in prompts]
+        i_sh = [i for i, s in enumerate(shared) if s > 0]
+        i_fr = [i for i, s in enumerate(shared) if s == 0]
+        first = np.zeros(len(prompts), np.int32)
+        if i_fr:
+            first[i_fr] = self._admit_paged(
+                [prompts[i] for i in i_fr], [slot_ids[i] for i in i_fr],
+                [max_news[i] for i in i_fr], [need[i] for i in i_fr])
+        if i_sh:
+            first[i_sh] = self._admit_shared(
+                [prompts[i] for i in i_sh], [slot_ids[i] for i in i_sh],
+                [max_news[i] for i in i_sh], [need[i] for i in i_sh],
+                [shared[i] for i in i_sh])
+        return first
+
+    def _wave_arrays(self, rows, slot_ids, max_news):
+        """Pad a wave to a (pow2 rows, bucketed length) shape; padding rows
+        scatter to slot index n_slots -> dropped on device."""
+        K = len(rows)
+        lens = [len(r) for r in rows]
+        Lb = _bucket_len(self.cfg.prefill_buckets, max(lens), self.cfg.max_len)
         Kp = _pad_pow2(K, self.cfg.n_slots)
         toks = np.zeros((Kp, Lb), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, : len(p)] = np.asarray(p, np.int32)
-        plen_v = np.asarray(plens + [1] * (Kp - K), np.int32)
-        # padding rows scatter to slot index n_slots -> dropped on device
+        for i, r in enumerate(rows):
+            toks[i, : len(r)] = r
+        len_v = np.asarray(lens + [1] * (Kp - K), np.int32)
         slot_v = np.asarray(list(slot_ids) + [self.cfg.n_slots] * (Kp - K),
                             np.int32)
         mn_v = np.asarray(list(max_news) + [1] * (Kp - K), np.int32)
+        return toks, len_v, slot_v, mn_v, K
+
+    def _book_pages(self, slot_ids, need):
+        self._free_pages -= sum(need)
+        for s, n in zip(slot_ids, need):
+            self._slot_pages[s] = n
+
+    def _admit_dense(self, prompts, slot_ids, max_news):
+        toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
+            prompts, slot_ids, max_news)
         self.cache, self.state, self.key, first = self._prefill_jit(
             self.params, self.cache, self.state, self.key,
             jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
             jnp.asarray(mn_v))
         return np.asarray(first)[:K]
 
+    def _admit_paged(self, prompts, slot_ids, max_news, need):
+        toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
+            prompts, slot_ids, max_news)
+        self.cache, self.state, self.pstate, self.key, first, ok = \
+            self._prefill_jit(
+                self.params, self.cache, self.state, self.pstate, self.key,
+                jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
+                jnp.asarray(mn_v))
+        assert bool(ok), "host free-page mirror out of sync with device"
+        self._book_pages(slot_ids, need)
+        return np.asarray(first)[:K]
+
+    def _admit_shared(self, prompts, slot_ids, max_news, need, shared):
+        suffixes = [p[s:] for p, s in zip(prompts, shared)]
+        toks, slen_v, slot_v, mn_v, K = self._wave_arrays(
+            suffixes, slot_ids, max_news)
+        Kp = len(slot_v)
+        sh_v = np.asarray(list(shared) + [0] * (Kp - K), np.int32)
+        self.cache, self.state, self.pstate, self.key, first, ok = \
+            self._prefill_shared_jit(
+                self.params, self.cache, self.state, self.pstate, self.key,
+                jnp.asarray(toks), jnp.asarray(slen_v), jnp.asarray(sh_v),
+                jnp.asarray(slot_v), jnp.asarray(mn_v),
+                jnp.asarray(self.prefix_pages))
+        assert bool(ok), "host free-page mirror out of sync with device"
+        self._book_pages(slot_ids, need)
+        self.stats["shared_tokens_saved"] += sum(shared)
+        return np.asarray(first)[:K]
+
     def decode_chunk(self, T: Optional[int] = None):
         """Run T jitted decode steps; returns device (toks, valid) of shape
         (T, n_slots). No host sync happens here — harvest() does that."""
         T = T or self.cfg.chunk
+        bt = self.pstate.block_tables if self.cfg.paged else None
         self.cache, self.state, self.key, toks, valid = self._decode_fn(T)(
-            self.params, self.cache, self.state, self.key)
+            self.params, self.cache, self.state, self.key, bt)
         return toks, valid
 
     def harvest(self, toks, valid):
@@ -213,8 +506,12 @@ class Engine:
                 np.asarray(self.state.finished), np.asarray(self.state.pos))
 
     def release(self, slot_ids):
-        self.state = SLOT.release(
-            self.state, jnp.asarray(np.asarray(slot_ids, np.int32)))
+        slot_ids = np.asarray(slot_ids, np.int32)
+        self.state, self.pstate = self._release_jit(
+            self.state, self.pstate, jnp.asarray(slot_ids))
+        if self.cfg.paged:
+            self._free_pages += int(self._slot_pages[slot_ids].sum())
+            self._slot_pages[slot_ids] = 0
 
     # ------------------------------------------------------------------
     # one-wave convenience: same-shape batch, single decode program
@@ -224,7 +521,10 @@ class Engine:
 
         One prefill + ONE jitted scan over the remaining max_new - 1 steps:
         a full generation costs exactly two device syncs (first-token and
-        final harvest) regardless of max_new.
+        final harvest) regardless of max_new. With ``eos_id`` set, rows are
+        truncated at their EOS: frozen slots re-feed their last token on
+        device, and those repeats are masked out of the returned (B, T)
+        array (padded with ``eos_id``) instead of leaking to the caller.
         """
         prompts = np.asarray(prompts, np.int32)
         B = prompts.shape[0]
@@ -236,10 +536,11 @@ class Engine:
         if max_new > 1:
             toks, valid = self.decode_chunk(max_new - 1)
             t, v, _, _ = self.harvest(toks, valid)
-            t = t[:, :B].T  # (B, max_new-1)
+            t, v = t[:, :B].T, v[:, :B].T  # (B, max_new-1)
             if self.cfg.eos_id is None:
-                assert v[:, :B].T.all(), \
-                    "same-shape wave must stay active to the end"
+                assert v.all(), "same-shape wave must stay active to the end"
+            else:
+                t = np.where(v, t, self.cfg.eos_id)
             return np.concatenate([first[:, None], t], axis=1)
         return first[:, None]
 

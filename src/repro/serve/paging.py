@@ -1,0 +1,156 @@
+"""Paged KV-cache pool: block tables + a jit-compatible page allocator.
+
+The engine's KV arena is (L, n_pages, page_size, KV, hd); each slot owns a
+row of ``block_tables`` — (max_blocks,) int32 page indices, position-ordered,
+with ``n_pages`` marking an unmapped block (out-of-range, so scatters drop
+and gathers are masked). ``ref`` counts live mappings per page: 0 == free,
+>1 == shared (a registered prompt prefix mapped into several slots, plus a
+permanent hold from :meth:`Engine.register_prefix`).
+
+Everything here is pure and shape-static so admission/release stay inside
+the engine's jitted programs: the "free list" is materialised on the fly as
+a rank->page permutation of the pages with ``ref == 0`` (lowest index
+first, so allocation order is deterministic and the host can mirror the
+free count exactly).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PageState(NamedTuple):
+    ref: jnp.ndarray  # (n_pages,) int32 — live mappings; 0 == free
+    block_tables: jnp.ndarray  # (n_slots, max_blocks) int32; n_pages == unmapped
+
+
+def init_pages(n_pages: int, n_slots: int, max_blocks: int) -> PageState:
+    return PageState(
+        ref=jnp.zeros((n_pages,), jnp.int32),
+        block_tables=jnp.full((n_slots, max_blocks), n_pages, jnp.int32),
+    )
+
+
+def _free_by_rank(ref: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rank -> page-index permutation of the free pages, free count)."""
+    P = ref.shape[0]
+    free = ref == 0
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1  # (P,) rank of each free page
+    by_rank = jnp.full((P,), P, jnp.int32).at[
+        jnp.where(free, rank, P)
+    ].set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    return by_rank, free.sum()
+
+
+def alloc(state: PageState, slots: jnp.ndarray, n_blocks: jnp.ndarray,
+          n_shared: Optional[jnp.ndarray] = None,
+          shared_pages: Optional[jnp.ndarray] = None):
+    """Map pages for a wave of K freshly-admitted slots.
+
+    slots: (K,) int32 target slots; rows with ``slot == n_slots`` are wave
+      padding and allocate nothing.
+    n_blocks: (K,) int32 total blocks each request needs (shared included).
+    shared_pages: (SB,) int32 pages of the registered shared prefix, mapped
+      read-only (refcounted) at blocks [0, n_shared[i]); None => no sharing.
+    n_shared: (K,) int32 leading shared blocks per row (0 => fresh request).
+
+    Returns ``(new_state, ok)``. ``ok`` is a scalar bool; when False (free
+    list exhausted) the state comes back UNCHANGED so the caller can requeue
+    the wave — no partial allocation ever lands.
+    """
+    P = state.ref.shape[0]
+    S, MB = state.block_tables.shape
+    K = slots.shape[0]
+    if n_shared is None:
+        n_shared = jnp.zeros((K,), jnp.int32)
+    blk = jnp.arange(MB, dtype=jnp.int32)[None, :]
+    valid = (slots < S)[:, None]
+    is_shared = valid & (blk < n_shared[:, None])
+    need_new = valid & (blk >= n_shared[:, None]) & (blk < n_blocks[:, None])
+
+    by_rank, n_free = _free_by_rank(state.ref)
+    ok = need_new.sum() <= n_free
+    # the j-th needed (row-major) block gets the j-th free page
+    want = jnp.cumsum(need_new.reshape(-1).astype(jnp.int32)) - 1
+    new_pages = jnp.where(
+        need_new.reshape(-1),
+        by_rank.at[want].get(mode="fill", fill_value=P),
+        P,
+    ).reshape(K, MB)
+
+    if shared_pages is None or shared_pages.shape[0] == 0:
+        shared_rows = jnp.full((K, MB), P, jnp.int32)
+    else:
+        SB = shared_pages.shape[0]
+        shared_rows = jnp.full((K, MB), P, jnp.int32).at[:, :SB].set(
+            jnp.broadcast_to(shared_pages.astype(jnp.int32), (K, SB)))
+    rows = jnp.where(is_shared, shared_rows, new_pages)  # (K, MB)
+
+    ref = state.ref.at[rows.reshape(-1)].add(
+        (is_shared | need_new).reshape(-1).astype(jnp.int32), mode="drop")
+    tables = state.block_tables.at[slots].set(rows, mode="drop")
+    new = PageState(ref=ref, block_tables=tables)
+    state = jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b), new, state)
+    return state, ok
+
+
+def release(state: PageState, slots: jnp.ndarray) -> PageState:
+    """Unmap released slots; their pages return to the free list in the same
+    scatter that clears the tables. Refcounted (shared-prefix) pages survive
+    until the last mapping — including the registry's permanent hold — drops."""
+    P = state.ref.shape[0]
+    rows = state.block_tables.at[slots].get(mode="fill", fill_value=P)
+    flat = rows.reshape(-1)
+    ref = state.ref.at[flat].add(-jnp.ones_like(flat), mode="drop")
+    tables = state.block_tables.at[slots].set(P, mode="drop")
+    return PageState(ref=ref, block_tables=tables)
+
+
+def reserve(state: PageState, n: int):
+    """Take the first ``n`` free pages with a +1 ref that no slot owns (the
+    shared-prefix registry's permanent hold). ``n`` is static. Returns
+    ``(state, pages (n,), ok)``; state unchanged when ok is False."""
+    P = state.ref.shape[0]
+    by_rank, n_free = _free_by_rank(state.ref)
+    ok = n <= n_free
+    pages = by_rank.at[jnp.arange(n, dtype=jnp.int32)].get(
+        mode="fill", fill_value=P)
+    ref = state.ref.at[pages].add(1, mode="drop")
+    new = PageState(ref=ref, block_tables=state.block_tables)
+    state = jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b), new, state)
+    return state, pages, ok
+
+
+def check_invariants(state: PageState, shared_pages=(), reserved=0) -> None:
+    """Host-side sanity checks (tests only).
+
+    * no page is mapped by two live slots unless it is a shared-prefix page
+    * a slot never maps the same page twice
+    * ref[page] == #mappings (+1 permanent hold for each registered page)
+    * free pages (ref == 0) are mapped nowhere
+    """
+    import numpy as np
+
+    ref = np.asarray(state.ref)
+    bt = np.asarray(state.block_tables)
+    P = ref.shape[0]
+    assert (ref >= 0).all(), "negative refcount"
+    counts = np.zeros(P, np.int64)
+    for s in range(bt.shape[0]):
+        mapped = bt[s][bt[s] < P]
+        assert len(set(mapped.tolist())) == len(mapped), \
+            f"slot {s} maps a page twice"
+        np.add.at(counts, mapped, 1)
+    shared = {int(p) for p in np.asarray(shared_pages).reshape(-1)}
+    for p in range(P):
+        hold = 1 if p in shared else 0
+        assert ref[p] == counts[p] + hold, \
+            f"page {p}: ref {ref[p]} != {counts[p]} mappings + {hold} hold"
+        if counts[p] > 1:
+            assert p in shared, \
+                f"page {p} mapped by {counts[p]} slots but not shared"
+        if ref[p] == 0:
+            assert counts[p] == 0
+    assert int((ref > 0).sum()) >= reserved

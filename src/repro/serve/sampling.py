@@ -30,6 +30,12 @@ def sample_tokens(logits, key, sc: SamplingConfig):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / sc.temperature
     if sc.top_k > 0:
-        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
+        # keep EXACTLY top_k candidates: comparing against the k-th value
+        # (`logits < kth`) would keep every logit tied with it, silently
+        # inflating k. lax.top_k breaks ties by lowest index, so masking by
+        # its returned indices is deterministic.
+        _, idx = jax.lax.top_k(logits, sc.top_k)
+        keep = jnp.zeros(logits.shape, bool).at[
+            jnp.arange(logits.shape[0])[:, None], idx].set(True)
+        logits = jnp.where(keep, logits, -jnp.inf)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

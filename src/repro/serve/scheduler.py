@@ -14,6 +14,7 @@ iteration-level scheduling of Orca/vLLM-style engines.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -25,10 +26,18 @@ from repro.serve.engine import Engine, _bucket_len
 
 
 def percentile(xs, p: float) -> float:
-    """Nearest-rank percentile (p in [0, 1]); 0.0 on empty input. Shared by
-    the serve CLI and benchmarks so their p50/p95 always agree."""
+    """Nearest-rank percentile (p in [0, 1]): the smallest value with at
+    least p*n samples <= it, i.e. rank ceil(p*n) (1-based). 0.0 on empty
+    input. Shared by the serve CLI and benchmarks so their p50/p95 always
+    agree. (int(len(xs)*p) would be off by one: p95 of 20 samples must be
+    the 19th value, not the max.)"""
     xs = sorted(xs)
-    return xs[min(int(len(xs) * p), len(xs) - 1)] if xs else 0.0
+    if not xs:
+        return 0.0
+    # the 1e-9 nudge keeps float products like 0.07 * 100 == 7.000...001
+    # from overshooting the true integer rank by one ulp
+    rank = math.ceil(p * len(xs) - 1e-9)
+    return xs[min(max(rank - 1, 0), len(xs) - 1)]
 
 
 @dataclass
@@ -54,10 +63,12 @@ class Scheduler:
         self.engine = engine
         n = engine.cfg.n_slots
         self._slot_rid: List[Optional[int]] = [None] * n
+        self.peak_live = 0  # max concurrently-live slots seen during run()
 
     def run(self, requests: List[Request], progress=None) -> List[Completion]:
         eng = self.engine
         eng.reset()
+        self.peak_live = 0  # per-run metric; a Scheduler may be reused
         queue = deque(requests)
         t_submit = {r.rid: time.perf_counter() for r in requests}
         partial: Dict[int, List[int]] = {}
@@ -99,25 +110,50 @@ class Scheduler:
             # -- 3: admission, one wave per prompt-length bucket ------------
             free = [s for s, r in enumerate(self._slot_rid) if r is None]
             if free and queue:
-                take = [queue.popleft() for _ in range(min(len(free), len(queue)))]
+                # take requests while slots AND KV pages last; a request that
+                # doesn't fit the paged pool stays queued and is retried after
+                # the next harvest frees pages (admission never partially
+                # lands — see Engine.admit_wave / PagesExhausted)
+                take: List[Request] = []
+                budget = eng.free_pages
+                while queue and len(take) < len(free):
+                    need = eng.pages_needed(queue[0].tokens, queue[0].max_new)
+                    if need > budget:
+                        if not take and all(r is None for r in self._slot_rid):
+                            raise ValueError(
+                                f"request {queue[0].rid} needs {need} KV pages"
+                                f" > pool capacity {budget}; it can never be "
+                                "admitted")
+                        break
+                    budget -= need
+                    take.append(queue.popleft())
                 waves: Dict[int, List[Request]] = {}
                 for r in take:
                     b = _bucket_len(eng.cfg.prefill_buckets, len(r.tokens),
                                     eng.cfg.max_len)
                     waves.setdefault(b, []).append(r)
+                t_round = time.perf_counter()  # admission round began
                 for b, wave in sorted(waves.items()):
                     slots = [free.pop(0) for _ in wave]
-                    t0 = time.perf_counter()
+                    t_wave = time.perf_counter()
                     first = eng.admit_wave([r.tokens for r in wave], slots,
                                            [r.max_new for r in wave])
-                    t1 = time.perf_counter()
+                    t_first = time.perf_counter()  # host has the wave's tokens
+                    # TTFT = queue wait until this round + the request's OWN
+                    # wave's prefill; bucket order within a round is an
+                    # engine artifact, so a later wave must not be charged
+                    # for the earlier waves' prefill time
                     for r, s, f in zip(wave, slots, first):
                         self._slot_rid[s] = r.rid
                         partial[r.rid] = [int(f)]
-                        ttft[r.rid] = t1 - t_submit[r.rid]
+                        ttft[r.rid] = (t_round - t_submit[r.rid]) \
+                            + (t_first - t_wave)
                         tpot[r.rid] = []
                 # instantly-finished requests (max_new==1 / prefill EOS) are
                 # swept up by the finished flags of the next harvest
+            self.peak_live = max(
+                self.peak_live,
+                sum(r is not None for r in self._slot_rid))
 
             # -- 4: next decode chunk (single jitted program) ---------------
             if any(rid is not None for rid in self._slot_rid):

@@ -1,0 +1,384 @@
+"""Paged KV-cache pool: allocator properties, paged-vs-dense bit-exact
+decode parity, shared-prefix reuse, page-exhaustion requeue — plus the
+serve-path percentile and top-k tie fixes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.configs import get_config
+from repro.models.layers import KV_QSCALE
+from repro.models.model import Model
+from repro.serve import (Engine, EngineConfig, PagesExhausted, Request,
+                         SamplingConfig, sample_tokens)
+from repro.serve import paging as PAGE
+from repro.serve.scheduler import Scheduler, percentile
+from test_serve import assert_greedy_continuation
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# percentile: nearest-rank ceil(p*n) (satellite: off-by-one fix)
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 21))  # 20 samples: 1..20
+    assert percentile(xs, 0.50) == 10  # rank ceil(.5*20)=10 -> 10th value
+    assert percentile(xs, 0.95) == 19  # NOT the max: rank 19, not 20
+    assert percentile(xs, 1.00) == 20
+    assert percentile(xs, 0.0) == 1
+    assert percentile([], 0.95) == 0.0
+    assert percentile([7.0], 0.95) == 7.0
+    # 100 samples: p95 must be the 95th value, p50 the 50th
+    ys = list(range(100))
+    assert percentile(ys, 0.95) == 94
+    assert percentile(ys, 0.50) == 49
+    # 0.07 * 100 == 7.000000000000001 in floats: rank must still be 7
+    assert percentile(list(range(1, 101)), 0.07) == 7
+
+
+# ---------------------------------------------------------------------------
+# top-k sampling: ties must not inflate k (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_topk_ties_mask_to_exactly_k():
+    # every logit tied: candidate set must still be exactly top_k wide, and
+    # lax.top_k's lowest-index tie-break makes it {0, 1, ..., k-1}
+    logits = jnp.zeros((16, 32))
+    sc = SamplingConfig(temperature=1.0, top_k=4)
+    for s in range(8):
+        toks = np.asarray(sample_tokens(logits, jax.random.PRNGKey(s), sc))
+        assert (toks < 4).all(), f"tie leaked past top_k: {toks}"
+
+
+def test_topk_partial_tie_with_kth_value():
+    # top_k=2 over [5, 5, 5, 0, ...]: the k-th value (5) is tied with index 2,
+    # which must be EXCLUDED — only indices {0, 1} may ever be sampled
+    row = np.zeros(16, np.float32)
+    row[:3] = 5.0
+    logits = jnp.asarray(np.tile(row, (8, 1)))
+    sc = SamplingConfig(temperature=1.0, top_k=2)
+    seen = set()
+    for s in range(16):
+        toks = np.asarray(sample_tokens(logits, jax.random.PRNGKey(s), sc))
+        seen.update(toks.tolist())
+    assert seen <= {0, 1}, f"effective k exceeded top_k: sampled {seen}"
+    # deterministic under a fixed key
+    a = sample_tokens(logits, jax.random.PRNGKey(3), sc)
+    b = sample_tokens(logits, jax.random.PRNGKey(3), sc)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# page allocator properties (via the optional-hypothesis shim)
+# ---------------------------------------------------------------------------
+
+def _rand_wave(rng, n_slots, max_blocks, k):
+    slots = rng.choice(n_slots, size=k, replace=False).astype(np.int32)
+    n_blocks = rng.integers(1, max_blocks + 1, size=k).astype(np.int32)
+    return jnp.asarray(slots), jnp.asarray(n_blocks)
+
+
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(0, 1000))
+def test_alloc_release_roundtrip_restores_free_count(n_slots, max_blocks, seed):
+    rng = np.random.default_rng(seed)
+    n_pages = n_slots * max_blocks
+    state = PAGE.init_pages(n_pages, n_slots, max_blocks)
+    k = int(rng.integers(1, n_slots + 1))
+    slots, n_blocks = _rand_wave(rng, n_slots, max_blocks, k)
+    state, ok = PAGE.alloc(state, slots, n_blocks)
+    assert bool(ok)
+    PAGE.check_invariants(state)
+    used = int(np.asarray(n_blocks).sum())
+    assert int(np.asarray((state.ref == 0).sum())) == n_pages - used
+    # no page mapped twice across live slots (check_invariants also asserts
+    # per-slot uniqueness and exact refcounts)
+    bt = np.asarray(state.block_tables)
+    mapped = bt[bt < n_pages]
+    assert len(set(mapped.tolist())) == len(mapped)
+    state = PAGE.release(state, slots)
+    PAGE.check_invariants(state)
+    assert int(np.asarray((state.ref == 0).sum())) == n_pages, \
+        "release must return every page to the free list"
+    assert (np.asarray(state.block_tables) == n_pages).all()
+
+
+@given(st.integers(0, 500))
+def test_alloc_exhaustion_leaves_state_unchanged(seed):
+    rng = np.random.default_rng(seed)
+    state = PAGE.init_pages(3, 4, 4)  # 3 pages, requests can want up to 8
+    slots = jnp.asarray([0, 1], jnp.int32)
+    n_blocks = jnp.asarray([int(rng.integers(1, 5)), 4], jnp.int32)
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state, ok = PAGE.alloc(state, slots, n_blocks)
+    if int(np.asarray(n_blocks).sum()) > 3:
+        assert not bool(ok)
+        after = jax.tree_util.tree_map(np.asarray, state)
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(after)):
+            np.testing.assert_array_equal(a, b)
+    else:
+        assert bool(ok)
+        PAGE.check_invariants(state)
+
+
+def test_alloc_padding_rows_and_shared_refcounts():
+    state = PAGE.init_pages(8, 4, 4)
+    state, pages, ok = PAGE.reserve(state, 2)  # shared-prefix hold
+    assert bool(ok)
+    shared = jnp.asarray(np.asarray(pages), jnp.int32)
+    # two real rows sharing the 2-page prefix + one padding row (slot 4)
+    slots = jnp.asarray([0, 2, 4], jnp.int32)
+    n_blocks = jnp.asarray([3, 4, 4], jnp.int32)
+    n_shared = jnp.asarray([2, 2, 0], jnp.int32)
+    state, ok = PAGE.alloc(state, slots, n_blocks, n_shared, shared)
+    assert bool(ok)
+    PAGE.check_invariants(state, shared_pages=np.asarray(pages))
+    ref = np.asarray(state.ref)
+    for p in np.asarray(pages):
+        assert ref[p] == 3, "hold + two mappings"  # shared across live slots
+    bt = np.asarray(state.block_tables)
+    assert (bt[0][:2] == np.asarray(pages)).all()
+    assert (bt[2][:2] == np.asarray(pages)).all()
+    assert (bt[1] == 8).all() and (bt[3] == 8).all()  # untouched slots
+    # padding row allocated nothing: 2 reserved + 1 + 2 fresh pages in use
+    assert int((ref == 0).sum()) == 8 - 2 - 3
+    state = PAGE.release(state, jnp.asarray([0, 2], jnp.int32))
+    PAGE.check_invariants(state, shared_pages=np.asarray(pages))
+    ref = np.asarray(state.ref)
+    for p in np.asarray(pages):
+        assert ref[p] == 1, "registry hold must survive slot release"
+    assert int((ref == 0).sum()) == 6
+
+
+# ---------------------------------------------------------------------------
+# paged vs dense: bit-exact decode parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_paged_decode_step_bitexact_vs_dense(dense, kv_dtype):
+    """Same KV content, dense (B, max_len) layout vs paged arena + block
+    tables: decode_step logits must be EXACTLY equal (float KV) — the paged
+    gather is a relayout, not a different computation."""
+    base_model, params = dense
+    cfg = base_model.cfg
+    model = Model(cfg, kv_dtype=kv_dtype)
+    B, P, ps, MB = 3, 8, 4, 4  # max_len = MB * ps = 16
+    toks = jnp.asarray(_prompts(cfg, B, P, seed=5))
+    _, _, (k_s, v_s) = model.forward(params, {"tokens": toks},
+                                     return_cache=True)
+
+    dense_cache = model.init_cache(B, MB * ps)
+    if dense_cache[0].dtype == jnp.int8:
+        q = lambda a: jnp.clip(jnp.round(a.astype(jnp.float32) * KV_QSCALE),
+                               -127, 127).astype(jnp.int8)
+        k_s, v_s = q(k_s), q(v_s)
+    ck = dense_cache[0].at[:, :, :P].set(k_s.astype(dense_cache[0].dtype))
+    cv = dense_cache[1].at[:, :, :P].set(v_s.astype(dense_cache[1].dtype))
+
+    n_pages = B * MB
+    pk, pv = model.init_paged_cache(n_pages, ps)
+    bt = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, MB)
+    pos = jnp.arange(P, dtype=jnp.int32)[None, :]
+    page = jnp.take_along_axis(bt, jnp.broadcast_to(pos // ps, (B, P)), axis=1)
+    off = jnp.broadcast_to(pos % ps, (B, P))
+    pk = pk.at[:, page, off].set(k_s.astype(pk.dtype))
+    pv = pv.at[:, page, off].set(v_s.astype(pv.dtype))
+
+    tok = jnp.asarray([3, 7, 11], jnp.int32)
+    posv = jnp.full((B,), P, jnp.int32)
+    lg_dense, _ = model.decode_step(params, {"token": tok, "pos": posv},
+                                    (ck, cv))
+    lg_paged, _ = model.decode_step(
+        params, {"token": tok, "pos": posv, "block_table": bt}, (pk, pv))
+    np.testing.assert_array_equal(np.asarray(lg_dense), np.asarray(lg_paged))
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_paged_engine_matches_dense_engine(family, dense):
+    if family == "moe":
+        cfg = get_config("deepseek-moe-16b").reduced()
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=cfg.num_experts / cfg.top_k)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+    else:
+        model, params = dense
+    cfg = model.cfg
+    B, P, G = 4, 8, 6
+    prompts = _prompts(cfg, B, P)
+    mk = lambda paged: Engine(
+        model, params,
+        EngineConfig(n_slots=B, max_len=32, chunk=G - 1, prefill_buckets=(P,),
+                     paged=paged, page_size=8))
+    out_d = mk(False).generate(prompts, G)
+    out_p = mk(True).generate(prompts, G)
+    np.testing.assert_array_equal(out_d, out_p)
+    for b in range(B):
+        assert_greedy_continuation(model, params, prompts[b], out_p[b])
+
+
+def test_paged_scheduler_stream_matches_dense(dense):
+    """Mixed-length continuous-batching stream: paged and dense pools must
+    produce identical per-request tokens (greedy)."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 14))).astype(np.int32),
+                    int(rng.integers(1, 8)))
+            for rid in range(9)]
+    mk = lambda paged: Engine(
+        model, params,
+        EngineConfig(n_slots=4, max_len=32, chunk=4, prefill_buckets=(8, 16),
+                     paged=paged, page_size=8))
+    out = {}
+    for paged in (False, True):
+        eng = mk(paged)
+        comps = Scheduler(eng).run(reqs)
+        out[paged] = {c.rid: list(c.tokens) for c in comps}
+        if paged:
+            PAGE.check_invariants(eng.pstate)
+            assert eng.free_pages == eng.cfg.pool_pages, "pages leaked"
+    assert out[False] == out[True]
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix reuse
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_stream(dense):
+    """Requests sharing a registered system-prompt prefix: admission maps
+    the prefetched pages (skipping their prefill), outputs stay the exact
+    greedy continuation, refcounts track live mappings, nothing leaks."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=48, chunk=4,
+                              prefill_buckets=(8, 16), paged=True,
+                              page_size=8, n_pages=24))
+    assert eng.register_prefix(prefix) == 16
+    assert eng.free_pages == 22
+    reqs = []
+    for rid in range(5):
+        suff = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(3, 9))).astype(np.int32)
+        reqs.append(Request(rid, np.concatenate([prefix, suff]),
+                            int(rng.integers(2, 6))))
+    reqs.append(Request(5, rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                        3))  # one fresh request mixed in
+
+    def check(_c):
+        PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+
+    comps = Scheduler(eng).run(reqs, progress=check)
+    assert sorted(c.rid for c in comps) == list(range(6))
+    # the 5 prefix requests skipped 16 prefill tokens each
+    assert eng.stats["shared_tokens_saved"] == 5 * 16
+    for c in comps:
+        r = reqs[c.rid]
+        assert len(c.tokens) == r.max_new
+        assert_greedy_continuation(model, params, r.tokens, c.tokens)
+    # drained: only the registry's hold remains
+    assert eng.free_pages == 22
+    ref = np.asarray(eng.pstate.ref)
+    assert (ref[np.asarray(eng.prefix_pages)] == 1).all()
+
+
+def test_shared_prefix_refcount_while_live(dense):
+    """While two prefix-sharing requests are live, the prefix pages must be
+    mapped by both slots (ref == 2 mappings + 1 hold) — and a prompt equal
+    to the bare prefix falls back to fresh prefill (needs a suffix token)."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=32, chunk=4,
+                              prefill_buckets=(8, 16), paged=True,
+                              page_size=8, n_pages=10))
+    eng.register_prefix(prefix)
+    p1 = np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 3).astype(np.int32)])
+    p2 = np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
+    eng.admit_wave([p1, p2], [0, 1], [4, 4])
+    ref = np.asarray(eng.pstate.ref)
+    assert ref[int(eng.prefix_pages[0])] == 3  # hold + 2 live mappings
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+    assert eng._shared_len(prefix) == 0, "bare-prefix prompt has no suffix"
+    eng.release([0, 1])
+    assert np.asarray(eng.pstate.ref)[int(eng.prefix_pages[0])] == 1
+
+
+def test_register_prefix_validation(dense):
+    model, params = dense
+    eng_dense = Engine(model, params,
+                       EngineConfig(n_slots=2, max_len=16, paged=False,
+                                    prefill_buckets=(8,)))
+    with pytest.raises(ValueError, match="paged"):
+        eng_dense.register_prefix(np.zeros(8, np.int32))
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=16, paged=True, page_size=8,
+                              prefill_buckets=(8,)))
+    assert eng.register_prefix(np.zeros(4, np.int32)) == 0  # < one page
+    with pytest.raises(ValueError, match="no room"):
+        eng.register_prefix(np.zeros(16, np.int32))
+    assert eng.register_prefix(np.zeros(8, np.int32)) == 8
+    with pytest.raises(ValueError, match="already registered"):
+        eng.register_prefix(np.zeros(8, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# page exhaustion -> requeue (admission can now fail and retry)
+# ---------------------------------------------------------------------------
+
+def test_page_exhaustion_requeues_until_done(dense):
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    # 6 pages of 8 = 48 cached tokens total; slots alone would admit 4
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=32, chunk=4,
+                              prefill_buckets=(8, 16), paged=True,
+                              page_size=8, n_pages=6))
+    reqs = [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(6, 14))).astype(np.int32),
+                    int(rng.integers(2, 7)))
+            for rid in range(7)]
+    sched = Scheduler(eng)
+    comps = sched.run(reqs)
+    assert sorted(c.rid for c in comps) == list(range(7))
+    assert sched.peak_live < 4, "6 pages cannot hold 4 of these requests"
+    assert eng.free_pages == 6
+    for c in comps:
+        r = reqs[c.rid]
+        assert_greedy_continuation(model, params, r.tokens, c.tokens)
+
+
+def test_admit_wave_overflow_raises(dense):
+    model, params = dense
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=32, paged=True, page_size=8,
+                              n_pages=2, prefill_buckets=(16,)))
+    with pytest.raises(PagesExhausted):
+        eng.admit_wave([np.zeros(16, np.int32)], [0], [8])
+    # nothing was admitted or leaked
+    assert eng.free_pages == 2
+    assert not np.asarray(eng.state.active).any()

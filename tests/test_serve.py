@@ -164,6 +164,41 @@ def test_eos_terminates_early(dense):
     np.testing.assert_array_equal(out, ref[: k + 1])
 
 
+def test_generate_eos_masks_post_eos_tokens(dense):
+    """Early-EOS batch through Engine.generate: frozen slots re-feed their
+    last token on device, but those repeats must NOT leak to the caller —
+    the returned rows stop at EOS and are padded with eos_id."""
+    model, params = dense
+    cfg = model.cfg
+    B, P, G = 4, 8, 8
+    prompts = _prompts(cfg, B, P, seed=11)
+    mk = lambda eos: Engine(
+        model, params,
+        EngineConfig(n_slots=B, max_len=32, chunk=G - 1, prefill_buckets=(P,),
+                     eos_id=eos))
+    ref = mk(None).generate(prompts, G)
+    # pick a token some row emits mid-stream for the first time: with that
+    # as eos_id the row must freeze there while the others keep going
+    eos = row = k = None
+    for b in range(B):
+        for i in range(1, G - 1):
+            if ref[b, i] not in ref[b, :i]:
+                eos, row, k = int(ref[b, i]), b, i
+                break
+        if eos is not None:
+            break
+    assert eos is not None
+    out = mk(eos).generate(prompts, G)
+    assert out.shape == (B, G)
+    np.testing.assert_array_equal(out[row, : k + 1], ref[row, : k + 1])
+    assert (out[row, k + 1:] == eos).all(), "post-EOS tokens leaked"
+    for b in range(B):  # every row: exact up to its own EOS, padding after
+        hits = np.where(ref[b] == eos)[0]
+        stop = int(hits[0]) if len(hits) else G - 1
+        np.testing.assert_array_equal(out[b, : stop + 1], ref[b, : stop + 1])
+        assert (out[b, stop + 1:] == eos).all()
+
+
 def test_oversized_request_rejected(dense):
     model, params = dense
     eng = Engine(model, params, EngineConfig(n_slots=2, max_len=16,
