@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast ci bench bench-serving serve
+.PHONY: test test-fast test-kernels ci bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -11,6 +11,13 @@ test:
 # attention / allocator tests are NOT slow-marked, so they run here too
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# kernel lane: the Pallas kernels (interpret mode on CPU) + the paged-pool
+# allocator/registry suites — the fast loop when touching kernels/ or
+# serve/paging.py
+test-kernels:
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_paged_attention.py \
+	    tests/test_paging.py
 
 ci: test-fast
 

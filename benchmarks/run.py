@@ -86,6 +86,14 @@ def main() -> None:
                   f"{r['paged_slots_ratio'] >= 2.0}")
             print(f"claim,table9_paged_slots_ratio,"
                   f"{r['paged_slots_ratio']:.1f}x")
+        if "paged_attn_bytes" in r:
+            # kernel KV traffic must follow cached tokens and undercut the
+            # gather's fixed n_slots * max_blocks * page_size ceiling
+            b = r["paged_attn_bytes"]
+            ok = b[25] < b[50] < b[100] <= r["gather_bytes"]
+            print(f"claim,table9_paged_attn_bytes_scale_with_cached,{ok}")
+            print(f"claim,table9_paged_attn_bytes_25pct_frac,"
+                  f"{b[25] / r['gather_bytes']:.2f}")
 
 
 if __name__ == "__main__":

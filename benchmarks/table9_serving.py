@@ -17,7 +17,12 @@ measures:
   5. dense KV pool vs the paged pool at EQUAL KV HBM: concurrent slots,
      bytes per concurrent request, tokens/s — plus shared-prefix admission
      (a registered system prompt is prefetched once; its pages are mapped,
-     not recomputed, into every request that starts with it).
+     not recomputed, into every request that starts with it),
+  6. the Pallas paged-attention decode kernel vs the materialising gather:
+     greedy parity, decode-step wall time, and per-step KV bytes touched at
+     25/50/100% pool occupancy — the kernel's traffic must scale with the
+     tokens actually cached, the gather's is pinned at
+     n_slots * max_blocks * page_size.
 
 Rows land in the usual CSV; a JSONL record for results/report.py
 --serving is written next to the other results.
@@ -235,6 +240,61 @@ def run(model=None, params=None):
                paged_stream_tok_per_s=p["tok_per_s"],
                shared_prefix_tokens_skipped=s["shared_tokens_saved"])
 
+    # 6: paged-attention kernel vs gather decode -----------------------------
+    ps6 = 8
+    max_len6 = PROMPT + GEN
+    mk6 = lambda kernel: Engine(model, params, EngineConfig(
+        n_slots=BATCH, max_len=max_len6, chunk=4,
+        prefill_buckets=(max(PROMPT // 4, 1), PROMPT // 2, PROMPT),
+        paged=True, page_size=ps6, paged_kernel=kernel))
+    eng_k, eng_g = mk6(True), mk6(False)
+    MB6 = eng_k.cfg.max_blocks
+    kv_itemsize = jax.tree_util.tree_leaves(eng_k.cache)[0].dtype.itemsize
+    page_bytes = (ps6 * cfg.num_kv_heads * cfg.resolved_head_dim
+                  * kv_itemsize * 2 * cfg.num_layers)  # K+V, all layers
+    def admit_at_occupancy(eng, frac):
+        """Fill every slot so the pool holds ~frac of its pages; returns
+        per-step KV bytes the kernel actually walks (ceil((pos+1)/ps) pages
+        per slot — cached tokens, NOT the max_blocks*page_size ceiling).
+        Seeded per occupancy so the kernel and gather engines see
+        IDENTICAL prompts (their decodes are asserted token-equal)."""
+        eng.reset()
+        rng6 = np.random.default_rng(19 + int(frac * 100))
+        total = max(int(frac * max_len6), ps6)
+        plen = max(total - 4, 1)
+        prompts = [rng6.integers(0, cfg.vocab_size, plen).astype(np.int32)
+                   for _ in range(BATCH)]
+        eng.admit_wave(prompts, list(range(BATCH)), [5] * BATCH)
+        pos = np.asarray(eng.state.pos)
+        return int(np.ceil((pos + 1) / ps6).sum()) * page_bytes
+
+    occ_bytes = {int(f * 100): admit_at_occupancy(eng_k, f)
+                 for f in (0.25, 0.5, 1.0)}
+    gather_bytes = BATCH * MB6 * page_bytes
+    for occ, kb in occ_bytes.items():
+        rows.append((f"table9/paged_attn_step_kv_bytes_{occ}pct", 0,
+                     f"{kb / 1e3:.0f}KB (gather {gather_bytes / 1e3:.0f}KB)"))
+        rec[f"paged_attn_step_kv_bytes_{occ}"] = kb
+    rec["gather_step_kv_bytes"] = gather_bytes
+
+    def time_decode(eng):
+        admit_at_occupancy(eng, 0.5)
+        _ = eng.harvest(*eng.decode_chunk(4))  # warm the trace
+        admit_at_occupancy(eng, 0.5)
+        t0 = time.perf_counter()
+        toks, valid = eng.decode_chunk(4)
+        t, _, _, _ = eng.harvest(toks, valid)
+        return t, time.perf_counter() - t0
+
+    toks_k, dt_k = time_decode(eng_k)
+    toks_g, dt_g = time_decode(eng_g)
+    assert (toks_k == toks_g).all(), "kernel decode diverged from gather"
+    tps_k = BATCH * 4 / dt_k
+    tps_g = BATCH * 4 / dt_g
+    rows.append(("table9/paged_attn_kernel_tok_per_s", 0, f"{tps_k:.0f}"))
+    rows.append(("table9/paged_attn_gather_tok_per_s", 0, f"{tps_g:.0f}"))
+    rec.update(paged_attn_tok_per_s=tps_k, gather_decode_tok_per_s=tps_g)
+
     emit(rows)
     try:
         os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)), exist_ok=True)
@@ -243,6 +303,7 @@ def run(model=None, params=None):
     except OSError:
         pass
     return {"speedup": speedup, "paged_slots_ratio": slots_ratio,
+            "paged_attn_bytes": occ_bytes, "gather_bytes": gather_bytes,
             "rows": rows, "record": rec}
 
 

@@ -56,8 +56,8 @@ def serving_table(path):
     rows = ["| arch | batch | loop tok/s | engine tok/s | speedup | "
             "pruned tok/s | 2:4 weight ratio | req/s | TTFT p50/p95 | "
             "TPOT p50/p95 | paged slots (equal HBM) | KV bytes/slot | "
-            "prefix tokens skipped |",
-            "|" + "---|" * 13]
+            "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather |",
+            "|" + "---|" * 14]
     for line in open(path):
         r = json.loads(line)
         if "paged_concurrent_slots" in r:
@@ -69,6 +69,14 @@ def serving_table(path):
             skipped = str(r.get("shared_prefix_tokens_skipped", 0))
         else:
             paged = bps = skipped = "-"
+        if "gather_step_kv_bytes" in r:
+            # the paged-attention claim: per-step KV traffic follows the
+            # cached tokens (25 < 50 < 100%), not the gather's fixed ceiling
+            kb = "/".join(f"{r[f'paged_attn_step_kv_bytes_{o}'] / 1e3:.0f}"
+                          for o in (25, 50, 100))
+            attn = f"{kb}KB vs {r['gather_step_kv_bytes'] / 1e3:.0f}KB"
+        else:
+            attn = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
@@ -76,7 +84,7 @@ def serving_table(path):
             f"{r['req_per_s']:.1f} | "
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
             f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
-            f"{paged} | {bps} | {skipped} |")
+            f"{paged} | {bps} | {skipped} | {attn} |")
     return "\n".join(rows)
 
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.masked_matmul import masked_matmul_pallas
 from repro.kernels.nm_mask import nm_mask_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.sparse_matmul24 import sparse_matmul24_pallas
 
 
@@ -39,6 +40,16 @@ def sparse_matmul24(x, vals, idx):
 def masked_matmul(x, w, mask):
     """y = x @ (w * mask) with the mask applied at tile load."""
     return masked_matmul_pallas(x, w, mask, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "kv_qscale"))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    scale: float, kv_qscale=None):
+    """Single-query decode attention straight off the paged KV arena.
+    See kernels/paged_attention.py for the grid/layout contract."""
+    return paged_attention_pallas(q, k_pages, v_pages, block_table, lengths,
+                                  scale=scale, kv_qscale=kv_qscale,
+                                  interpret=_interpret_default())
 
 
 # ---------------------------------------------------------------------------

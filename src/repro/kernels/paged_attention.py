@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: single-query paged-attention decode over a KV page arena.
+
+The serve engine's paged pool (serve/paging.py) stores KV in a shared
+(n_pages, page_size, KV, hd) arena per layer, with per-slot block tables
+mapping position-ordered blocks to pages. Since PR 2 the decode read was a
+``.at[block_table].get`` gather that materialises the full
+(B, max_blocks*page_size) KV view in HBM every step — exactly the traffic
+the paged pool exists to avoid. This kernel computes the attention directly
+against the arena, vLLM-style (Kwon et al., PagedAttention): the grid walks
+each slot's block table page-by-page and folds every page into a flash-style
+online-softmax carry (Dao et al.), so per-step KV reads are O(tokens
+actually cached) instead of O(max_blocks * page_size).
+
+Grid / layout contract
+----------------------
+  grid = (B, max_blocks); the page axis is innermost, so the m/l/acc
+  scratch carries one slot's online softmax across its pages (the output
+  block revisits, like the K loop of kernels/sparse_matmul24.py).
+
+  scalar prefetch (PrefetchScalarGridSpec): block_table (B, MB) int32 and
+  lengths (B,) int32 — prefetched so the k/v BlockSpec index_map can steer
+  each HBM->VMEM page fetch straight off the table:
+
+      page(b, j) = block_table[b, j]   if j*page_size < lengths[b] (clamped)
+                   0                   otherwise (dead fetch, masked off)
+
+  q:        (B, KV, G, hd)            one query token per slot, GQA-grouped
+  k/v:      (n_pages, page_size, KV, hd)  the shared arena (fp32/bf16/int8)
+  block_table: (B, MB) int32          ``n_pages`` == unmapped block
+  lengths:  (B,) int32                valid cache tokens per slot, i.e.
+                                      cache_index + 1 with this step's KV
+                                      already scattered into the arena
+  out:      (B, KV, G, hd)            q.dtype
+
+Semantics match the retained gather path bit-for-bit in structure: positions
+``>= lengths[b]`` are masked with -inf BEFORE the softmax, while an
+*unmapped* page whose positions are still inside ``lengths[b]`` (a frozen
+slot whose table was released) contributes zero K/V — the ``mode="fill"``
+gather semantics — so its logits enter the softmax as zeros rather than
+being skipped. int8 arenas are dequantized in-kernel (``kv_qscale``),
+mirroring the symmetric KV_QSCALE quantization of models/layers.py. Rows
+with ``lengths[b] == 0`` produce a zero output vector (the gather path has
+no such case; decode always has length >= 1).
+
+``interpret=True`` (the off-TPU default via kernels/ops.py) runs the same
+body through the Pallas interpreter for CPU correctness testing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page_size, n_pages, scale, kv_qscale):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * page_size < length)
+    def _fold_page():
+        q = q_ref[0].astype(jnp.float32)          # (KV, G, hd)
+        k = k_ref[0]                              # (page_size, KV, hd)
+        v = v_ref[0]
+        if kv_qscale is not None:
+            k = k.astype(jnp.float32) / kv_qscale
+            v = v.astype(jnp.float32) / kv_qscale
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        # unmapped block inside the valid length: zero KV (gather fill),
+        # NOT a skip — the zero logits must still enter the softmax
+        mapped = (bt_ref[b, j] < n_pages).astype(jnp.float32)
+        k = k * mapped
+        v = v * mapped
+        s = jnp.einsum("kgh,skh->kgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page_size), 2)
+        s = jnp.where(pos < length, s, NEG_INF)   # beyond-length: hard mask
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "kgs,skh->kgh", p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)        # length-0 rows -> zeros
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
+                           scale: float, kv_qscale=None,
+                           interpret: bool = True):
+    """q: (B, KV, G, hd); k/v_pages: (n_pages, page_size, KV, hd);
+    block_table: (B, MB) int32; lengths: (B,) int32. Returns (B, KV, G, hd)
+    in q.dtype. ``kv_qscale``: int8 arena dequant scale (None == float KV).
+    """
+    B, KV, G, hd = q.shape
+    n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    assert k_pages.shape == v_pages.shape == (n_pages, page_size, KV, hd)
+    assert block_table.shape[0] == B and lengths.shape == (B,)
+
+    def kv_map(b, j, bt, ln):
+        # dead fetches (past the slot's length) pin to page 0; unmapped
+        # blocks clamp to a real page and are zero-masked in the body
+        page = jnp.where(j * page_size < ln[b],
+                         jnp.minimum(bt[b, j], n_pages - 1), 0)
+        return page, 0, 0, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, block_table.shape[1]),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd), kv_map),
+            pl.BlockSpec((1, page_size, KV, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, j, bt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),      # m: running max
+            pltpu.VMEM((KV, G), jnp.float32),      # l: running denominator
+            pltpu.VMEM((KV, G, hd), jnp.float32),  # acc: running numerator
+        ],
+    )
+    kern = functools.partial(_kernel, page_size=page_size, n_pages=n_pages,
+                             scale=scale, kv_qscale=kv_qscale)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

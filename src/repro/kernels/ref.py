@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.masks import nm_mask as _nm_mask_ref
@@ -35,3 +36,28 @@ def sparse_matmul24_ref(x, vals, idx):
 
 def masked_matmul_ref(x, w, mask):
     return x.astype(jnp.float32) @ (w * mask.astype(w.dtype)).astype(jnp.float32)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, *,
+                        scale, kv_qscale=None):
+    """The gather-path semantics of kernels/paged_attention.py, in plain jnp:
+    ``mode="fill"`` gather of the position-ordered KV view, -inf mask beyond
+    each row's length, full (non-online) softmax. Rows with length 0 are
+    defined as zero output."""
+    B, KV, G, hd = q.shape
+    n_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    MB = block_table.shape[1]
+    k_full = k_pages.at[block_table].get(mode="fill", fill_value=0)
+    v_full = v_pages.at[block_table].get(mode="fill", fill_value=0)
+    k_full = k_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    v_full = v_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    if kv_qscale is not None:
+        k_full = k_full / kv_qscale
+        v_full = v_full / kv_qscale
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32), k_full) * scale
+    valid = jnp.arange(MB * ps)[None, :] < lengths[:, None]  # (B, S_kv)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v_full)
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)

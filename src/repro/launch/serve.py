@@ -35,7 +35,8 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  smoke: bool = True, pruned: str = None, max_len: int = None,
                  sampling: SamplingConfig = SamplingConfig(),
                  chunk: int = None, n_slots: int = None, paged: bool = True,
-                 page_size: int = 16, n_pages: int = None):
+                 page_size: int = 16, n_pages: int = None,
+                 paged_kernel: bool = None):
     """Returns (engine, cfg). Prunes the weights first when requested."""
     cfg = get_config(arch)
     if smoke:
@@ -55,6 +56,7 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         chunk=chunk or max(gen - 1, 1),
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
         paged=paged, page_size=page_size, n_pages=n_pages,
+        paged_kernel=paged_kernel,
     )
     return Engine(model, params, ecfg, sampling), cfg
 
@@ -62,12 +64,14 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
 def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           smoke: bool = True, pruned: str = None, max_len: int = None,
           sampling: SamplingConfig = SamplingConfig(), paged: bool = True,
-          page_size: int = 16, n_pages: int = None):
+          page_size: int = 16, n_pages: int = None,
+          paged_kernel: bool = None):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
                                sampling=sampling, paged=paged,
-                               page_size=page_size, n_pages=n_pages)
+                               page_size=page_size, n_pages=n_pages,
+                               paged_kernel=paged_kernel)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
     t0 = time.perf_counter()
@@ -93,7 +97,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    pruned: str = None,
                    sampling: SamplingConfig = SamplingConfig(),
                    paged: bool = True, page_size: int = 16,
-                   n_pages: int = None, shared_prefix: int = 0):
+                   n_pages: int = None, shared_prefix: int = 0,
+                   paged_kernel: bool = None):
     """Mixed-length request stream through the continuous-batching scheduler.
 
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
@@ -105,7 +110,7 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                                max_len=shared_prefix + prompt_len + gen,
                                sampling=sampling, chunk=max(gen // 2, 1),
                                paged=paged, page_size=page_size,
-                               n_pages=n_pages)
+                               n_pages=n_pages, paged_kernel=paged_kernel)
     rng = np.random.default_rng(7)
     prefix = None
     if shared_prefix > 0:
@@ -163,7 +168,18 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="with --requests: shared system-prompt tokens, "
                          "prefetched once into refcounted pages")
+    ap.add_argument("--gather-decode", action="store_true",
+                    help="force the materialising-gather paged read (the "
+                         "parity reference); default picks the Pallas "
+                         "paged-attention kernel on TPU, the gather "
+                         "elsewhere")
+    ap.add_argument("--paged-attn-kernel", action="store_true",
+                    help="force the Pallas paged-attention kernel even "
+                         "off-TPU (interpret mode — slow, correctness "
+                         "only)")
     args = ap.parse_args()
+    paged_kernel = True if args.paged_attn_kernel else \
+        (False if args.gather_decode else None)
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
                               seed=args.seed)
     if args.requests > 0:
@@ -171,12 +187,13 @@ def main():
                        args.gen, smoke=args.smoke, pruned=args.pruned,
                        sampling=sampling, paged=not args.dense_pool,
                        page_size=args.page_size, n_pages=args.n_pages,
-                       shared_prefix=args.shared_prefix)
+                       shared_prefix=args.shared_prefix,
+                       paged_kernel=paged_kernel)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,
               paged=not args.dense_pool, page_size=args.page_size,
-              n_pages=args.n_pages)
+              n_pages=args.n_pages, paged_kernel=paged_kernel)
 
 
 if __name__ == "__main__":

@@ -4,11 +4,14 @@ Every block exposes the same contract so the layer scan, the Wanda++ pruner,
 and the serving path treat all families uniformly:
 
     block_apply(bp, x, cfg, positions, cache=None, cache_index=None,
-                block_table=None, lin=None, elin=None) -> (x_out, new_cache, aux)
+                block_table=None, paged_kernel=True, lin=None, elin=None)
+        -> (x_out, new_cache, aux)
 
 ``block_table`` selects the paged KV-cache path in ``layers.attention``
-(``cache`` is then a (n_pages, page_size, KV, hd) arena slice); SSM state
-caches have no length axis, so SSM/hybrid blocks accept and ignore it.
+(``cache`` is then a (n_pages, page_size, KV, hd) arena slice) and
+``paged_kernel`` picks the Pallas decode kernel (default) vs the gather
+parity reference there; SSM state caches have no length axis, so SSM/hybrid
+blocks accept and ignore both.
 
 ``PRUNABLE[family]`` maps each matmul's tap name (the string passed to
 ``lin``/``elin``) to its weight path inside the block param tree — the pruner
@@ -103,11 +106,12 @@ def init_transformer_block(key, cfg: ModelConfig, dtype):
 
 
 def transformer_block(bp, x, cfg, positions, cache=None, cache_index=None,
-                      block_table=None, lin=None, elin=None):
+                      block_table=None, paged_kernel=True, lin=None,
+                      elin=None):
     h, new_cache = layers.attention(
         bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
         kv_cache=cache, cache_index=cache_index, block_table=block_table,
-        lin=scoped(lin, "attn"),
+        paged_kernel=paged_kernel, lin=scoped(lin, "attn"),
     )
     x = x + h
     x = x + layers.mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg,
@@ -130,11 +134,11 @@ def init_moe_block(key, cfg: ModelConfig, dtype):
 
 
 def moe_block(bp, x, cfg, positions, cache=None, cache_index=None,
-              block_table=None, lin=None, elin=None):
+              block_table=None, paged_kernel=True, lin=None, elin=None):
     h, new_cache = layers.attention(
         bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
         kv_cache=cache, cache_index=cache_index, block_table=block_table,
-        lin=scoped(lin, "attn"),
+        paged_kernel=paged_kernel, lin=scoped(lin, "attn"),
     )
     x = x + h
     h, aux = moe.moe_mlp(bp["moe"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg,
@@ -160,7 +164,7 @@ def init_ssm_block(key, cfg: ModelConfig, dtype):
 
 
 def ssm_block(bp, x, cfg, positions, cache=None, cache_index=None,
-              block_table=None, lin=None, elin=None):
+              block_table=None, paged_kernel=True, lin=None, elin=None):
     xin = rmsnorm(bp["ln"], x, cfg.norm_eps)
     ml = scoped(lin, "mamba")
     if cache is None or x.shape[1] > 1:

@@ -176,7 +176,8 @@ def _sdpa(q, k, v, mask, scale):
 
 
 def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
-              cache_index=None, attn_mask=None, block_table=None, lin=None):
+              cache_index=None, attn_mask=None, block_table=None,
+              paged_kernel=True, lin=None):
     """Returns (out, new_kv_cache).
 
     Training / prefill: ``kv_cache=None`` — causal (or bidirectional) full attn;
@@ -190,6 +191,10 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
     page indices per row (``n_pages`` == unmapped: such writes drop, reads are
     masked). x may be (B, S, D) for S >= 1 (chunked / shared-prefix prefill);
     each row's tokens land at cache positions ``cache_index[b] + [0, S)``.
+    The S == 1 decode read runs the Pallas paged-attention kernel (per-step
+    KV traffic O(tokens cached), see kernels/paged_attention.py);
+    ``paged_kernel=False`` keeps the ``.at[block_table].get`` gather — the
+    bit-exact relayout of the dense path, retained as the parity reference.
     """
     if lin is None:
         lin = default_lin
@@ -242,6 +247,16 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
             k_new, v_new = k.astype(ck.dtype), v.astype(cv.dtype)
         ck = ck.at[page, off].set(k_new, mode="drop")
         cv = cv.at[page, off].set(v_new, mode="drop")
+        if S == 1 and paged_kernel:
+            # decode: online-softmax kernel walks the block table page-by-
+            # page; the (B, MB*page_size) KV view never materialises
+            from repro.kernels.ops import paged_attention
+            qs = KV_QSCALE if ck.dtype == jnp.int8 else None
+            out = paged_attention(
+                q.reshape(B, KV, G, hd), ck, cv, block_table, idx + 1,
+                scale=1.0 / math.sqrt(hd), kv_qscale=qs)
+            out = out.reshape(B, 1, H * hd)
+            return lin("wo", p["wo"], out), (ck, cv)
         k_full = ck.at[block_table].get(mode="fill", fill_value=0)
         v_full = cv.at[block_table].get(mode="fill", fill_value=0)
         k_full = k_full.reshape(B, MB * page_size, KV, hd)

@@ -230,7 +230,8 @@ class Model:
     # ------------------------------------------------------------------
     # single-token decode
     # ------------------------------------------------------------------
-    def decode_step(self, params, inputs, cache, *, lin=None, elin=None):
+    def decode_step(self, params, inputs, cache, *, lin=None, elin=None,
+                    paged_kernel=True):
         """inputs: {"token": (B,) int32, "pos": () or (B,) int32, optional
         "block_table": (B, max_blocks) int32}.
 
@@ -238,7 +239,9 @@ class Model:
         at the same length); a (B,) vector decodes a *slot batch* where each
         sequence sits at its own position (continuous-batching serving).
         With "block_table", ``cache`` is the paged (L, n_pages, page_size,
-        KV, hd) arena and reads/writes go through the table.
+        KV, hd) arena: the read runs the Pallas paged-attention kernel by
+        default, or the materialising gather (the dense path's bit-exact
+        relayout) with ``paged_kernel=False``.
         Returns (logits, cache).
         """
         cfg = self.cfg
@@ -266,6 +269,7 @@ class Model:
                 bp, cache_l = xs
                 h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
                                     cache_index=pos, block_table=block_table,
+                                    paged_kernel=paged_kernel,
                                     lin=lin, elin=elin)
                 return h, new_c
 
@@ -275,7 +279,8 @@ class Model:
         logits = self.unembed(params, x)[:, 0, :]
         return logits, new_cache
 
-    def prefill_paged(self, params, inputs, cache, *, lin=None, elin=None):
+    def prefill_paged(self, params, inputs, cache, *, lin=None, elin=None,
+                      paged_kernel=True):
         """Prefill straight through the paged KV pool (shared-prefix path).
 
         inputs: {"tokens": (B, S) int32 — each row's *suffix* (prompt minus
@@ -304,6 +309,7 @@ class Model:
             bp, cache_l = xs
             h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
                                 cache_index=pos, block_table=block_table,
+                                paged_kernel=paged_kernel,
                                 lin=lin, elin=elin)
             return h, new_c
 

@@ -7,7 +7,8 @@ Layout:
     engine.py    — jitted prefill / scan-decode programs + the ``Engine``
     scheduler.py — request queue, length-bucketed admission, timing stats
 """
-from repro.serve.engine import Engine, EngineConfig, PagesExhausted, generate
+from repro.serve.engine import (Engine, EngineConfig, PagesExhausted,
+                                PrefixEntry, generate)
 from repro.serve.paging import PageState, init_pages
 from repro.serve.sampling import SamplingConfig, sample_tokens
 from repro.serve.scheduler import Completion, Request
@@ -17,6 +18,7 @@ __all__ = [
     "Engine",
     "EngineConfig",
     "PagesExhausted",
+    "PrefixEntry",
     "SamplingConfig",
     "sample_tokens",
     "SlotState",

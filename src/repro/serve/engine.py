@@ -14,11 +14,20 @@ buckets so trace counts stay O(#buckets), not O(#requests).
 KV storage is a **paged pool** by default (``EngineConfig.paged``): slots
 map per-slot block tables into a shared (L, n_pages, page_size, KV, hd)
 arena (see serve/paging.py), so HBM scales with the tokens actually cached
-instead of n_slots x max_len, and a registered shared prompt prefix
-(:meth:`Engine.register_prefix`) is prefetched once into refcounted pages
-and mapped — never recomputed — into every request that starts with it.
-``paged=False`` keeps the dense (L, n_slots, max_len, KV, hd) pool as the
-parity/memory baseline.
+instead of n_slots x max_len. On TPU, decode reads the arena through the
+Pallas paged-attention kernel (``EngineConfig.paged_kernel``; see
+kernels/paged_attention.py) — per-step KV traffic is O(tokens cached), not
+O(max_blocks * page_size). Off-TPU the materialising gather stays the
+default (the kernel would run through the Pallas interpreter there);
+``paged_kernel=True/False`` forces either path. ``paged=False`` keeps the
+dense (L, n_slots, max_len, KV, hd) pool as the parity/memory baseline.
+
+Shared prompt prefixes (:meth:`Engine.register_prefix`) live in a
+**multi-prefix registry**: each registered prefix is prefetched once into
+refcounted pages and mapped — never recomputed — into every request that
+starts with it (longest match wins). When admission runs out of free pages,
+idle prefixes (no live slot mapping them) are evicted LRU-first; a request
+matching an evicted prefix transparently falls back to full prefill.
 """
 from __future__ import annotations
 
@@ -40,8 +49,20 @@ from repro.serve.slots import SlotState, init_slots
 
 
 class PagesExhausted(RuntimeError):
-    """Admission would need more KV pages than the free list holds; the
-    scheduler reacts by requeueing until decode releases live slots."""
+    """Admission would need more KV pages than the free list holds (even
+    after evicting idle shared prefixes); the scheduler reacts by requeueing
+    until decode releases live slots."""
+
+
+@dataclass
+class PrefixEntry:
+    """One registered shared prompt prefix (whole KV pages only)."""
+    pid: int
+    tokens: np.ndarray  # (length,) int32
+    pages: np.ndarray  # (length // page_size,) int32 arena pages
+    length: int  # shared tokens == len(pages) * page_size
+    live: int = 0  # slots currently mapping these pages
+    last_used: int = 0  # LRU stamp (engine admission clock)
 
 
 @dataclass(frozen=True)
@@ -54,6 +75,12 @@ class EngineConfig:
     paged: bool = True  # block-table paged KV pool; False => dense pool
     page_size: int = 16  # tokens per KV page
     n_pages: Optional[int] = None  # arena size; None => n_slots * max_blocks
+    # Pallas paged-attention decode kernel vs the materialising gather.
+    # None == auto: kernel on TPU (where its O(tokens-cached) HBM walk is
+    # the win), gather elsewhere (off-TPU the kernel only runs through the
+    # Pallas interpreter — a correctness path, ~4x slower than the gather's
+    # plain HLO). True/False force either path (tests, benchmarks, CLI).
+    paged_kernel: Optional[bool] = None
 
     @property
     def max_blocks(self) -> int:
@@ -115,6 +142,8 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.paged_kernel = cfg.paged_kernel if cfg.paged_kernel is not None \
+            else jax.default_backend() == "tpu"
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.state: SlotState = init_slots(cfg.n_slots)
@@ -129,11 +158,13 @@ class Engine:
         # so admission can check capacity without a device round-trip)
         self._free_pages = cfg.pool_pages
         self._slot_pages = np.zeros(cfg.n_slots, np.int64)  # fresh pages/slot
-        # registered shared prefix (paged only)
-        self.prefix_tokens: Optional[np.ndarray] = None
-        self.prefix_pages: Optional[np.ndarray] = None
-        self.prefix_len = 0
-        self.stats = {"shared_tokens_saved": 0}
+        # multi-prefix registry (paged only): pid -> PrefixEntry, plus a
+        # per-slot record of which prefix each live slot maps (-1 == none)
+        self._prefixes: dict[int, PrefixEntry] = {}
+        self._next_pid = 0
+        self._lru_clock = 0
+        self._slot_prefix = np.full(cfg.n_slots, -1, np.int64)
+        self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         # trace counters: the no-retrace-per-token guarantee is testable
         self.trace_counts = {"decode": 0, "prefill": 0}
         self._decode_jit = {}  # chunk length T -> compiled program
@@ -144,6 +175,7 @@ class Engine:
                                                donate_argnums=(1, 2, 3, 4))
             self._register_jit = jax.jit(self._register_impl,
                                          donate_argnums=(1, 2))
+            self._unreserve_jit = jax.jit(PAGE.unreserve, donate_argnums=(0,))
         else:
             self._prefill_jit = jax.jit(self._prefill_dense_impl,
                                         donate_argnums=(1, 2, 3))
@@ -163,7 +195,8 @@ class Engine:
             inputs = {"token": state.last_token, "pos": state.pos}
             if block_tables is not None:
                 inputs["block_table"] = block_tables
-            logits, cache = self.model.decode_step(params, inputs, cache)
+            logits, cache = self.model.decode_step(
+                params, inputs, cache, paged_kernel=self.paged_kernel)
             nxt = sample_tokens(logits, sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
             # the cache write lands on a position admission will overwrite
@@ -279,7 +312,8 @@ class Engine:
 
         last, cache = self.model.prefill_paged(
             params, {"tokens": tokens, "pos": shared_lens,
-                     "last": suff_lens - 1, "block_table": bt}, cache)
+                     "last": suff_lens - 1, "block_table": bt}, cache,
+            paged_kernel=self.paged_kernel)
         key, sub = jax.random.split(key)
         first = sample_tokens(last, sub, self.sampling)
 
@@ -299,7 +333,8 @@ class Engine:
         _, cache = self.model.prefill_paged(
             params, {"tokens": tokens, "pos": jnp.zeros((1,), jnp.int32),
                      "last": jnp.asarray([tokens.shape[1] - 1], jnp.int32),
-                     "block_table": bt}, cache)
+                     "block_table": bt}, cache,
+            paged_kernel=self.paged_kernel)
         return cache, pstate, pages, ok
 
     def _release_impl(self, state, pstate, slots):
@@ -332,46 +367,104 @@ class Engine:
             self.cache = self.model.init_cache(cfg.n_slots, cfg.max_len)
         self._free_pages = cfg.pool_pages
         self._slot_pages[:] = 0
-        self.stats = {"shared_tokens_saved": 0}
+        self._slot_prefix[:] = -1
+        self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         self.key = jax.random.PRNGKey(self.sampling.seed)
-        ptoks = self.prefix_tokens
-        self.prefix_tokens, self.prefix_pages, self.prefix_len = None, None, 0
-        if ptoks is not None:  # a registered prefix survives resets
-            self.register_prefix(ptoks)
+        survivors = [e.tokens for e in self._prefixes.values()]
+        self._prefixes = {}
+        for toks in survivors:  # registered prefixes survive resets
+            self.register_prefix(toks)
 
     @property
     def free_pages(self) -> int:
         return self._free_pages
 
-    def _shared_len(self, prompt: np.ndarray) -> int:
-        """Tokens of ``prompt`` covered by the registered prefix (whole pages
-        only; 0 when no prefix matches or no suffix token would remain)."""
-        if self.prefix_pages is None:
-            return 0
-        n = self.prefix_len
-        if len(prompt) <= n:  # need >= 1 suffix token for first-token logits
-            return 0
-        return n if np.array_equal(prompt[:n], self.prefix_tokens) else 0
+    @property
+    def prefix_pages(self) -> Optional[np.ndarray]:
+        """All pages held by the prefix registry (None when empty)."""
+        if not self._prefixes:
+            return None
+        return np.concatenate([e.pages for e in self._prefixes.values()])
 
-    def pages_needed(self, prompt, max_new: int) -> int:
+    def evictable_pages(self, exclude=()) -> int:
+        """Pages reclaimable by evicting idle (no live mapping) prefixes,
+        minus any whose pid is in ``exclude``. The scheduler adds this to
+        :attr:`free_pages` when budgeting, excluding the prefixes its
+        candidate requests map — admission never evicts a prefix the wave
+        itself matches."""
+        return sum(len(e.pages) for e in self._prefixes.values()
+                   if e.live == 0 and e.pid not in exclude)
+
+    def prefix_match(self, prompt: np.ndarray) -> Optional[PrefixEntry]:
+        """Longest registered prefix covering ``prompt`` with >= 1 suffix
+        token left over (the suffix provides the first-token logits)."""
+        best = None
+        for e in self._prefixes.values():
+            if len(prompt) > e.length and \
+                    (best is None or e.length > best.length) and \
+                    np.array_equal(prompt[:e.length], e.tokens):
+                best = e
+        return best
+
+    def _shared_len(self, prompt: np.ndarray) -> int:
+        """Tokens of ``prompt`` covered by a registered prefix (whole pages
+        only; 0 when no prefix matches or no suffix token would remain).
+        Test/introspection convenience — production paths call
+        :meth:`prefix_match` once and reuse the entry."""
+        e = self.prefix_match(np.asarray(prompt))
+        return e.length if e is not None else 0
+
+    _UNMATCHED = object()  # pages_needed sentinel: "run the prefix scan"
+
+    def pages_needed(self, prompt, max_new: int, match=_UNMATCHED) -> int:
         """Fresh pages admission of this request would take (0 on a dense
-        pool). The scheduler checks this against :attr:`free_pages`."""
+        pool). The scheduler checks this against :attr:`free_pages` plus
+        :meth:`evictable_pages`. Pass ``match`` (a PrefixEntry or None from
+        :meth:`prefix_match`) to skip re-scanning the registry."""
         if not self.cfg.paged:
             return 0
         prompt = np.asarray(prompt)
         mt = len(prompt) + max(max_new, 1) - 1
         n_blocks = -(-mt // self.cfg.page_size)
-        return n_blocks - self._shared_len(prompt) // self.cfg.page_size
+        if match is Engine._UNMATCHED:
+            match = self.prefix_match(prompt)
+        shared = match.length if match is not None else 0
+        return n_blocks - shared // self.cfg.page_size
+
+    def _evict_lru(self, need: int, keep=()) -> None:
+        """Evict idle prefixes (live == 0, pid not in ``keep``), least-
+        recently-used first, until ``need`` pages are free. All-or-nothing:
+        when even a full sweep could not reach ``need``, NOTHING is evicted
+        — the admission is going to fail either way, and destroying
+        prefetched prefixes for a wave that still cannot land would make
+        every later matching request silently pay full prefill. Dropping
+        the registry's hold returns a prefix's pages to the free list in
+        one scatter (PAGE.unreserve)."""
+        idle = [e for e in self._prefixes.values()
+                if e.live == 0 and e.pid not in keep]
+        if self._free_pages + sum(len(e.pages) for e in idle) < need:
+            return
+        idle.sort(key=lambda e: e.last_used)
+        for victim in idle:
+            if self._free_pages >= need:
+                break
+            self.pstate = self._unreserve_jit(
+                self.pstate, jnp.asarray(victim.pages, jnp.int32))
+            self._free_pages += len(victim.pages)
+            del self._prefixes[victim.pid]
+            self.stats["prefix_evictions"] += 1
 
     def register_prefix(self, tokens) -> int:
         """Prefetch a shared prompt prefix (system prompt) into refcounted
         pages. Only whole pages are shared; returns the shared token count.
         Subsequent admissions whose prompt starts with those tokens map the
-        pages instead of recomputing their prefill."""
+        pages instead of recomputing their prefill. Multiple prefixes may be
+        registered (longest match wins at admission); re-registering the
+        same tokens is a no-op returning the existing entry's length. When
+        the free list is short, idle prefixes are evicted LRU-first to make
+        room."""
         if not self.cfg.paged:
             raise ValueError("shared-prefix reuse requires paged=True")
-        if self.prefix_pages is not None:
-            raise ValueError("a shared prefix is already registered")
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         n_full = len(tokens) // self.cfg.page_size
         if n_full == 0:
@@ -381,6 +474,14 @@ class Engine:
             raise ValueError(
                 f"shared prefix of {shared_len} tokens leaves no room under "
                 f"max_len={self.cfg.max_len}")
+        for e in self._prefixes.values():
+            if e.length == shared_len and \
+                    np.array_equal(e.tokens, tokens[:shared_len]):
+                self._lru_clock += 1
+                e.last_used = self._lru_clock
+                return shared_len
+        if n_full > self._free_pages:
+            self._evict_lru(n_full)
         if n_full > self._free_pages:
             raise PagesExhausted(
                 f"prefix needs {n_full} pages, {self._free_pages} free")
@@ -388,21 +489,36 @@ class Engine:
             self.params, self.cache, self.pstate,
             jnp.asarray(tokens[:shared_len][None]))
         assert bool(ok), "host free-page mirror out of sync with device"
-        self.prefix_pages = np.asarray(pages)
-        self.prefix_tokens = tokens[:shared_len]
-        self.prefix_len = shared_len
         self._free_pages -= n_full
+        self._lru_clock += 1
+        pid = self._next_pid
+        self._next_pid += 1
+        self._prefixes[pid] = PrefixEntry(
+            pid=pid, tokens=tokens[:shared_len].copy(),
+            pages=np.asarray(pages), length=shared_len,
+            last_used=self._lru_clock)
         return shared_len
 
-    def admit_wave(self, prompts, slot_ids, max_news):
+    def admit_wave(self, prompts, slot_ids, max_news, keep_pids=(),
+                   matches=None):
         """Prefill `prompts` (list of 1-D int arrays) into `slot_ids`.
         Returns each request's first generated token as a (K,) numpy array
         (this is the TTFT sync). Raises :class:`PagesExhausted` when the
         paged pool cannot hold the wave (no partial admission happens).
 
-        Paged engines split the wave internally: requests matching the
-        registered prefix go through the suffix-only shared program, the
-        rest through the fresh-prefill program."""
+        Paged engines split the wave internally: requests matching a
+        registered prefix go through the suffix-only shared program (one
+        sub-wave per matched prefix), the rest through the fresh-prefill
+        program. A wave that outgrows the free list first evicts idle
+        prefixes it does not itself match (LRU), then raises
+        :class:`PagesExhausted` if still short. ``keep_pids``: extra prefix
+        ids to shield from eviction — the scheduler passes its admission
+        round's full matched set so an early bucket wave cannot evict a
+        prefix a later wave of the same round was budgeted against.
+        ``matches``: per-prompt PrefixEntry-or-None list from
+        :meth:`prefix_match`, to skip re-scanning the registry when the
+        caller already matched (entries must still be registered — the
+        scheduler's keep_pids shielding guarantees that within a round)."""
         assert len(prompts) == len(slot_ids) == len(max_news)
         prompts = [np.asarray(p, np.int32) for p in prompts]
         for p, mn in zip(prompts, max_news):
@@ -412,23 +528,31 @@ class Engine:
                     f"max_len={self.cfg.max_len}")
         if not self.cfg.paged:
             return self._admit_dense(prompts, slot_ids, max_news)
-        need = [self.pages_needed(p, mn) for p, mn in zip(prompts, max_news)]
+        if matches is None:
+            matches = [self.prefix_match(p) for p in prompts]
+        need = [self.pages_needed(p, mn, match=e)
+                for p, mn, e in zip(prompts, max_news, matches)]
+        if sum(need) > self._free_pages:
+            self._evict_lru(sum(need), keep={
+                e.pid for e in matches if e is not None} | set(keep_pids))
         if sum(need) > self._free_pages:
             raise PagesExhausted(
                 f"wave needs {sum(need)} pages, {self._free_pages} free")
-        shared = [self._shared_len(p) for p in prompts]
-        i_sh = [i for i, s in enumerate(shared) if s > 0]
-        i_fr = [i for i, s in enumerate(shared) if s == 0]
+        i_fr = [i for i, e in enumerate(matches) if e is None]
         first = np.zeros(len(prompts), np.int32)
         if i_fr:
             first[i_fr] = self._admit_paged(
                 [prompts[i] for i in i_fr], [slot_ids[i] for i in i_fr],
                 [max_news[i] for i in i_fr], [need[i] for i in i_fr])
-        if i_sh:
-            first[i_sh] = self._admit_shared(
-                [prompts[i] for i in i_sh], [slot_ids[i] for i in i_sh],
-                [max_news[i] for i in i_sh], [need[i] for i in i_sh],
-                [shared[i] for i in i_sh])
+        by_pid: dict = {}
+        for i, e in enumerate(matches):
+            if e is not None:
+                by_pid.setdefault(e.pid, []).append(i)
+        for pid, idxs in by_pid.items():
+            entry = self._prefixes[pid]
+            first[idxs] = self._admit_shared(
+                [prompts[i] for i in idxs], [slot_ids[i] for i in idxs],
+                [max_news[i] for i in idxs], [need[i] for i in idxs], entry)
         return first
 
     def _wave_arrays(self, rows, slot_ids, max_news):
@@ -473,21 +597,26 @@ class Engine:
         self._book_pages(slot_ids, need)
         return np.asarray(first)[:K]
 
-    def _admit_shared(self, prompts, slot_ids, max_news, need, shared):
-        suffixes = [p[s:] for p, s in zip(prompts, shared)]
+    def _admit_shared(self, prompts, slot_ids, max_news, need,
+                      entry: PrefixEntry):
+        suffixes = [p[entry.length:] for p in prompts]
         toks, slen_v, slot_v, mn_v, K = self._wave_arrays(
             suffixes, slot_ids, max_news)
         Kp = len(slot_v)
-        sh_v = np.asarray(list(shared) + [0] * (Kp - K), np.int32)
+        sh_v = np.asarray([entry.length] * K + [0] * (Kp - K), np.int32)
         self.cache, self.state, self.pstate, self.key, first, ok = \
             self._prefill_shared_jit(
                 self.params, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(slen_v), jnp.asarray(sh_v),
                 jnp.asarray(slot_v), jnp.asarray(mn_v),
-                jnp.asarray(self.prefix_pages))
+                jnp.asarray(entry.pages))
         assert bool(ok), "host free-page mirror out of sync with device"
         self._book_pages(slot_ids, need)
-        self.stats["shared_tokens_saved"] += sum(shared)
+        self._lru_clock += 1
+        entry.last_used = self._lru_clock
+        entry.live += K
+        self._slot_prefix[slot_ids] = entry.pid
+        self.stats["shared_tokens_saved"] += entry.length * K
         return np.asarray(first)[:K]
 
     def decode_chunk(self, T: Optional[int] = None):
@@ -512,6 +641,11 @@ class Engine:
         if self.cfg.paged:
             self._free_pages += int(self._slot_pages[slot_ids].sum())
             self._slot_pages[slot_ids] = 0
+            for s in slot_ids:
+                pid = int(self._slot_prefix[s])
+                if pid >= 0:
+                    self._prefixes[pid].live -= 1
+                    self._slot_prefix[s] = -1
 
     # ------------------------------------------------------------------
     # one-wave convenience: same-shape batch, single decode program

@@ -99,13 +99,40 @@ def alloc(state: PageState, slots: jnp.ndarray, n_blocks: jnp.ndarray,
 def release(state: PageState, slots: jnp.ndarray) -> PageState:
     """Unmap released slots; their pages return to the free list in the same
     scatter that clears the tables. Refcounted (shared-prefix) pages survive
-    until the last mapping — including the registry's permanent hold — drops."""
+    until the last mapping — including the registry's permanent hold — drops.
+
+    Invariants (the allocator runs inside jitted programs, so misuse cannot
+    raise on device — it is *defined away* here and caught on host by
+    :func:`check_invariants`):
+
+    * releasing an already-released slot is a no-op: its table rows were
+      cleared to the out-of-range sentinel, so the decrement scatter drops —
+      a double release can never push a page's refcount below its true
+      mapping count;
+    * refcounts are floored at 0, so even a forged slots array cannot drive
+      ``ref`` negative and later resurrect a live page through the
+      ``ref == 0`` free-list scan.
+    """
     P = state.ref.shape[0]
     rows = state.block_tables.at[slots].get(mode="fill", fill_value=P)
     flat = rows.reshape(-1)
     ref = state.ref.at[flat].add(-jnp.ones_like(flat), mode="drop")
     tables = state.block_tables.at[slots].set(P, mode="drop")
-    return PageState(ref=ref, block_tables=tables)
+    return PageState(ref=jnp.maximum(ref, 0), block_tables=tables)
+
+
+def unreserve(state: PageState, pages: jnp.ndarray) -> PageState:
+    """Drop the registry's permanent hold on ``pages`` (prefix eviction —
+    the inverse of :func:`reserve`). The caller must ensure no live slot
+    still maps them (the engine tracks per-prefix live counts on host and
+    only evicts at live == 0): unreserving a page a slot still maps leaves
+    ``ref > 0`` so the page is NOT handed out again, but the registry's
+    bookkeeping is then out of sync — :func:`check_invariants` flags it.
+    Refcounts are floored at 0 so a double unreserve cannot corrupt the
+    free list."""
+    ref = state.ref.at[pages].add(-1, mode="drop")
+    return PageState(ref=jnp.maximum(ref, 0),
+                     block_tables=state.block_tables)
 
 
 def reserve(state: PageState, n: int):

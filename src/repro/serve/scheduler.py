@@ -22,7 +22,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.engine import Engine, _bucket_len
+from repro.serve.engine import Engine, PagesExhausted, _bucket_len
 
 
 def percentile(xs, p: float) -> float:
@@ -110,22 +110,36 @@ class Scheduler:
             # -- 3: admission, one wave per prompt-length bucket ------------
             free = [s for s, r in enumerate(self._slot_rid) if r is None]
             if free and queue:
-                # take requests while slots AND KV pages last; a request that
-                # doesn't fit the paged pool stays queued and is retried after
-                # the next harvest frees pages (admission never partially
-                # lands — see Engine.admit_wave / PagesExhausted)
+                # take requests while slots AND KV pages last; the budget
+                # counts idle shared prefixes as reclaimable (the engine
+                # evicts them LRU-first inside admit_wave) — EXCEPT the
+                # prefixes the taken requests themselves map, which
+                # admission refuses to evict. A request that doesn't fit
+                # stays queued and is retried after the next harvest frees
+                # pages (admission never partially lands — see
+                # Engine.admit_wave / PagesExhausted)
                 take: List[Request] = []
-                budget = eng.free_pages
+                taken_need = 0
+                matched: set = set()
+                match_of: Dict[int, object] = {}  # rid -> PrefixEntry|None
                 while queue and len(take) < len(free):
-                    need = eng.pages_needed(queue[0].tokens, queue[0].max_new)
-                    if need > budget:
+                    r0 = queue[0]
+                    ent = eng.prefix_match(np.asarray(r0.tokens))
+                    need = eng.pages_needed(r0.tokens, r0.max_new, match=ent)
+                    new_matched = matched | (
+                        {ent.pid} if ent is not None else set())
+                    budget = eng.free_pages + \
+                        eng.evictable_pages(exclude=new_matched)
+                    if taken_need + need > budget:
                         if not take and all(r is None for r in self._slot_rid):
                             raise ValueError(
-                                f"request {queue[0].rid} needs {need} KV pages"
+                                f"request {r0.rid} needs {need} KV pages"
                                 f" > pool capacity {budget}; it can never be "
                                 "admitted")
                         break
-                    budget -= need
+                    taken_need += need
+                    matched = new_matched
+                    match_of[r0.rid] = ent
                     take.append(queue.popleft())
                 waves: Dict[int, List[Request]] = {}
                 for r in take:
@@ -133,11 +147,30 @@ class Scheduler:
                                     eng.cfg.max_len)
                     waves.setdefault(b, []).append(r)
                 t_round = time.perf_counter()  # admission round began
-                for b, wave in sorted(waves.items()):
+                wave_items = sorted(waves.items())
+                for wi, (b, wave) in enumerate(wave_items):
                     slots = [free.pop(0) for _ in wave]
                     t_wave = time.perf_counter()
-                    first = eng.admit_wave([r.tokens for r in wave], slots,
-                                           [r.max_new for r in wave])
+                    try:
+                        first = eng.admit_wave([r.tokens for r in wave], slots,
+                                               [r.max_new for r in wave],
+                                               keep_pids=matched,
+                                               matches=[match_of[r.rid]
+                                                        for r in wave])
+                    except PagesExhausted:
+                        # the budget's reclaimable slack was optimistic (the
+                        # pages belong to a prefix this very wave maps, so
+                        # the engine refused to evict it); requeue the
+                        # unadmitted requests in submission order and retry
+                        # after the next harvest releases pages (`free` need
+                        # not be repaired — it is rebuilt every iteration)
+                        if all(r2 is None for r2 in self._slot_rid):
+                            raise  # nothing live will ever free these pages
+                        order = {r.rid: k for k, r in enumerate(take)}
+                        left = [r for _, w in wave_items[wi:] for r in w]
+                        left.sort(key=lambda r: order[r.rid])
+                        queue.extendleft(reversed(left))
+                        break
                     t_first = time.perf_counter()  # host has the wave's tokens
                     # TTFT = queue wait until this round + the request's OWN
                     # wave's prefill; bucket order within a round is an

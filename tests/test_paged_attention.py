@@ -1,0 +1,243 @@
+"""Pallas paged-attention decode kernel: hardened parity suite.
+
+Three layers of evidence that the kernel (kernels/paged_attention.py) can
+be THE paged decode path:
+
+  1. property parity (via the optional-hypothesis shim): kernel vs the
+     retained gather reference and vs the dense ``_sdpa`` oracle, sweeping
+     page sizes, GQA group counts, ragged per-slot lengths (incl. 0 and
+     == capacity), fp32 and int8 arenas, unmapped (frozen-slot) tables;
+  2. model-level: ``decode_step(paged_kernel=True)`` logits track the
+     gather path within fp32 reassociation noise;
+  3. end-to-end: a greedy ``Engine`` decode is BIT-EXACT (token-for-token)
+     kernel vs gather, for the one-wave path and a mixed-length
+     continuous-batching stream, fp32 and int8 KV, two page sizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models.layers import KV_QSCALE, _sdpa
+from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.scheduler import Scheduler
+
+SCALE = 0.25
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    # num_kv_heads=2 => G=2: the e2e tests must exercise grouped queries
+    cfg = get_config("qwen3-8b").reduced(num_kv_heads=2)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+def _case(seed, ps, G, *, KV=2, hd=8, MB=4, int8=False):
+    """Random paged-decode instance with ragged lengths: row 0 is empty,
+    row 1 holds a single token, row 2 is at full capacity, the rest are
+    random; block tables map disjoint random pages, rest unmapped."""
+    rng = np.random.default_rng(seed)
+    B = 5
+    cap = MB * ps
+    n_pages = B * MB + 3
+    lengths = np.array(
+        [0, 1, cap] + list(rng.integers(1, cap + 1, B - 3)), np.int64)
+    perm = rng.permutation(n_pages)
+    bt = np.full((B, MB), n_pages, np.int64)
+    k = 0
+    for b in range(B):
+        nb = -(-int(lengths[b]) // ps)
+        bt[b, :nb] = perm[k:k + nb]
+        k += nb
+    if int8:
+        k_pages = rng.integers(-127, 128, (n_pages, ps, KV, hd))
+        v_pages = rng.integers(-127, 128, (n_pages, ps, KV, hd))
+        k_pages = jnp.asarray(k_pages, jnp.int8)
+        v_pages = jnp.asarray(v_pages, jnp.int8)
+    else:
+        k_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)),
+                              jnp.float32)
+        v_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)),
+                              jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    return (q, k_pages, v_pages, jnp.asarray(bt, jnp.int32),
+            jnp.asarray(lengths, jnp.int32))
+
+
+def _check(q, k_pages, v_pages, bt, lengths, kv_qscale=None):
+    got = ops.paged_attention(q, k_pages, v_pages, bt, lengths,
+                              scale=SCALE, kv_qscale=kv_qscale)
+    want = ref.paged_attention_ref(q, k_pages, v_pages, bt, lengths,
+                                   scale=SCALE, kv_qscale=kv_qscale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # tie the oracle itself to the production _sdpa on the gathered view
+    B, KV, G, hd = q.shape
+    n_pages, ps = k_pages.shape[:2]
+    MB = bt.shape[1]
+    k_full = k_pages.at[bt].get(mode="fill", fill_value=0)
+    v_full = v_pages.at[bt].get(mode="fill", fill_value=0)
+    k_full = k_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    v_full = v_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    if kv_qscale is not None:
+        k_full = k_full / kv_qscale
+        v_full = v_full / kv_qscale
+    mask = (jnp.arange(MB * ps)[None, :] < lengths[:, None])[:, None, :]
+    sdpa = _sdpa(q[:, None], k_full, v_full, mask, SCALE)[:, 0]
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(sdpa)[live],
+                               rtol=2e-5, atol=2e-5)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# property parity: kernel vs gather reference vs dense _sdpa
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([4, 8, 16]), st.sampled_from([1, 2, 4]),
+       st.integers(0, 10_000))
+def test_parity_fp32(ps, G, seed):
+    _check(*_case(seed, ps, G))
+
+
+@given(st.sampled_from([4, 8]), st.sampled_from([1, 4]),
+       st.integers(0, 10_000))
+def test_parity_int8(ps, G, seed):
+    q, k8, v8, bt, lengths = _case(seed, ps, G, int8=True)
+    _check(q, k8, v8, bt, lengths, kv_qscale=KV_QSCALE)
+    # int8 vs the fp32 values it quantized: within dequant tolerance
+    kf = (k8.astype(jnp.float32) / KV_QSCALE)
+    vf = (v8.astype(jnp.float32) / KV_QSCALE)
+    got8 = ops.paged_attention(q, k8, v8, bt, lengths,
+                               scale=SCALE, kv_qscale=KV_QSCALE)
+    gotf = ops.paged_attention(q, kf, vf, bt, lengths, scale=SCALE)
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(gotf),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_length_zero_rows_are_zero():
+    q, kp, vp, bt, lengths = _case(0, 8, 2)
+    got = np.asarray(ops.paged_attention(q, kp, vp, bt, lengths, scale=SCALE))
+    assert (got[np.asarray(lengths) == 0] == 0).all()
+    assert np.isfinite(got).all()
+
+
+def test_unmapped_blocks_read_as_zero_kv():
+    """Frozen-slot semantics: a fully-unmapped table with length > 0 must
+    reproduce the gather's mode="fill" zeros (logit 0 enters the softmax,
+    the page is NOT skipped)."""
+    q, kp, vp, bt, lengths = _case(3, 4, 2)
+    B, MB = bt.shape
+    n_pages = kp.shape[0]
+    bt_frozen = jnp.full_like(bt, n_pages)  # released slot: table cleared
+    lengths = jnp.maximum(lengths, 1)
+    got = ops.paged_attention(q, kp, vp, bt_frozen, lengths, scale=SCALE)
+    want = ref.paged_attention_ref(q, kp, vp, bt_frozen, lengths, scale=SCALE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # zero K everywhere -> uniform weights over the valid positions -> 0 V
+    assert np.abs(np.asarray(got)).max() < 1e-6
+
+
+def test_partially_unmapped_table_matches_gather():
+    """A table whose tail blocks are unmapped while lengths reach into
+    them (the drop-write region of a frozen slot mid-table)."""
+    q, kp, vp, bt, lengths = _case(7, 4, 1)
+    n_pages = kp.shape[0]
+    bt = bt.at[:, 2:].set(n_pages)  # unmap blocks 2+; lengths unchanged
+    got = ops.paged_attention(q, kp, vp, bt, lengths, scale=SCALE)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lengths, scale=SCALE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# model-level: decode_step kernel vs gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_decode_step_kernel_tracks_gather(gqa, kv_dtype):
+    base_model, params = gqa
+    cfg = base_model.cfg
+    model = Model(cfg, kv_dtype=kv_dtype)
+    B, P, ps, MB = 3, 8, 4, 4
+    toks = jnp.asarray(_prompts(cfg, B, P, seed=5))
+    _, _, (k_s, v_s) = model.forward(params, {"tokens": toks},
+                                     return_cache=True)
+    n_pages = B * MB
+    pk, pv = model.init_paged_cache(n_pages, ps)
+    if pk.dtype == jnp.int8:
+        qz = lambda a: jnp.clip(jnp.round(a.astype(jnp.float32) * KV_QSCALE),
+                                -127, 127).astype(jnp.int8)
+        k_s, v_s = qz(k_s), qz(v_s)
+    bt = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, MB)
+    pos = jnp.arange(P, dtype=jnp.int32)[None, :]
+    page = jnp.take_along_axis(bt, jnp.broadcast_to(pos // ps, (B, P)), axis=1)
+    off = jnp.broadcast_to(pos % ps, (B, P))
+    pk = pk.at[:, page, off].set(k_s.astype(pk.dtype))
+    pv = pv.at[:, page, off].set(v_s.astype(pv.dtype))
+    inp = {"token": jnp.asarray([3, 7, 11], jnp.int32),
+           "pos": jnp.full((B,), P, jnp.int32), "block_table": bt}
+    lg_gather, _ = model.decode_step(params, inp, (pk, pv),
+                                     paged_kernel=False)
+    lg_kernel, _ = model.decode_step(params, inp, (pk, pv),
+                                     paged_kernel=True)
+    np.testing.assert_allclose(np.asarray(lg_kernel), np.asarray(lg_gather),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(lg_kernel, -1)),
+        np.asarray(jnp.argmax(lg_gather, -1)))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: greedy Engine decode is bit-exact kernel vs gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_engine_generate_bitexact_kernel_vs_gather(gqa, kv_dtype, page_size):
+    base_model, params = gqa
+    cfg = base_model.cfg
+    model = Model(cfg, kv_dtype=kv_dtype) if kv_dtype else base_model
+    B, P, G = 4, 8, 6
+    prompts = _prompts(cfg, B, P)
+    mk = lambda kernel: Engine(
+        model, params,
+        EngineConfig(n_slots=B, max_len=32, chunk=G - 1, prefill_buckets=(P,),
+                     paged=True, page_size=page_size, paged_kernel=kernel))
+    out_k = mk(True).generate(prompts, G)
+    out_g = mk(False).generate(prompts, G)
+    np.testing.assert_array_equal(out_k, out_g)
+
+
+def test_engine_stream_bitexact_kernel_vs_gather(gqa):
+    """Mixed-length continuous-batching stream (slot churn, frozen slots,
+    ragged per-slot positions): identical tokens kernel vs gather."""
+    model, params = gqa
+    cfg = model.cfg
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 14))).astype(np.int32),
+                    int(rng.integers(1, 8)))
+            for rid in range(9)]
+    mk = lambda kernel: Engine(
+        model, params,
+        EngineConfig(n_slots=4, max_len=32, chunk=4, prefill_buckets=(8, 16),
+                     paged=True, page_size=8, paged_kernel=kernel))
+    out = {}
+    for kernel in (False, True):
+        comps = Scheduler(mk(kernel)).run(reqs)
+        out[kernel] = {c.rid: list(c.tokens) for c in comps}
+    assert out[True] == out[False]

@@ -166,6 +166,75 @@ def test_alloc_padding_rows_and_shared_refcounts():
 
 
 # ---------------------------------------------------------------------------
+# adversarial allocator: misuse must be a no-op or detectably wrong, never
+# silent free-list corruption (see the invariant notes in serve/paging.py)
+# ---------------------------------------------------------------------------
+
+def test_double_release_is_a_noop():
+    """Releasing a slot twice: the first release cleared its table rows, so
+    the second decrement scatter drops entirely — refcounts and the free
+    list are untouched."""
+    state = PAGE.init_pages(8, 4, 2)
+    state, ok = PAGE.alloc(state, jnp.asarray([0, 1], jnp.int32),
+                           jnp.asarray([2, 2], jnp.int32))
+    assert bool(ok)
+    state = PAGE.release(state, jnp.asarray([0], jnp.int32))
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state = PAGE.release(state, jnp.asarray([0], jnp.int32))  # double
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(
+                        jax.tree_util.tree_map(np.asarray, state))):
+        np.testing.assert_array_equal(a, b)
+    PAGE.check_invariants(state)
+    assert int(np.asarray((state.ref == 0).sum())) == 8 - 2
+    # slot 1's pages survive a stranger's double release
+    assert (np.asarray(state.block_tables)[1] < 8).all()
+
+
+def test_unreserve_while_mapped_is_detected():
+    """Dropping a shared page's registry hold is legal while slots map it
+    (ref stays == mappings); dropping it AGAIN would zero the ref under a
+    live mapping — the free list would hand the page out twice. The floor
+    keeps ref at 0 (not negative) and check_invariants flags the state."""
+    state = PAGE.init_pages(4, 2, 2)
+    state, pages, ok = PAGE.reserve(state, 1)
+    assert bool(ok)
+    state, ok = PAGE.alloc(state, jnp.asarray([0], jnp.int32),
+                           jnp.asarray([1], jnp.int32),
+                           jnp.asarray([1], jnp.int32), pages)
+    assert bool(ok)
+    PAGE.check_invariants(state, shared_pages=np.asarray(pages))
+    state = PAGE.unreserve(state, pages)  # evict: hold dropped, mapping live
+    PAGE.check_invariants(state)  # ref == mappings, no hold: consistent
+    state = PAGE.unreserve(state, pages)  # BUG: second drop under a mapping
+    assert (np.asarray(state.ref) >= 0).all(), "floor must hold"
+    with pytest.raises(AssertionError):
+        PAGE.check_invariants(state)
+
+
+def test_alloc_after_exhaustion_then_recovery():
+    """An exhausted alloc refuses whole (ok=False, state unchanged); the
+    same request succeeds once a release returns pages."""
+    state = PAGE.init_pages(2, 2, 2)
+    state, ok = PAGE.alloc(state, jnp.asarray([0], jnp.int32),
+                           jnp.asarray([2], jnp.int32))
+    assert bool(ok)
+    before = jax.tree_util.tree_map(np.asarray, state)
+    state, ok = PAGE.alloc(state, jnp.asarray([1], jnp.int32),
+                           jnp.asarray([1], jnp.int32))
+    assert not bool(ok)
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(
+                        jax.tree_util.tree_map(np.asarray, state))):
+        np.testing.assert_array_equal(a, b)
+    state = PAGE.release(state, jnp.asarray([0], jnp.int32))
+    state, ok = PAGE.alloc(state, jnp.asarray([1], jnp.int32),
+                           jnp.asarray([1], jnp.int32))
+    assert bool(ok)
+    PAGE.check_invariants(state)
+
+
+# ---------------------------------------------------------------------------
 # paged vs dense: bit-exact decode parity (acceptance criterion)
 # ---------------------------------------------------------------------------
 
@@ -173,7 +242,9 @@ def test_alloc_padding_rows_and_shared_refcounts():
 def test_paged_decode_step_bitexact_vs_dense(dense, kv_dtype):
     """Same KV content, dense (B, max_len) layout vs paged arena + block
     tables: decode_step logits must be EXACTLY equal (float KV) — the paged
-    gather is a relayout, not a different computation."""
+    gather (``paged_kernel=False``, the parity reference retained behind the
+    Pallas decode kernel) is a relayout, not a different computation.
+    Kernel-vs-gather parity lives in tests/test_paged_attention.py."""
     base_model, params = dense
     cfg = base_model.cfg
     model = Model(cfg, kv_dtype=kv_dtype)
@@ -204,7 +275,8 @@ def test_paged_decode_step_bitexact_vs_dense(dense, kv_dtype):
     lg_dense, _ = model.decode_step(params, {"token": tok, "pos": posv},
                                     (ck, cv))
     lg_paged, _ = model.decode_step(
-        params, {"token": tok, "pos": posv, "block_table": bt}, (pk, pv))
+        params, {"token": tok, "pos": posv, "block_table": bt}, (pk, pv),
+        paged_kernel=False)
     np.testing.assert_array_equal(np.asarray(lg_dense), np.asarray(lg_paged))
 
 
@@ -340,8 +412,196 @@ def test_register_prefix_validation(dense):
     with pytest.raises(ValueError, match="no room"):
         eng.register_prefix(np.zeros(16, np.int32))
     assert eng.register_prefix(np.zeros(8, np.int32)) == 8
-    with pytest.raises(ValueError, match="already registered"):
-        eng.register_prefix(np.zeros(8, np.int32))
+    free = eng.free_pages
+    # re-registering the same tokens is idempotent: no new pages taken
+    assert eng.register_prefix(np.zeros(8, np.int32)) == 8
+    assert eng.free_pages == free
+    assert len(eng._prefixes) == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-prefix registry: concurrent prefixes, LRU eviction, fallback
+# ---------------------------------------------------------------------------
+
+def test_two_prefixes_share_pages(dense):
+    """Two registered prefixes live at once: each admission maps ITS
+    prefix's refcounted pages, longest match wins, and a drained stream
+    leaves exactly the two registry holds."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(13)
+    ps = 8
+    A = rng.integers(0, cfg.vocab_size, 2 * ps).astype(np.int32)
+    B = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=48, chunk=4,
+                              prefill_buckets=(8, 16), paged=True,
+                              page_size=ps, n_pages=28))
+    assert eng.register_prefix(A) == 2 * ps
+    assert eng.register_prefix(B) == ps
+    assert eng.free_pages == 28 - 3
+    mk = lambda rid, pre: Request(
+        rid, np.concatenate(
+            [pre, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)]), 3)
+    reqs = [mk(0, A), mk(1, B), mk(2, A), mk(3, B),
+            Request(4, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 3)]
+    # while a wave is live, each prefix's pages carry hold + its mappings
+    eng.admit_wave([r.tokens for r in reqs[:4]], [0, 1, 2, 3],
+                   [r.max_new for r in reqs[:4]])
+    ref_arr = np.asarray(eng.pstate.ref)
+    entries = list(eng._prefixes.values())
+    assert [e.live for e in entries] == [2, 2]
+    assert (ref_arr[entries[0].pages] == 3).all()  # hold + 2 mappings (A)
+    assert (ref_arr[entries[1].pages] == 3).all()  # hold + 2 mappings (B)
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+    eng.release([0, 1, 2, 3])
+    assert [e.live for e in eng._prefixes.values()] == [0, 0]
+    # full stream drains correctly and every output is the greedy line
+    comps = Scheduler(eng).run(reqs)
+    assert eng.stats["shared_tokens_saved"] == 2 * (2 * ps) + 2 * ps
+    for c in comps:
+        assert_greedy_continuation(model, params, reqs[c.rid].tokens, c.tokens)
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+    ref_arr = np.asarray(eng.pstate.ref)
+    assert (ref_arr[np.asarray(eng.prefix_pages)] == 1).all()
+    assert eng.free_pages == 28 - 3
+
+
+def test_longest_prefix_match_wins(dense):
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(21)
+    ps = 8
+    long = rng.integers(0, cfg.vocab_size, 2 * ps).astype(np.int32)
+    short = long[:ps]  # a prefix OF the longer prefix
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=48, paged=True, page_size=ps,
+                              prefill_buckets=(8, 16), n_pages=16))
+    eng.register_prefix(short)
+    eng.register_prefix(long)
+    tail = rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+    assert eng._shared_len(np.concatenate([long, tail])) == 2 * ps
+    assert eng._shared_len(np.concatenate([short, tail])) == ps
+    assert eng._shared_len(tail) == 0
+    # a prompt equal to the long prefix still leaves no suffix for the long
+    # entry -- but the short one covers half of it
+    assert eng._shared_len(long) == ps
+
+
+def test_prefix_eviction_lru_and_fallback(dense):
+    """Pool pressure evicts only idle prefixes, least-recently-used first;
+    a request matching the evicted prefix transparently falls back to full
+    prefill (still the exact greedy first token)."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(11)
+    ps = 8
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=32, chunk=2,
+                              prefill_buckets=(8, 16, 32), paged=True,
+                              page_size=ps, n_pages=5))
+    A = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    B = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    assert eng.register_prefix(A) == ps
+    assert eng.register_prefix(B) == ps
+    assert eng.free_pages == 3
+    # touch A (admission bumps its LRU stamp) so B becomes the LRU victim
+    pA = np.concatenate([A, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)])
+    eng.admit_wave([pA], [0], [2])
+    assert eng.stats["shared_tokens_saved"] == ps
+    eng.release([0])
+    assert eng.free_pages == 3 and eng.evictable_pages() == 2
+    # 4 fresh blocks > 3 free: exactly one eviction needed -> B, not A
+    big = rng.integers(0, cfg.vocab_size, 28).astype(np.int32)
+    eng.admit_wave([big], [0], [4])
+    assert eng.stats["prefix_evictions"] == 1
+    assert [e.tokens.tolist() for e in eng._prefixes.values()] == [A.tolist()]
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+    eng.release([0])
+    # B's tokens now fall back to full prefill -- and still decode greedily
+    saved = eng.stats["shared_tokens_saved"]
+    pB = np.concatenate([B, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)])
+    assert eng._shared_len(pB) == 0
+    first = eng.admit_wave([pB], [1], [2])
+    assert eng.stats["shared_tokens_saved"] == saved
+    logits, _ = model.forward(params, {"tokens": jnp.asarray(pB[None])})
+    assert int(first[0]) == int(jnp.argmax(logits[0, -1]))
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+
+
+def test_live_prefix_is_never_evicted(dense):
+    """Eviction only reclaims refcount-0 (idle) prefixes: when the only
+    reclaimable pages belong to a LIVE prefix, admission must refuse whole
+    (PagesExhausted), leaving the registry and pool untouched."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(17)
+    ps = 8
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=32, paged=True, page_size=ps,
+                              prefill_buckets=(8, 16, 32), n_pages=4))
+    A = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    eng.register_prefix(A)
+    pA = np.concatenate([A, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)])
+    eng.admit_wave([pA], [0], [2])  # A.live == 1, 1 fresh page
+    assert eng.free_pages == 2 and eng.evictable_pages() == 0
+    big = rng.integers(0, cfg.vocab_size, 28).astype(np.int32)
+    with pytest.raises(PagesExhausted):
+        eng.admit_wave([big], [1], [4])
+    assert eng.stats["prefix_evictions"] == 0
+    assert len(eng._prefixes) == 1 and eng.free_pages == 2
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+    # ... and the pages free the moment the mapping slot releases
+    eng.release([0])
+    assert eng.evictable_pages() == 1
+    eng.admit_wave([big], [1], [4])  # now evicts idle A
+    assert eng.stats["prefix_evictions"] == 1 and not eng._prefixes
+
+
+def test_admit_wave_keep_pids_shields_prefix(dense):
+    """The scheduler budgets a whole admission round against its matched
+    prefixes and passes them as ``keep_pids``: an earlier (fresh) wave
+    under pool pressure must evict around them — even when the shielded
+    prefix is the LRU victim."""
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(29)
+    ps = 8
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=32, paged=True, page_size=ps,
+                              prefill_buckets=(8, 16, 32), n_pages=5))
+    A = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    B = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    eng.register_prefix(A)  # older => the natural LRU victim
+    eng.register_prefix(B)
+    pid_a = next(e.pid for e in eng._prefixes.values()
+                 if np.array_equal(e.tokens, A))
+    big = rng.integers(0, cfg.vocab_size, 28).astype(np.int32)
+    eng.admit_wave([big], [0], [4], keep_pids={pid_a})  # needs 4 > 3 free
+    assert eng.stats["prefix_evictions"] == 1
+    assert [np.array_equal(e.tokens, A) for e in eng._prefixes.values()] \
+        == [True], "shielded LRU prefix must survive; the newer one goes"
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
+
+
+def test_prefix_registry_survives_reset(dense):
+    model, params = dense
+    cfg = model.cfg
+    rng = np.random.default_rng(23)
+    ps = 8
+    A = rng.integers(0, cfg.vocab_size, ps).astype(np.int32)
+    B = rng.integers(0, cfg.vocab_size, 2 * ps).astype(np.int32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=48, paged=True, page_size=ps,
+                              prefill_buckets=(8,), n_pages=16))
+    eng.register_prefix(A)
+    eng.register_prefix(B)
+    eng.reset()
+    assert len(eng._prefixes) == 2
+    assert eng.free_pages == 16 - 3
+    tail = rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+    assert eng._shared_len(np.concatenate([B, tail])) == 2 * ps
+    PAGE.check_invariants(eng.pstate, shared_pages=eng.prefix_pages)
 
 
 # ---------------------------------------------------------------------------
