@@ -1,6 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-kernels ci bench bench-serving serve
+.PHONY: test test-fast test-kernels test-serve-families ci bench \
+	bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -18,6 +19,13 @@ test-fast:
 test-kernels:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_paged_attention.py \
 	    tests/test_paging.py
+
+# family lane: SSM / hybrid / VLM serving decode-parity (the spec-driven
+# slot-state matrix) on forced CPU with XLA_FLAGS cleared, so a dryrun
+# shell's fake-device flags can never leak into the parity run
+test-serve-families:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_serve_families.py
 
 ci: test-fast
 

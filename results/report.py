@@ -56,8 +56,9 @@ def serving_table(path):
     rows = ["| arch | batch | loop tok/s | engine tok/s | speedup | "
             "pruned tok/s | 2:4 weight ratio | req/s | TTFT p50/p95 | "
             "TPOT p50/p95 | paged slots (equal HBM) | KV bytes/slot | "
-            "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather |",
-            "|" + "---|" * 14]
+            "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather | "
+            "family matrix (tok/s @ state KB/slot) |",
+            "|" + "---|" * 15]
     for line in open(path):
         r = json.loads(line)
         if "paged_concurrent_slots" in r:
@@ -77,6 +78,15 @@ def serving_table(path):
             attn = f"{kb}KB vs {r['gather_step_kv_bytes'] / 1e3:.0f}KB"
         else:
             attn = "-"
+        if r.get("family_serving"):
+            # SSM/hybrid/VLM through the same engine: tokens/s at the
+            # CacheSpec's decode-state footprint per slot
+            fam = ", ".join(
+                f"{f['family']} {f['tok_per_s']:.0f}@"
+                f"{f['state_bytes_per_slot'] / 1e3:.0f}KB"
+                for f in r["family_serving"].values())
+        else:
+            fam = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
@@ -84,7 +94,7 @@ def serving_table(path):
             f"{r['req_per_s']:.1f} | "
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
             f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
-            f"{paged} | {bps} | {skipped} | {attn} |")
+            f"{paged} | {bps} | {skipped} | {attn} | {fam} |")
     return "\n".join(rows)
 
 

@@ -11,9 +11,12 @@ Two modes:
     ``Scheduler`` (admit-on-free, length-bucketed prefill), reporting TTFT /
     TPOT percentiles.
 
-Demonstrates the paper's deployment story: the same engine serves dense or
-Wanda++-pruned (2:4 zeros) weights; benchmarks/table9_serving.py quantifies
-the throughput + latency effect.
+Every decoder family serves — dense, MoE, SSM (``--arch mamba2-1.3b``),
+hybrid (``--arch zamba2-7b``), VLM (``--arch qwen2-vl-2b``; the CLI attaches
+stub vision-patch embeddings to each request, matching the repo's stub
+vision frontend). Demonstrates the paper's deployment story: the same engine
+serves dense or Wanda++-pruned (2:4 zeros) weights;
+benchmarks/table9_serving.py quantifies the throughput + latency effect.
 """
 from __future__ import annotations
 
@@ -36,8 +39,12 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  sampling: SamplingConfig = SamplingConfig(),
                  chunk: int = None, n_slots: int = None, paged: bool = True,
                  page_size: int = 16, n_pages: int = None,
-                 paged_kernel: bool = None):
-    """Returns (engine, cfg). Prunes the weights first when requested."""
+                 paged_kernel: bool = None, extra_len: int = 0):
+    """Returns (engine, cfg). Prunes the weights first when requested.
+
+    The default max_len covers prompt + generation plus the arch's vision
+    prefix (VLM requests cache their patch embeddings ahead of the text)
+    plus ``extra_len`` (e.g. a shared system-prompt prefix)."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -50,15 +57,25 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
         params, _ = prune_model(model, params, calib, pcfg)
         print(f"[serve] pruned with wanda++ {pruned}")
+    vis_len = cfg.vision_patches if cfg.frontend == "vision" else 0
     ecfg = EngineConfig(
         n_slots=n_slots or batch,
-        max_len=max_len or (prompt_len + gen),
+        max_len=max_len or (vis_len + extra_len + prompt_len + gen),
         chunk=chunk or max(gen - 1, 1),
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
         paged=paged, page_size=page_size, n_pages=n_pages,
         paged_kernel=paged_kernel,
     )
     return Engine(model, params, ecfg, sampling), cfg
+
+
+def _stub_vision(cfg, rng):
+    """Stub per-request vision-patch embeddings (the repo's VLM frontend is
+    a stub: precomputed patch embeddings fed as a sequence prefix)."""
+    if cfg.frontend != "vision":
+        return None
+    return rng.standard_normal(
+        (cfg.vision_patches, cfg.d_model)).astype(np.float32)
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
@@ -72,10 +89,15 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
                                sampling=sampling, paged=paged,
                                page_size=page_size, n_pages=n_pages,
                                paged_kernel=paged_kernel)
+    rng = np.random.default_rng(7)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
+    vision = None
+    if cfg.frontend == "vision":
+        vision = [_stub_vision(cfg, rng) for _ in range(batch)]
     t0 = time.perf_counter()
-    first = engine.admit_wave(list(prompts), list(range(batch)), [gen] * batch)
+    first = engine.admit_wave(list(prompts), list(range(batch)), [gen] * batch,
+                              vision=vision)
     ttft = time.perf_counter() - t0
     out = first[:, None]
     tpot = 0.0
@@ -106,8 +128,7 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
     are prefetched once and mapped (refcounted) into each request, so only
     the per-request suffix is ever prefilled."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
-                               pruned=pruned,
-                               max_len=shared_prefix + prompt_len + gen,
+                               pruned=pruned, extra_len=shared_prefix,
                                sampling=sampling, chunk=max(gen // 2, 1),
                                paged=paged, page_size=page_size,
                                n_pages=n_pages, paged_kernel=paged_kernel)
@@ -125,7 +146,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                             ).astype(np.int32)
         toks = body if prefix is None else np.concatenate([prefix, body])
         reqs.append(Request(i, toks,
-                            int(rng.integers(max(gen // 2, 1), gen + 1))))
+                            int(rng.integers(max(gen // 2, 1), gen + 1)),
+                            vision_embeds=_stub_vision(cfg, rng)))
     t0 = time.perf_counter()
     comps = Scheduler(engine).run(reqs)
     wall = time.perf_counter() - t0
@@ -156,6 +178,9 @@ def main():
                          "continuous-batching scheduler")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (applied after --top-k; "
+                         ">= 1 disables)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dense-pool", action="store_true",
                     help="use the dense (L, n_slots, max_len) KV pool "
@@ -181,7 +206,7 @@ def main():
     paged_kernel = True if args.paged_attn_kernel else \
         (False if args.gather_decode else None)
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
-                              seed=args.seed)
+                              top_p=args.top_p, seed=args.seed)
     if args.requests > 0:
         serve_requests(args.arch, args.requests, args.batch, args.prompt_len,
                        args.gen, smoke=args.smoke, pruned=args.pruned,

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers, mamba2, moe
+from repro.models import state_spec as SPEC
 from repro.models.layers import init_rmsnorm, rmsnorm, scoped
+from repro.models.state_spec import CacheSpec, StateGroup, StateLeaf
 
 
 # tap name -> weight path within block params. 2-D matmul weights only
@@ -106,8 +108,8 @@ def init_transformer_block(key, cfg: ModelConfig, dtype):
 
 
 def transformer_block(bp, x, cfg, positions, cache=None, cache_index=None,
-                      block_table=None, paged_kernel=True, lin=None,
-                      elin=None):
+                      block_table=None, paged_kernel=True, seq_lens=None,
+                      lin=None, elin=None):
     h, new_cache = layers.attention(
         bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
         kv_cache=cache, cache_index=cache_index, block_table=block_table,
@@ -134,7 +136,8 @@ def init_moe_block(key, cfg: ModelConfig, dtype):
 
 
 def moe_block(bp, x, cfg, positions, cache=None, cache_index=None,
-              block_table=None, paged_kernel=True, lin=None, elin=None):
+              block_table=None, paged_kernel=True, seq_lens=None, lin=None,
+              elin=None):
     h, new_cache = layers.attention(
         bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, positions,
         kv_cache=cache, cache_index=cache_index, block_table=block_table,
@@ -164,13 +167,15 @@ def init_ssm_block(key, cfg: ModelConfig, dtype):
 
 
 def ssm_block(bp, x, cfg, positions, cache=None, cache_index=None,
-              block_table=None, paged_kernel=True, lin=None, elin=None):
+              block_table=None, paged_kernel=True, seq_lens=None, lin=None,
+              elin=None):
     xin = rmsnorm(bp["ln"], x, cfg.norm_eps)
     ml = scoped(lin, "mamba")
     if cache is None or x.shape[1] > 1:
         ssm_state = cache[0] if cache is not None else None
         h, new_cache = mamba2.mamba_block(bp["mamba"], xin, cfg,
-                                          ssm_state=ssm_state, lin=ml)
+                                          ssm_state=ssm_state,
+                                          seq_lens=seq_lens, lin=ml)
     else:
         h, new_cache = mamba2.mamba_decode_step(
             bp["mamba"], xin, cfg, cache[0], cache[1], lin=ml)
@@ -187,10 +192,13 @@ def init_shared_attn_block(key, cfg: ModelConfig, dtype):
 
 def hybrid_layer(bp_mamba, shared_bp, x, cfg, positions, layer_idx,
                  mamba_cache=None, attn_cache=None, cache_index=None,
+                 block_table=None, paged_kernel=True, seq_lens=None,
                  lin=None, elin=None):
     """One hybrid layer: maybe-shared-attention, then a mamba block.
 
-    attn_cache: (k, v) slice for this layer's application site or None.
+    attn_cache: (k, v) slice for this layer's application site or None —
+    with ``block_table`` it is that site's (n_pages, page_size, KV, hd)
+    arena slice (paged serving).
     Returns (x, new_mamba_cache, new_attn_cache, aux).
     """
     every = cfg.hybrid_attn_every
@@ -199,7 +207,8 @@ def hybrid_layer(bp_mamba, shared_bp, x, cfg, positions, layer_idx,
     def with_attn(x):
         y, kv, _ = transformer_block(
             shared_bp, x, cfg, positions, cache=attn_cache,
-            cache_index=cache_index, lin=scoped(lin, "shared"))
+            cache_index=cache_index, block_table=block_table,
+            paged_kernel=paged_kernel, lin=scoped(lin, "shared"))
         return y, kv
 
     def without_attn(x):
@@ -214,7 +223,8 @@ def hybrid_layer(bp_mamba, shared_bp, x, cfg, positions, layer_idx,
     x, new_attn_cache = jax.lax.cond(is_attn, with_attn, without_attn, x)
     x, new_mamba_cache, aux = ssm_block(
         {"ln": bp_mamba["ln"], "mamba": bp_mamba["mamba"]}, x, cfg, positions,
-        cache=mamba_cache, cache_index=cache_index, lin=lin)
+        cache=mamba_cache, cache_index=cache_index, seq_lens=seq_lens,
+        lin=lin)
     return x, new_mamba_cache, new_attn_cache, aux
 
 
@@ -226,6 +236,48 @@ INIT = {
     "ssm": init_ssm_block,
     "hybrid": init_ssm_block,  # per-layer part; shared block separate
 }
+
+
+# ---------------------------------------------------------------------------
+# per-family cache state specs (see models/state_spec.py)
+# ---------------------------------------------------------------------------
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    """Application sites of the hybrid family's shared attention block."""
+    return (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+
+
+def _kv_group(cfg: ModelConfig, kv_dtype, apps: int, name="kv") -> StateGroup:
+    hd = cfg.resolved_head_dim
+    leaf = lambda n: StateLeaf(n, (cfg.num_kv_heads, hd), kv_dtype)
+    return StateGroup(name, SPEC.KV, apps, (leaf("k"), leaf("v")))
+
+
+def _mamba_group(cfg: ModelConfig, dtype, apps: int, name="mamba") -> StateGroup:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return StateGroup(name, SPEC.RECURRENT, apps, (
+        StateLeaf("ssm", (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+                  jnp.float32),
+        StateLeaf("conv", (cfg.ssm_conv - 1, conv_dim), dtype),
+    ))
+
+
+def cache_spec(cfg: ModelConfig, param_dtype, kv_dtype=None) -> CacheSpec:
+    """The family's declarative decode-state spec. Attention KV leaves use
+    ``kv_dtype`` (int8 KV quantization); recurrent leaves keep their own
+    dtypes (SSD state is always f32, the conv window follows the params).
+    Encoder-only families have no decode state: empty spec."""
+    kv_dt = kv_dtype if kv_dtype is not None else param_dtype
+    if cfg.family in ("dense", "vlm", "moe"):
+        return CacheSpec((_kv_group(cfg, kv_dt, cfg.num_layers),))
+    if cfg.family == "ssm":
+        return CacheSpec((_mamba_group(cfg, param_dtype, cfg.num_layers),))
+    if cfg.family == "hybrid":
+        return CacheSpec((
+            _kv_group(cfg, kv_dt, n_attn_apps(cfg), name="attn"),
+            _mamba_group(cfg, param_dtype, cfg.num_layers),
+        ))
+    return CacheSpec(())
 
 APPLY = {
     "dense": transformer_block,

@@ -130,10 +130,20 @@ def ssd_chunked(x, dt, A, B_, C_, cfg: ModelConfig, h0=None):
     return y, h_final
 
 
-def mamba_block(p, u, cfg: ModelConfig, *, ssm_state=None, conv_state=None, lin=None):
+def mamba_block(p, u, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
+                seq_lens=None, lin=None):
     """Full-sequence forward (train/prefill). u: (B, S, D).
 
-    Returns (out, (ssm_state, conv_state)) — states returned for cache priming.
+    Returns (out, (ssm_state, conv_state)) — states returned for cache
+    priming; ``conv_state`` is the raw (pre-conv) xBC window the decode
+    recurrence continues from.
+
+    ``seq_lens`` (B,) int32 implements snapshot-on-prefill for right-padded
+    rows (length-bucketed serving admission): padding steps get ``dt = 0``,
+    which in SSD is an exact state passthrough (decay ``exp(0·A) = 1``, zero
+    input contribution), so ``ssm_state`` is the state after each row's LAST
+    VALID token, and ``conv_state`` is gathered from the last ``K-1`` valid
+    positions. Outputs at positions >= seq_len are garbage (never read).
     """
     if lin is None:
         lin = default_lin
@@ -142,22 +152,40 @@ def mamba_block(p, u, cfg: ModelConfig, *, ssm_state=None, conv_state=None, lin=
     G, N = cfg.ssm_ngroups, cfg.ssm_state
     zxbcdt = lin("in_proj", p["in_proj"], u)
     z, xBC, dt = _split_proj(cfg, zxbcdt)
-    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC_raw = xBC  # decode's conv window holds PRE-conv inputs
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
     x, B_, C_ = _split_xbc(cfg, xBC)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if seq_lens is not None:
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < seq_lens[:, None]
+        dt = dt * valid[:, :, None]
     A = -jnp.exp(p["A_log"])
-    y, h_final = ssd_chunked(
-        x.reshape(Bsz, S, H, P), dt, A,
-        B_.reshape(Bsz, S, G, N), C_.reshape(Bsz, S, G, N), cfg,
-        h0=ssm_state,
-    )
+    x4 = x.reshape(Bsz, S, H, P)
+    B4 = B_.reshape(Bsz, S, G, N)
+    C4 = C_.reshape(Bsz, S, G, N)
+    # pad S up to a chunk multiple with dt = 0 steps (exact passthrough), so
+    # bucketed prefill lengths need not divide ssm_chunk
+    pad = -S % min(cfg.ssm_chunk, S)
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x4, dt, B4, C4 = zp(x4), zp(dt), zp(B4), zp(C4)
+    y, h_final = ssd_chunked(x4, dt, A, B4, C4, cfg, h0=ssm_state)
+    y = y[:, :S]
     y = y + (p["D"][None, None, :, None] * x.reshape(Bsz, S, H, P)).astype(y.dtype)
     y = y.reshape(Bsz, S, cfg.d_inner)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = lin("out_proj", p["out_proj"], y)
     K = cfg.ssm_conv
-    new_conv = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))[:, S : S + K - 1, :] \
-        if S < K - 1 else xBC[:, S - (K - 1):, :]
+    if seq_lens is not None:
+        # window of each row's last K-1 VALID tokens (left zero-padded)
+        idx = seq_lens[:, None] - (K - 1) + jnp.arange(K - 1,
+                                                       dtype=jnp.int32)[None, :]
+        got = jnp.take_along_axis(
+            xBC_raw, jnp.clip(idx, 0, S - 1)[:, :, None], axis=1)
+        new_conv = jnp.where((idx >= 0)[:, :, None], got, 0)
+    else:
+        new_conv = jnp.pad(xBC_raw, ((0, 0), (K - 1, 0), (0, 0)))[:, S : S + K - 1, :] \
+            if S < K - 1 else xBC_raw[:, S - (K - 1):, :]
     return out, (h_final, new_conv)
 
 

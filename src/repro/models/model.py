@@ -35,6 +35,9 @@ class Model:
         self.kv_dtype = _dtype(kv_dtype) if kv_dtype is not None else None
         self.block_init = B.INIT[cfg.family]
         self.block_apply = B.APPLY.get(cfg.family)  # None for hybrid
+        # declarative per-layer decode-state spec: cache init, serving
+        # admit/release, and decode dispatch are loops over its groups
+        self.cache_spec = B.cache_spec(cfg, self.param_dtype, self.kv_dtype)
 
     # ------------------------------------------------------------------
     # init
@@ -98,24 +101,34 @@ class Model:
     # ------------------------------------------------------------------
     def forward(self, params, inputs, *, remat=False, remat_groups=0,
                 lin=None, elin=None, return_cache=False, last_only=False,
-                act_pspec=None):
+                act_pspec=None, seq_lens=None):
         """act_pspec: optional PartitionSpec pinned on the residual stream at
         every block boundary (sequence parallelism: the saved remat carries
-        shard over `model`, cutting activation HBM by the TP degree)."""
+        shard over `model`, cutting activation HBM by the TP degree).
+
+        seq_lens: (B,) int32 valid prompt lengths for right-padded rows
+        (length-bucketed serving prefill). Only recurrent-state blocks
+        consume it — with it, the returned cache snapshots each row's state
+        after its LAST VALID token instead of after the padding (attention
+        KV needs no masking: stale positions are masked by cache position).
+        """
         cfg = self.cfg
         x, positions = self._assemble(params, inputs)
         if act_pspec is not None:
             x = jax.lax.with_sharding_constraint(x, act_pspec)
 
-        if cfg.family == "hybrid":
+        if self.cache_spec.mixed:
             x, aux, cache = self._hybrid_forward(params, x, positions, remat,
-                                                 lin, elin)
+                                                 lin, elin,
+                                                 return_cache=return_cache,
+                                                 seq_lens=seq_lens)
         else:
             apply = self.block_apply
 
             def body(carry, bp):
                 h, aux = carry
-                h, new_cache, a = apply(bp, h, cfg, positions, lin=lin, elin=elin)
+                h, new_cache, a = apply(bp, h, cfg, positions,
+                                        seq_lens=seq_lens, lin=lin, elin=elin)
                 if act_pspec is not None:
                     h = jax.lax.with_sharding_constraint(h, act_pspec)
                 return (h, aux + a), (new_cache if return_cache else 0)
@@ -150,21 +163,31 @@ class Model:
             return logits, aux, cache
         return logits, aux
 
-    def _hybrid_forward(self, params, x, positions, remat, lin, elin):
+    def _hybrid_forward(self, params, x, positions, remat, lin, elin,
+                        return_cache=False, seq_lens=None):
         cfg = self.cfg
 
         def body(carry, bp):
             h, aux, idx = carry
-            h, _, kv, a = B.hybrid_layer(
+            h, mamba_c, kv, a = B.hybrid_layer(
                 bp, params["shared_attn"], h, cfg, positions, idx,
-                lin=lin, elin=elin)
-            return (h, aux + a, idx + 1), 0
+                seq_lens=seq_lens, lin=lin, elin=elin)
+            return (h, aux + a, idx + 1), \
+                ((mamba_c, kv) if return_cache else 0)
 
         if remat:
             body = jax.checkpoint(body)
-        (x, aux, _), _ = jax.lax.scan(
+        (x, aux, _), ys = jax.lax.scan(
             body, (x, jnp.zeros((), jnp.float32), jnp.int32(0)), params["blocks"])
-        return x, aux, None
+        if not return_cache:
+            return x, aux, None
+        (ssm, conv), (k_all, v_all) = ys  # stacked (L, B, ...) per layer
+        # attention runs only at layers idx % every == 0; the scan emitted a
+        # zeros kv for the rest — keep just the application sites, in order
+        every = cfg.hybrid_attn_every
+        cache = {"attn": (k_all[::every], v_all[::every]),
+                 "mamba": (ssm, conv)}
+        return x, aux, cache
 
     # ------------------------------------------------------------------
     # losses
@@ -190,42 +213,24 @@ class Model:
     # KV / state caches
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int):
-        cfg, dt = self.cfg, self.param_dtype
-        kv_dt = self.kv_dtype or dt
-        L = cfg.num_layers
-        hd = cfg.resolved_head_dim
-        if cfg.family in ("dense", "vlm", "moe"):
-            kv = lambda: jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), kv_dt)
-            return (kv(), kv())
-        if cfg.family == "ssm":
-            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
-            return (
-                jnp.zeros((L, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
-                jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
-            )
-        if cfg.family == "hybrid":
-            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
-            n_apps = _n_apps(cfg)
-            return {
-                "ssm": jnp.zeros((L, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
-                "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
-                "attn_k": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dt),
-                "attn_v": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dt),
-            }
-        raise ValueError(f"no cache for family {cfg.family}")
+        """Per-slot decode-state pool, laid out by the family's CacheSpec:
+        KV groups (apps, batch, max_len, KV, hd) pairs, recurrent groups
+        fixed-shape (apps, batch, ...) leaves. Single-group families keep
+        their bare-tuple formats ((k, v) / (ssm, conv)); hybrid packs to
+        {"attn": (k, v), "mamba": (ssm, conv)}."""
+        try:
+            return self.cache_spec.init_dense(batch, max_len)
+        except ValueError:
+            raise ValueError(f"no cache for family {self.cfg.family}")
 
-    def init_paged_cache(self, n_pages: int, page_size: int):
-        """Shared KV page arena for the paged serving pool: (k, v) each of
-        shape (L, n_pages, page_size, KV, hd). Slots map into it through
-        per-slot block tables (see serve/paging.py); HBM scales with the
-        pages actually allocated, not n_slots x max_len."""
-        cfg, dt = self.cfg, self.param_dtype
-        kv_dt = self.kv_dtype or dt
-        if cfg.family not in ("dense", "vlm", "moe"):
-            raise ValueError(f"no paged KV cache for family {cfg.family}")
-        hd = cfg.resolved_head_dim
-        shape = (cfg.num_layers, n_pages, page_size, cfg.num_kv_heads, hd)
-        return (jnp.zeros(shape, kv_dt), jnp.zeros(shape, kv_dt))
+    def init_paged_cache(self, n_pages: int, page_size: int, n_slots: int = 0):
+        """Paged serving pool: every KV group becomes a shared page arena of
+        shape (apps, n_pages, page_size, KV, hd) addressed through per-slot
+        block tables (see serve/paging.py), so KV HBM scales with the pages
+        actually allocated, not n_slots x max_len. Recurrent groups have no
+        length axis — they stay per-slot (pass ``n_slots`` for mixed specs
+        like Zamba2). Raises ValueError when the spec has no pageable KV."""
+        return self.cache_spec.init_paged(n_pages, page_size, n_slots)
 
     # ------------------------------------------------------------------
     # single-token decode
@@ -233,15 +238,20 @@ class Model:
     def decode_step(self, params, inputs, cache, *, lin=None, elin=None,
                     paged_kernel=True):
         """inputs: {"token": (B,) int32, "pos": () or (B,) int32, optional
-        "block_table": (B, max_blocks) int32}.
+        "block_table": (B, max_blocks) int32, optional "rope_pos": (B,)
+        int32}.
 
         A scalar ``pos`` decodes the whole batch in lockstep (every sequence
         at the same length); a (B,) vector decodes a *slot batch* where each
         sequence sits at its own position (continuous-batching serving).
-        With "block_table", ``cache`` is the paged (L, n_pages, page_size,
-        KV, hd) arena: the read runs the Pallas paged-attention kernel by
-        default, or the materialising gather (the dense path's bit-exact
-        relayout) with ``paged_kernel=False``.
+        With "block_table", each KV group of ``cache`` is the paged
+        (apps, n_pages, page_size, KV, hd) arena: the read runs the Pallas
+        paged-attention kernel by default, or the materialising gather (the
+        dense path's bit-exact relayout) with ``paged_kernel=False``.
+        "rope_pos" decouples the rotary position from the cache write index
+        — a VLM slot's text token at cache position p carries rotary
+        position p + (grid - n_patches) because the M-RoPE text stream
+        restarts at the vision grid edge, not at the patch count.
         Returns (logits, cache).
         """
         cfg = self.cfg
@@ -250,18 +260,20 @@ class Model:
         Bsz = token.shape[0]
         x = self.embed(params, token)[:, None, :]
         pos = jnp.asarray(pos, jnp.int32)
-        if pos.ndim == 1:
-            pos2d = pos[:, None]  # (B, 1) per-slot positions
+        rope = jnp.asarray(inputs.get("rope_pos", pos), jnp.int32)
+        if rope.ndim == 1:
+            pos2d = rope[:, None]  # (B, 1) per-slot positions
         else:
-            pos2d = jnp.broadcast_to(pos, (Bsz, 1))
+            pos2d = jnp.broadcast_to(rope, (Bsz, 1))
         if cfg.mrope_sections is not None:
             positions = jnp.broadcast_to(pos2d[None], (3, Bsz, 1))
         else:
             positions = pos2d
 
-        if cfg.family == "hybrid":
-            x, new_cache = self._hybrid_decode(params, x, positions, pos, cache,
-                                               lin, elin)
+        if self.cache_spec.mixed:
+            x, new_cache = self._hybrid_decode(params, x, positions, pos,
+                                               cache, block_table,
+                                               paged_kernel, lin, elin)
         else:
             apply = self.block_apply
 
@@ -295,9 +307,13 @@ class Model:
         recomputed here. Returns (last-token logits (B, V), cache).
         """
         cfg = self.cfg
-        if cfg.family not in ("dense", "moe"):
+        if self.cache_spec.has_recurrent or cfg.frontend is not None:
+            # capability gate, not a family ladder: shared pages can capture
+            # positional KV but not recurrent state (the suffix's mamba scan
+            # would need the prefix's final h), and a vision prefix is
+            # embeddings, not shareable token pages
             raise NotImplementedError(
-                f"{cfg.name}: paged prefill serves dense/moe families")
+                f"{cfg.name}: paged prefill needs a pure token-KV spec")
         tokens, pos = inputs["tokens"], jnp.asarray(inputs["pos"], jnp.int32)
         block_table = inputs["block_table"]
         Bsz, S = tokens.shape
@@ -319,7 +335,12 @@ class Model:
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         return self.unembed(params, x_last), new_cache
 
-    def _hybrid_decode(self, params, x, positions, pos, cache, lin, elin):
+    def _hybrid_decode(self, params, x, positions, pos, cache, block_table,
+                       paged_kernel, lin, elin):
+        """Mixed-spec decode: the mamba leaves ride the layer scan, the
+        shared attention block's KV (stacked over its application sites,
+        dense rows or paged arenas) is carried whole and dynamically indexed
+        at each site."""
         cfg = self.cfg
         every = cfg.hybrid_attn_every
 
@@ -332,26 +353,22 @@ class Model:
             h, new_mamba, (nak, nav), _ = B.hybrid_layer(
                 bp, params["shared_attn"], h, cfg, positions, idx,
                 mamba_cache=(ssm_l, conv_l), attn_cache=(ak_l, av_l),
-                cache_index=pos, lin=lin, elin=elin)
+                cache_index=pos, block_table=block_table,
+                paged_kernel=paged_kernel, lin=lin, elin=elin)
             ak = jax.lax.dynamic_update_index_in_dim(ak, nak, app, 0)
             av = jax.lax.dynamic_update_index_in_dim(av, nav, app, 0)
             return (h, ak, av, idx + 1), new_mamba
 
-        carry0 = (x, cache["attn_k"], cache["attn_v"], jnp.int32(0))
+        ssm, conv = cache["mamba"]
+        carry0 = (x, cache["attn"][0], cache["attn"][1], jnp.int32(0))
         (x, ak, av, _), new_mamba = jax.lax.scan(
-            body, carry0, (params["blocks"], cache["ssm"], cache["conv"]))
-        new_cache = {"ssm": new_mamba[0], "conv": new_mamba[1],
-                     "attn_k": ak, "attn_v": av}
-        return x, new_cache
+            body, carry0, (params["blocks"], ssm, conv))
+        return x, {"attn": (ak, av), "mamba": new_mamba}
 
 
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
-
-def _n_apps(cfg: ModelConfig) -> int:
-    return (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
-
 
 def _ce(logits, labels):
     logits = logits.astype(jnp.float32)
@@ -368,15 +385,23 @@ def _masked_ce(logits, labels, mask):
     return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1)
 
 
+def mrope_text_start(n_patches: int) -> int:
+    """First M-RoPE position of the text stream: text starts after the max
+    grid coordinate per the Qwen2-VL convention. THE one definition — both
+    prefill position assembly (:func:`mrope_positions`) and the serving
+    engine's decode-time rotary offset derive from it, so the conventions
+    cannot drift apart."""
+    return int(math.ceil(math.sqrt(n_patches)))
+
+
 def mrope_positions(cfg: ModelConfig, batch: int, n_patches: int, n_text: int):
     """Qwen2-VL M-RoPE: vision prefix gets (t=0, h, w) grid positions; text
     tokens get equal (t, h, w) sequential positions continuing after the grid."""
-    grid = int(math.ceil(math.sqrt(n_patches)))
+    grid = mrope_text_start(n_patches)
     ph = jnp.repeat(jnp.arange(grid, dtype=jnp.int32), grid)[:n_patches]
     pw = jnp.tile(jnp.arange(grid, dtype=jnp.int32), grid)[:n_patches]
     pt = jnp.zeros((n_patches,), jnp.int32)
-    start = grid  # text starts after max(grid) per Qwen2-VL convention
-    tx = start + jnp.arange(n_text, dtype=jnp.int32)
+    tx = grid + jnp.arange(n_text, dtype=jnp.int32)
     p3 = jnp.stack([
         jnp.concatenate([pt, tx]),
         jnp.concatenate([ph, tx]),

@@ -1,0 +1,223 @@
+"""Declarative per-layer cache state specs: one serving path for every family.
+
+Every servable family describes its decode-time state as a ``CacheSpec`` — a
+tuple of ``StateGroup``s, each a stack of identical per-layer (or per
+application-site) states of one of two kinds:
+
+* ``KV``: attention key/value state with a **length axis**. Dense layout is
+  ``(apps, batch, max_len, *leaf.shape)``; the paged layout is a shared page
+  arena ``(apps, n_pages, page_size, *leaf.shape)`` addressed through per-slot
+  block tables (serve/paging.py). Admission scatters prefill KV at positions
+  ``[0, prefill_len)``; stale positions are never read because attention masks
+  by cache position — release needs no reset.
+
+* ``RECURRENT``: fixed-shape per-slot state with **no length axis** (Mamba2
+  SSD state + conv window). Layout is ``(apps, batch, *leaf.shape)`` in both
+  pool modes — recurrent state cannot page. Because there is no position to
+  mask by, lifecycle is snapshot-on-prefill (the full-sequence forward returns
+  the state after the last *valid* token), per-slot **scatter admit**, and
+  **zero-reset on release**.
+
+The spec turns ``Model.init_cache`` / ``init_paged_cache`` and the engine's
+admit/release scatters into loops over groups instead of ``if cfg.family ==``
+ladders; a hybrid model (Zamba2) is simply a two-group spec — its attention
+sites page (and decode through the Pallas paged-attention kernel on TPU) while
+its Mamba layers slot-scatter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+KV = "kv"
+RECURRENT = "recurrent"
+
+
+@dataclass(frozen=True)
+class StateLeaf:
+    """One array of a group's per-layer state.
+
+    ``shape`` is the trailing per-token shape for ``KV`` leaves — e.g.
+    ``(num_kv_heads, head_dim)`` — and the full per-slot shape for
+    ``RECURRENT`` leaves — e.g. ``(nheads, headdim, ssm_state)``.
+    """
+    name: str
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+@dataclass(frozen=True)
+class StateGroup:
+    """A stack of ``apps`` identical per-layer states (the leading axis the
+    layer scan unstacks). ``name`` keys the cache dict when a spec holds more
+    than one group; a single-group spec packs to the group's bare leaf tuple
+    (the legacy ``(k, v)`` / ``(ssm, conv)`` formats)."""
+    name: str
+    kind: str  # KV | RECURRENT
+    apps: int
+    leaves: Tuple[StateLeaf, ...]
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    groups: Tuple[StateGroup, ...] = ()
+
+    # -- introspection --------------------------------------------------
+    @property
+    def kv_groups(self) -> Tuple[StateGroup, ...]:
+        return tuple(g for g in self.groups if g.kind == KV)
+
+    @property
+    def recurrent_groups(self) -> Tuple[StateGroup, ...]:
+        return tuple(g for g in self.groups if g.kind == RECURRENT)
+
+    @property
+    def has_kv(self) -> bool:
+        return bool(self.kv_groups)
+
+    @property
+    def has_recurrent(self) -> bool:
+        return bool(self.recurrent_groups)
+
+    @property
+    def mixed(self) -> bool:
+        return len(self.groups) > 1
+
+    # -- cache pytree packing -------------------------------------------
+    # Single group -> bare tuple of leaf arrays (keeps the seed formats:
+    # dense (k, v), ssm (ssm, conv)); several groups -> {name: tuple}.
+    def pack(self, by_group: Dict[str, Tuple]) -> Any:
+        if len(self.groups) == 1:
+            return by_group[self.groups[0].name]
+        return {g.name: by_group[g.name] for g in self.groups}
+
+    def unpack(self, cache: Any) -> Dict[str, Tuple]:
+        if len(self.groups) == 1:
+            return {self.groups[0].name: cache}
+        return {g.name: cache[g.name] for g in self.groups}
+
+    # -- init -----------------------------------------------------------
+    def init_dense(self, batch: int, max_len: int) -> Any:
+        """Per-slot pool: KV groups get a length axis, recurrent don't."""
+        if not self.groups:
+            raise ValueError("no decode state spec (encoder-only family?)")
+        out = {}
+        for g in self.groups:
+            if g.kind == KV:
+                out[g.name] = tuple(
+                    jnp.zeros((g.apps, batch, max_len) + l.shape, l.dtype)
+                    for l in g.leaves)
+            else:
+                out[g.name] = tuple(
+                    jnp.zeros((g.apps, batch) + l.shape, l.dtype)
+                    for l in g.leaves)
+        return self.pack(out)
+
+    def init_paged(self, n_pages: int, page_size: int, n_slots: int = 0):
+        """Paged pool: KV groups become shared page arenas; recurrent groups
+        (no length axis) stay per-slot and need ``n_slots``."""
+        if not self.has_kv:
+            raise ValueError("no pageable KV state in this family's spec")
+        if self.has_recurrent and n_slots <= 0:
+            raise ValueError("recurrent state groups need n_slots to size "
+                             "their per-slot (non-paged) leaves")
+        out = {}
+        for g in self.groups:
+            if g.kind == KV:
+                out[g.name] = tuple(
+                    jnp.zeros((g.apps, n_pages, page_size) + l.shape, l.dtype)
+                    for l in g.leaves)
+            else:
+                out[g.name] = tuple(
+                    jnp.zeros((g.apps, n_slots) + l.shape, l.dtype)
+                    for l in g.leaves)
+        return self.pack(out)
+
+    # -- accounting ------------------------------------------------------
+    def slot_state_bytes(self, max_len: int) -> int:
+        """Worst-case decode-state bytes one slot can hold: a full max_len of
+        KV positions plus the fixed recurrent leaves. The serving benchmark
+        reports this as state-memory-per-slot."""
+        total = 0
+        for g in self.groups:
+            for l in g.leaves:
+                per = int(jnp.zeros((), l.dtype).dtype.itemsize)
+                n = g.apps * per
+                for d in l.shape:
+                    n *= d
+                total += n * (max_len if g.kind == KV else 1)
+        return total
+
+
+def _quantize_kv_like(leaf, new, qscale: float):
+    """Match the engine's int8 KV-cache quantization (layers.KV_QSCALE)."""
+    if leaf.dtype == jnp.int8:
+        new = jnp.clip(jnp.round(new.astype(jnp.float32) * qscale), -127, 127)
+    return new.astype(leaf.dtype)
+
+
+def admit_dense(spec: CacheSpec, cache, states, slots, qscale: float):
+    """Scatter one prefill wave's states into the per-slot pool.
+
+    ``states`` is a cache-shaped pytree for the wave (KV leaves carry the
+    bucketed prefill length on their length axis). Padding rows use slot
+    index n_slots — out of range, dropped by the scatter.
+    """
+    pool = spec.unpack(cache)
+    new = spec.unpack(states)
+    out = {}
+    for g in spec.groups:
+        leaves = []
+        for leaf, c, s in zip(g.leaves, pool[g.name], new[g.name]):
+            if g.kind == KV:
+                s = _quantize_kv_like(c, s, qscale)
+                Lb = s.shape[2]
+                leaves.append(c.at[:, slots, :Lb].set(s, mode="drop"))
+            else:
+                leaves.append(
+                    c.at[:, slots].set(s.astype(c.dtype), mode="drop"))
+        out[g.name] = tuple(leaves)
+    return spec.pack(out)
+
+
+def admit_paged(spec: CacheSpec, cache, states, slots, page, off, ok,
+                qscale: float):
+    """Paged-pool admit: KV leaves scatter through (page, off) computed from
+    the wave's freshly-allocated block tables (out-of-range pages drop);
+    recurrent leaves slot-scatter, gated on ``ok`` so a failed page
+    allocation leaves NO trace of the wave anywhere in the cache."""
+    pool = spec.unpack(cache)
+    new = spec.unpack(states)
+    out = {}
+    for g in spec.groups:
+        leaves = []
+        for leaf, c, s in zip(g.leaves, pool[g.name], new[g.name]):
+            if g.kind == KV:
+                s = _quantize_kv_like(c, s, qscale)
+                leaves.append(c.at[:, page, off].set(s, mode="drop"))
+            else:
+                scat = c.at[:, slots].set(s.astype(c.dtype), mode="drop")
+                leaves.append(jnp.where(ok, scat, c))
+        out[g.name] = tuple(leaves)
+    return spec.pack(out)
+
+
+def release_slots(spec: CacheSpec, cache, slots):
+    """Zero-reset released slots' recurrent state (KV needs no reset — stale
+    positions are masked by cache position; recurrent state has no position
+    to mask by, so a freed slot must not leak its final state into whatever
+    inspects the pool next)."""
+    if not spec.has_recurrent:
+        return cache
+    pool = spec.unpack(cache)
+    out = {}
+    for g in spec.groups:
+        if g.kind == RECURRENT:
+            out[g.name] = tuple(
+                c.at[:, slots].set(jnp.zeros((), c.dtype), mode="drop")
+                for c in pool[g.name])
+        else:
+            out[g.name] = pool[g.name]
+    return spec.pack(out)

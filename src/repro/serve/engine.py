@@ -11,6 +11,19 @@ Prefill runs as a separate jitted program per (wave, bucket-length) shape;
 waves are padded to power-of-two sizes and prompt lengths to configured
 buckets so trace counts stay O(#buckets), not O(#requests).
 
+Every family serves through the same spec-driven plumbing: the model's
+``CacheSpec`` (models/state_spec.py) declares each per-layer state group as
+either attention KV (length axis — pageable, default paged) or fixed-shape
+recurrent state (Mamba2 SSD state + conv window — snapshot-on-prefill,
+per-slot scatter admit, zero-reset on release). Admission runs one
+full-sequence forward with ``seq_lens`` (so recurrent snapshots land after
+each row's LAST VALID token despite bucket padding) and scatters every
+group through ``state_spec.admit_*``; a hybrid (Zamba2) spec pages its
+shared-attention KV while its mamba layers slot-scatter. VLM requests carry
+``vision_embeds`` — the vision prefix occupies the first cache positions
+and the slot keeps a rotary offset (M-RoPE's text stream restarts at the
+vision grid edge) so decode positions stay exact.
+
 KV storage is a **paged pool** by default (``EngineConfig.paged``): slots
 map per-slot block tables into a shared (L, n_pages, page_size, KV, hd)
 arena (see serve/paging.py), so HBM scales with the tokens actually cached
@@ -20,7 +33,9 @@ kernels/paged_attention.py) — per-step KV traffic is O(tokens cached), not
 O(max_blocks * page_size). Off-TPU the materialising gather stays the
 default (the kernel would run through the Pallas interpreter there);
 ``paged_kernel=True/False`` forces either path. ``paged=False`` keeps the
-dense (L, n_slots, max_len, KV, hd) pool as the parity/memory baseline.
+dense (L, n_slots, max_len, KV, hd) pool as the parity/memory baseline; a
+spec with no KV groups (pure SSM) has nothing to page and always uses the
+per-slot pool.
 
 Shared prompt prefixes (:meth:`Engine.register_prefix`) live in a
 **multi-prefix registry**: each registered prefix is prefetched once into
@@ -39,8 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import state_spec as SSPEC
 from repro.models.layers import KV_QSCALE
-from repro.models.model import Model
+from repro.models.model import Model, mrope_text_start
 from repro.serve import paging as PAGE
 from repro.serve import slots as SLOT
 from repro.serve.paging import PageState
@@ -68,7 +84,7 @@ class PrefixEntry:
 @dataclass(frozen=True)
 class EngineConfig:
     n_slots: int = 8  # max concurrent requests
-    max_len: int = 128  # cache length cap per request
+    max_len: int = 128  # cache length cap per request (vision prefix incl.)
     chunk: int = 16  # decode steps per host round-trip
     eos_id: Optional[int] = None  # None => length-only termination
     prefill_buckets: Tuple[int, ...] = (16, 32, 64, 128)
@@ -110,13 +126,28 @@ def _pad_pow2(n: int, cap: int) -> int:
     return min(p, cap)
 
 
+def _vis_patches(v) -> int:
+    return 0 if v is None else int(v.shape[0])
+
+
+def _rope_delta(n_patches: int) -> int:
+    """M-RoPE text positions restart at the vision grid edge: a text token
+    at cache position p carries rotary position p + (start - n_patches),
+    with ``start`` taken from the SAME helper prefill uses."""
+    if n_patches == 0:
+        return 0
+    return mrope_text_start(n_patches) - n_patches
+
+
 class Engine:
-    """Slot-batched serving over a fixed KV-cache pool.
+    """Slot-batched serving over a fixed decode-state pool.
 
     Drive it either with :meth:`generate` (one same-shape wave, single
     decode program, single device sync — the benchmark/test path) or with
     ``scheduler.Scheduler`` (continuous batching: admit-on-free interleaved
-    with chunked decode).
+    with chunked decode). Serves every decoder family — dense, MoE, SSM
+    (Mamba2), hybrid (Zamba2), VLM (Qwen2-VL) — through the model's
+    CacheSpec; only encoder-only archs (no decode path) are rejected.
     """
 
     def __init__(self, model: Model, params, cfg: EngineConfig = EngineConfig(),
@@ -125,50 +156,50 @@ class Engine:
         if mcfg.is_encoder_only:
             raise ValueError(
                 f"{mcfg.name}: encoder-only arch has no decode path")
-        if mcfg.family in ("ssm", "hybrid"):
-            raise NotImplementedError(
-                f"{mcfg.name}: slot management for SSM/conv state caches is a "
-                "follow-up; the engine serves dense/moe families today")
-        if mcfg.family == "vlm":
-            # note: the seed CLI crashed on vlm too (its prompts carry no
-            # vision_embeds) — this is a missing feature, not a regression
-            raise NotImplementedError(
-                f"{mcfg.name}: vlm serving needs vision-embed plumbing in "
-                "requests (text-only prompts cannot feed the vision prefix)")
-        if mcfg.family not in ("dense", "moe"):
-            raise NotImplementedError(
-                f"{mcfg.name}: family {mcfg.family!r} is not servable "
-                "(dense/moe supported)")
+        spec = model.cache_spec
+        if not spec.groups:
+            raise ValueError(
+                f"{mcfg.name}: family {mcfg.family!r} declares no decode "
+                "state (see models/state_spec.py)")
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.spec = spec
+        self.needs_vision = mcfg.frontend == "vision"
+        # a spec with no KV group (pure SSM) has nothing to page: its
+        # recurrent state is per-slot either way, so the paged machinery
+        # (arena, block tables, host page mirrors) is never built
+        self.paged = cfg.paged and spec.has_kv
         self.paged_kernel = cfg.paged_kernel if cfg.paged_kernel is not None \
             else jax.default_backend() == "tpu"
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.state: SlotState = init_slots(cfg.n_slots)
         self.pstate: Optional[PageState] = None
-        if cfg.paged:
-            self.cache = model.init_paged_cache(cfg.pool_pages, cfg.page_size)
+        if self.paged:
+            self.cache = model.init_paged_cache(cfg.pool_pages, cfg.page_size,
+                                                n_slots=cfg.n_slots)
             self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
                                           cfg.max_blocks)
+            # host mirror of the device free list (allocation is
+            # deterministic, so admission can check capacity without a
+            # device round-trip) — paged pools ONLY: a dense pool carrying
+            # page counters would hand the scheduler stale accounting
+            self._free_pages = cfg.pool_pages
+            self._slot_pages = np.zeros(cfg.n_slots, np.int64)
+            # multi-prefix registry: pid -> PrefixEntry, plus a per-slot
+            # record of which prefix each live slot maps (-1 == none)
+            self._prefixes: dict[int, PrefixEntry] = {}
+            self._next_pid = 0
+            self._lru_clock = 0
+            self._slot_prefix = np.full(cfg.n_slots, -1, np.int64)
         else:
             self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
-        # host mirror of the device free list (allocation is deterministic,
-        # so admission can check capacity without a device round-trip)
-        self._free_pages = cfg.pool_pages
-        self._slot_pages = np.zeros(cfg.n_slots, np.int64)  # fresh pages/slot
-        # multi-prefix registry (paged only): pid -> PrefixEntry, plus a
-        # per-slot record of which prefix each live slot maps (-1 == none)
-        self._prefixes: dict[int, PrefixEntry] = {}
-        self._next_pid = 0
-        self._lru_clock = 0
-        self._slot_prefix = np.full(cfg.n_slots, -1, np.int64)
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         # trace counters: the no-retrace-per-token guarantee is testable
         self.trace_counts = {"decode": 0, "prefill": 0}
         self._decode_jit = {}  # chunk length T -> compiled program
-        if cfg.paged:
+        if self.paged:
             self._prefill_jit = jax.jit(self._prefill_paged_impl,
                                         donate_argnums=(1, 2, 3, 4))
             self._prefill_shared_jit = jax.jit(self._prefill_shared_impl,
@@ -177,9 +208,10 @@ class Engine:
                                          donate_argnums=(1, 2))
             self._unreserve_jit = jax.jit(PAGE.unreserve, donate_argnums=(0,))
         else:
-            self._prefill_jit = jax.jit(self._prefill_dense_impl,
+            self._prefill_jit = jax.jit(self._prefill_pool_impl,
                                         donate_argnums=(1, 2, 3))
-        self._release_jit = jax.jit(self._release_impl, donate_argnums=(0, 1))
+        self._release_jit = jax.jit(self._release_impl,
+                                    donate_argnums=(0, 1, 2))
 
     # ------------------------------------------------------------------
     # jitted programs
@@ -192,15 +224,17 @@ class Engine:
             cache, state, key = carry
             key, sub = jax.random.split(key)
             run = state.active & ~state.finished
-            inputs = {"token": state.last_token, "pos": state.pos}
+            inputs = {"token": state.last_token, "pos": state.pos,
+                      "rope_pos": state.pos + state.rope_delta}
             if block_tables is not None:
                 inputs["block_table"] = block_tables
             logits, cache = self.model.decode_step(
                 params, inputs, cache, paged_kernel=self.paged_kernel)
             nxt = sample_tokens(logits, sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
-            # the cache write lands on a position admission will overwrite
-            # (paged: on an unmapped block, where the scatter drops it)
+            # the KV write lands on a position admission will overwrite
+            # (paged: on an unmapped block, where the scatter drops it) and
+            # their recurrent state churn is erased by the admit scatter
             nxt = jnp.where(run, nxt, state.last_token)
             pos = state.pos + run.astype(jnp.int32)
             done = pos >= state.max_total
@@ -214,17 +248,18 @@ class Engine:
             step, (cache, state, key), None, length=T)
         return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
 
-    def _sample_first(self, logits, plens, key):
-        """Per-row last-prompt-position logits -> each request's first token."""
+    def _sample_first(self, logits, lasts, key):
+        """Per-row logits at index ``lasts`` -> each request's first token."""
         last = jnp.take_along_axis(
-            logits, jnp.maximum(plens - 1, 0)[:, None, None], axis=1)[:, 0]
+            logits, jnp.maximum(lasts, 0)[:, None, None], axis=1)[:, 0]
         key, sub = jax.random.split(key)
         return sample_tokens(last, sub, self.sampling), key
 
-    def _admit_state(self, state, slots, first, plens, max_news):
-        """Scatter slot metadata for an admitted wave; returns (state, mt)."""
+    def _admit_state(self, state, slots, first, plens, max_news, rope_delta):
+        """Scatter slot metadata for an admitted wave; ``plens`` counts every
+        cache position the prompt holds (vision prefix included)."""
         max_total = plens + jnp.maximum(max_news, 1) - 1
-        state = SLOT.admit(state, slots, first, plens, max_total)
+        state = SLOT.admit(state, slots, first, plens, max_total, rope_delta)
         done0 = max_total <= plens  # max_new == 1: the prefill token is it
         if self.cfg.eos_id is not None:
             done0 = done0 | (first == self.cfg.eos_id)
@@ -232,52 +267,58 @@ class Engine:
             finished=state.finished.at[slots].set(done0, mode="drop"))
         return state, max_total
 
-    def _quantize_like(self, ck, k_s, v_s):
-        if ck.dtype == jnp.int8:
-            k_s = jnp.clip(jnp.round(k_s.astype(jnp.float32) * KV_QSCALE),
-                           -127, 127)
-            v_s = jnp.clip(jnp.round(v_s.astype(jnp.float32) * KV_QSCALE),
-                           -127, 127)
-        return k_s.astype(ck.dtype), v_s.astype(ck.dtype)
+    def _forward_wave(self, params, tokens, plens, vis):
+        """The admission forward: full-sequence pass over the (padded) wave,
+        vision prefix prepended for VLM waves, seq_lens pinning recurrent
+        snapshots to each row's last valid token. Returns (logits, states,
+        effective prompt lens, per-row rope delta)."""
+        inputs = {"tokens": tokens}
+        n_patches = 0
+        if vis is not None:
+            inputs["vision_embeds"] = vis
+            n_patches = vis.shape[1]
+        logits, _, states = self.model.forward(params, inputs,
+                                               return_cache=True,
+                                               seq_lens=plens)
+        eff = plens + n_patches
+        delta = jnp.full_like(plens, _rope_delta(n_patches))
+        return logits, states, eff, delta
 
-    def _prefill_dense_impl(self, params, cache, state, key, tokens, plens,
-                            slots, max_news):
-        """One admission wave into the dense pool: forward the (padded)
-        prompts, sample first tokens, scatter KV + slot metadata."""
+    def _prefill_pool_impl(self, params, cache, state, key, tokens, plens,
+                           slots, max_news, vis):
+        """One admission wave into the per-slot pool (dense KV rows and/or
+        recurrent leaves): forward the (padded) prompts, sample first
+        tokens, scatter every spec group + slot metadata."""
         self.trace_counts["prefill"] += 1
-        logits, _, kvs = self.model.forward(params, {"tokens": tokens},
-                                            return_cache=True)
-        first, key = self._sample_first(logits, plens, key)
-        ck, cv = cache
-        k_s, v_s = self._quantize_like(ck, *kvs)  # (L, K, Lb, KV, hd)
-        Lb = tokens.shape[1]
-        ck = ck.at[:, slots, :Lb].set(k_s, mode="drop")
-        cv = cv.at[:, slots, :Lb].set(v_s, mode="drop")
-        state, _ = self._admit_state(state, slots, first, plens, max_news)
-        return (ck, cv), state, key, first
+        logits, states, eff, delta = self._forward_wave(
+            params, tokens, plens, vis)
+        first, key = self._sample_first(logits, eff - 1, key)
+        cache = SSPEC.admit_dense(self.spec, cache, states, slots, KV_QSCALE)
+        state, _ = self._admit_state(state, slots, first, eff, max_news,
+                                     delta)
+        return cache, state, key, first
 
     def _prefill_paged_impl(self, params, cache, state, pstate, key, tokens,
-                            plens, slots, max_news):
+                            plens, slots, max_news, vis):
         """Fresh-request admission into the paged pool. Same forward as the
-        dense path (bit-exact parity); only the KV scatter goes through the
-        freshly-allocated block tables."""
+        per-slot path (bit-exact parity); KV groups scatter through the
+        freshly-allocated block tables, recurrent groups slot-scatter."""
         self.trace_counts["prefill"] += 1
         cfg = self.cfg
-        logits, _, kvs = self.model.forward(params, {"tokens": tokens},
-                                            return_cache=True)
-        first, key = self._sample_first(logits, plens, key)
+        logits, states, eff, delta = self._forward_wave(
+            params, tokens, plens, vis)
+        first, key = self._sample_first(logits, eff - 1, key)
 
-        max_total = plens + jnp.maximum(max_news, 1) - 1
+        max_total = eff + jnp.maximum(max_news, 1) - 1
         n_blocks = (max_total + cfg.page_size - 1) // cfg.page_size
         pstate, ok = PAGE.alloc(pstate, slots, n_blocks)
         bt = pstate.block_tables.at[slots].get(
             mode="fill", fill_value=cfg.pool_pages)  # (K, MB)
 
-        ck, cv = cache
-        k_s, v_s = self._quantize_like(ck, *kvs)  # (L, K, Lb, KV, hd)
         K, Lb = tokens.shape
-        tpos = jnp.broadcast_to(jnp.arange(Lb, dtype=jnp.int32)[None, :],
-                                (K, Lb))
+        S = Lb + (0 if vis is None else vis.shape[1])
+        tpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :],
+                                (K, S))
         pidx = tpos // cfg.page_size
         page = jnp.where(
             pidx < cfg.max_blocks,
@@ -285,21 +326,22 @@ class Engine:
                                 axis=1),
             cfg.pool_pages)  # bucket padding past the allocation: dropped
         off = tpos % cfg.page_size
-        ck = ck.at[:, page, off].set(k_s, mode="drop")
-        cv = cv.at[:, page, off].set(v_s, mode="drop")
+        cache = SSPEC.admit_paged(self.spec, cache, states, slots, page, off,
+                                  ok, KV_QSCALE)
 
-        new_state, _ = self._admit_state(state, slots, first, plens, max_news)
+        new_state, _ = self._admit_state(state, slots, first, eff, max_news,
+                                         delta)
         state = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), new_state, state)
-        return (ck, cv), state, pstate, key, first, ok
+        return cache, state, pstate, key, first, ok
 
     def _prefill_shared_impl(self, params, cache, state, pstate, key, tokens,
                              suff_lens, shared_lens, slots, max_news,
                              shared_pages):
-        """Shared-prefix admission: map the registered prefix pages
-        (refcounted) into each slot's block table, then prefill ONLY the
-        suffix through the paged pool — the shared pages' prefill is skipped
-        entirely."""
+        """Shared-prefix admission (pure token-KV specs only): map the
+        registered prefix pages (refcounted) into each slot's block table,
+        then prefill ONLY the suffix through the paged pool — the shared
+        pages' prefill is skipped entirely."""
         self.trace_counts["prefill"] += 1
         cfg = self.cfg
         plens = shared_lens + suff_lens
@@ -317,7 +359,8 @@ class Engine:
         key, sub = jax.random.split(key)
         first = sample_tokens(last, sub, self.sampling)
 
-        new_state, _ = self._admit_state(state, slots, first, plens, max_news)
+        new_state, _ = self._admit_state(state, slots, first, plens, max_news,
+                                         jnp.zeros_like(plens))
         state = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), new_state, state)
         return cache, state, pstate, key, first, ok
@@ -337,13 +380,16 @@ class Engine:
             paged_kernel=self.paged_kernel)
         return cache, pstate, pages, ok
 
-    def _release_impl(self, state, pstate, slots):
-        """Free harvested slots; with a paged pool the SAME program also
-        unmaps their block tables and returns the pages to the free list."""
+    def _release_impl(self, cache, state, pstate, slots):
+        """Free harvested slots in ONE program: clear the slot scalars, zero
+        any recurrent state leaves (no positions to mask them by), and with
+        a paged pool unmap the block tables, returning the pages to the
+        free list."""
         state = SLOT.release(state, slots)
+        cache = SSPEC.release_slots(self.spec, cache, slots)
         if pstate is not None:
             pstate = PAGE.release(pstate, slots)
-        return state, pstate
+        return cache, state, pstate
 
     def _decode_fn(self, T: int):
         if T not in self._decode_jit:
@@ -358,31 +404,37 @@ class Engine:
     def reset(self):
         cfg = self.cfg
         self.state = init_slots(cfg.n_slots)
-        if cfg.paged:
+        if self.paged:
             self.cache = self.model.init_paged_cache(cfg.pool_pages,
-                                                     cfg.page_size)
+                                                     cfg.page_size,
+                                                     n_slots=cfg.n_slots)
             self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
                                           cfg.max_blocks)
+            self._free_pages = cfg.pool_pages
+            self._slot_pages[:] = 0
+            self._slot_prefix[:] = -1
+            survivors = [e.tokens for e in self._prefixes.values()]
+            self._prefixes = {}
         else:
             self.cache = self.model.init_cache(cfg.n_slots, cfg.max_len)
-        self._free_pages = cfg.pool_pages
-        self._slot_pages[:] = 0
-        self._slot_prefix[:] = -1
+            survivors = []
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         self.key = jax.random.PRNGKey(self.sampling.seed)
-        survivors = [e.tokens for e in self._prefixes.values()]
-        self._prefixes = {}
         for toks in survivors:  # registered prefixes survive resets
             self.register_prefix(toks)
 
     @property
     def free_pages(self) -> int:
+        if not self.paged:
+            raise ValueError(
+                "dense pool keeps no page accounting (cfg.paged is False or "
+                "the model has no pageable KV state)")
         return self._free_pages
 
     @property
     def prefix_pages(self) -> Optional[np.ndarray]:
         """All pages held by the prefix registry (None when empty)."""
-        if not self._prefixes:
+        if not self.paged or not self._prefixes:
             return None
         return np.concatenate([e.pages for e in self._prefixes.values()])
 
@@ -392,12 +444,16 @@ class Engine:
         :attr:`free_pages` when budgeting, excluding the prefixes its
         candidate requests map — admission never evicts a prefix the wave
         itself matches."""
+        if not self.paged:
+            return 0
         return sum(len(e.pages) for e in self._prefixes.values()
                    if e.live == 0 and e.pid not in exclude)
 
     def prefix_match(self, prompt: np.ndarray) -> Optional[PrefixEntry]:
         """Longest registered prefix covering ``prompt`` with >= 1 suffix
         token left over (the suffix provides the first-token logits)."""
+        if not self.paged:
+            return None
         best = None
         for e in self._prefixes.values():
             if len(prompt) > e.length and \
@@ -416,15 +472,18 @@ class Engine:
 
     _UNMATCHED = object()  # pages_needed sentinel: "run the prefix scan"
 
-    def pages_needed(self, prompt, max_new: int, match=_UNMATCHED) -> int:
+    def pages_needed(self, prompt, max_new: int, match=_UNMATCHED,
+                     n_vis: int = 0) -> int:
         """Fresh pages admission of this request would take (0 on a dense
-        pool). The scheduler checks this against :attr:`free_pages` plus
-        :meth:`evictable_pages`. Pass ``match`` (a PrefixEntry or None from
-        :meth:`prefix_match`) to skip re-scanning the registry."""
-        if not self.cfg.paged:
+        pool). ``n_vis`` counts vision-prefix positions the request caches
+        ahead of its text. The scheduler checks this against
+        :attr:`free_pages` plus :meth:`evictable_pages`. Pass ``match`` (a
+        PrefixEntry or None from :meth:`prefix_match`) to skip re-scanning
+        the registry."""
+        if not self.paged:
             return 0
         prompt = np.asarray(prompt)
-        mt = len(prompt) + max(max_new, 1) - 1
+        mt = n_vis + len(prompt) + max(max_new, 1) - 1
         n_blocks = -(-mt // self.cfg.page_size)
         if match is Engine._UNMATCHED:
             match = self.prefix_match(prompt)
@@ -462,9 +521,17 @@ class Engine:
         registered (longest match wins at admission); re-registering the
         same tokens is a no-op returning the existing entry's length. When
         the free list is short, idle prefixes are evicted LRU-first to make
-        room."""
-        if not self.cfg.paged:
-            raise ValueError("shared-prefix reuse requires paged=True")
+        room. Needs a paged pool of pure token KV: recurrent state and
+        vision prefixes cannot be captured by shared pages."""
+        if not self.paged:
+            raise ValueError("shared-prefix reuse requires a paged KV pool")
+        if self.spec.has_recurrent:
+            raise ValueError(
+                "shared-prefix pages cannot capture recurrent (SSM) state")
+        if self.needs_vision:
+            raise ValueError(
+                "shared-prefix reuse is token-based; vision-prefixed "
+                "requests cannot map prefetched pages")
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         n_full = len(tokens) // self.cfg.page_size
         if n_full == 0:
@@ -500,13 +567,18 @@ class Engine:
         return shared_len
 
     def admit_wave(self, prompts, slot_ids, max_news, keep_pids=(),
-                   matches=None):
+                   matches=None, vision=None):
         """Prefill `prompts` (list of 1-D int arrays) into `slot_ids`.
         Returns each request's first generated token as a (K,) numpy array
         (this is the TTFT sync). Raises :class:`PagesExhausted` when the
         paged pool cannot hold the wave (no partial admission happens).
 
-        Paged engines split the wave internally: requests matching a
+        ``vision``: optional list of per-request (P, d_model) vision-embed
+        arrays (None entries for text requests). VLM requests MUST carry
+        one — the model's forward has no text-only input path. The wave is
+        split into sub-waves of equal patch count so each traces one shape.
+
+        Paged engines split the wave further: requests matching a
         registered prefix go through the suffix-only shared program (one
         sub-wave per matched prefix), the rest through the fresh-prefill
         program. A wave that outgrows the free list first evicts idle
@@ -521,29 +593,53 @@ class Engine:
         scheduler's keep_pids shielding guarantees that within a round)."""
         assert len(prompts) == len(slot_ids) == len(max_news)
         prompts = [np.asarray(p, np.int32) for p in prompts]
-        for p, mn in zip(prompts, max_news):
-            if len(p) + max(mn, 1) - 1 > self.cfg.max_len:
+        if vision is None:
+            vision = [None] * len(prompts)
+        if self.needs_vision and any(v is None for v in vision):
+            raise ValueError(
+                f"{self.model.cfg.name}: vlm requests must carry "
+                "vision_embeds (the vision prefix feeds the first cache "
+                "positions; there is no text-only forward)")
+        if not self.needs_vision and any(v is not None for v in vision):
+            # the forward would silently drop the embeds while the slot /
+            # page bookkeeping still counted their positions
+            raise ValueError(
+                f"{self.model.cfg.name}: family "
+                f"{self.model.cfg.family!r} has no vision frontend; "
+                "requests must not carry vision_embeds")
+        for p, mn, v in zip(prompts, max_news, vision):
+            total = _vis_patches(v) + len(p) + max(mn, 1) - 1
+            if total > self.cfg.max_len:
                 raise ValueError(
-                    f"request needs {len(p) + mn - 1} cache slots > "
+                    f"request needs {total} cache slots > "
                     f"max_len={self.cfg.max_len}")
-        if not self.cfg.paged:
-            return self._admit_dense(prompts, slot_ids, max_news)
+        if not self.paged:
+            first = np.zeros(len(prompts), np.int32)
+            for idxs, vis_p in self._split_by_patches(vision):
+                first[idxs] = self._admit_pool(
+                    [prompts[i] for i in idxs], [slot_ids[i] for i in idxs],
+                    [max_news[i] for i in idxs],
+                    None if vis_p == 0 else np.stack(
+                        [vision[i] for i in idxs]))
+            return first
         if matches is None:
-            matches = [self.prefix_match(p) for p in prompts]
-        need = [self.pages_needed(p, mn, match=e)
-                for p, mn, e in zip(prompts, max_news, matches)]
+            matches = [None if v is not None else self.prefix_match(p)
+                       for p, v in zip(prompts, vision)]
+        need = [self.pages_needed(p, mn, match=e, n_vis=_vis_patches(v))
+                for p, mn, e, v in zip(prompts, max_news, matches, vision)]
         if sum(need) > self._free_pages:
             self._evict_lru(sum(need), keep={
                 e.pid for e in matches if e is not None} | set(keep_pids))
         if sum(need) > self._free_pages:
             raise PagesExhausted(
                 f"wave needs {sum(need)} pages, {self._free_pages} free")
-        i_fr = [i for i, e in enumerate(matches) if e is None]
         first = np.zeros(len(prompts), np.int32)
-        if i_fr:
-            first[i_fr] = self._admit_paged(
-                [prompts[i] for i in i_fr], [slot_ids[i] for i in i_fr],
-                [max_news[i] for i in i_fr], [need[i] for i in i_fr])
+        fresh = [i for i, e in enumerate(matches) if e is None]
+        for idxs, vis_p in self._split_by_patches(vision, only=fresh):
+            first[idxs] = self._admit_paged(
+                [prompts[i] for i in idxs], [slot_ids[i] for i in idxs],
+                [max_news[i] for i in idxs], [need[i] for i in idxs],
+                None if vis_p == 0 else np.stack([vision[i] for i in idxs]))
         by_pid: dict = {}
         for i, e in enumerate(matches):
             if e is not None:
@@ -555,12 +651,26 @@ class Engine:
                 [max_news[i] for i in idxs], [need[i] for i in idxs], entry)
         return first
 
-    def _wave_arrays(self, rows, slot_ids, max_news):
+    @staticmethod
+    def _split_by_patches(vision, only=None):
+        """Group request indices by vision patch count (0 == text) so every
+        sub-wave stacks to one (K, P, D) shape."""
+        groups: dict = {}
+        idxs = range(len(vision)) if only is None else only
+        for i in idxs:
+            groups.setdefault(_vis_patches(vision[i]), []).append(i)
+        return [(v, k) for k, v in sorted(groups.items())]
+
+    def _wave_arrays(self, rows, slot_ids, max_news, n_vis=0):
         """Pad a wave to a (pow2 rows, bucketed length) shape; padding rows
-        scatter to slot index n_slots -> dropped on device."""
+        scatter to slot index n_slots -> dropped on device. ``n_vis`` vision
+        positions ride ahead of the text, so the text bucket is capped at
+        max_len - n_vis (the per-request budget check guarantees every
+        prompt in the wave fits under that cap)."""
         K = len(rows)
         lens = [len(r) for r in rows]
-        Lb = _bucket_len(self.cfg.prefill_buckets, max(lens), self.cfg.max_len)
+        Lb = _bucket_len(self.cfg.prefill_buckets, max(lens),
+                         self.cfg.max_len - n_vis)
         Kp = _pad_pow2(K, self.cfg.n_slots)
         toks = np.zeros((Kp, Lb), np.int32)
         for i, r in enumerate(rows):
@@ -571,28 +681,39 @@ class Engine:
         mn_v = np.asarray(list(max_news) + [1] * (Kp - K), np.int32)
         return toks, len_v, slot_v, mn_v, K
 
+    def _pad_vis(self, vis, Kp):
+        if vis is None:
+            return None
+        K, P, D = vis.shape
+        if Kp > K:
+            vis = np.concatenate(
+                [vis, np.zeros((Kp - K, P, D), vis.dtype)], axis=0)
+        return jnp.asarray(vis)
+
     def _book_pages(self, slot_ids, need):
         self._free_pages -= sum(need)
         for s, n in zip(slot_ids, need):
             self._slot_pages[s] = n
 
-    def _admit_dense(self, prompts, slot_ids, max_news):
+    def _admit_pool(self, prompts, slot_ids, max_news, vis=None):
         toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
-            prompts, slot_ids, max_news)
+            prompts, slot_ids, max_news,
+            n_vis=0 if vis is None else vis.shape[1])
         self.cache, self.state, self.key, first = self._prefill_jit(
             self.params, self.cache, self.state, self.key,
             jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
-            jnp.asarray(mn_v))
+            jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
         return np.asarray(first)[:K]
 
-    def _admit_paged(self, prompts, slot_ids, max_news, need):
+    def _admit_paged(self, prompts, slot_ids, max_news, need, vis=None):
         toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
-            prompts, slot_ids, max_news)
+            prompts, slot_ids, max_news,
+            n_vis=0 if vis is None else vis.shape[1])
         self.cache, self.state, self.pstate, self.key, first, ok = \
             self._prefill_jit(
                 self.params, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
-                jnp.asarray(mn_v))
+                jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
         assert bool(ok), "host free-page mirror out of sync with device"
         self._book_pages(slot_ids, need)
         return np.asarray(first)[:K]
@@ -623,7 +744,7 @@ class Engine:
         """Run T jitted decode steps; returns device (toks, valid) of shape
         (T, n_slots). No host sync happens here — harvest() does that."""
         T = T or self.cfg.chunk
-        bt = self.pstate.block_tables if self.cfg.paged else None
+        bt = self.pstate.block_tables if self.paged else None
         self.cache, self.state, self.key, toks, valid = self._decode_fn(T)(
             self.params, self.cache, self.state, self.key, bt)
         return toks, valid
@@ -636,9 +757,9 @@ class Engine:
 
     def release(self, slot_ids):
         slot_ids = np.asarray(slot_ids, np.int32)
-        self.state, self.pstate = self._release_jit(
-            self.state, self.pstate, jnp.asarray(slot_ids))
-        if self.cfg.paged:
+        self.cache, self.state, self.pstate = self._release_jit(
+            self.cache, self.state, self.pstate, jnp.asarray(slot_ids))
+        if self.paged:
             self._free_pages += int(self._slot_pages[slot_ids].sum())
             self._slot_pages[slot_ids] = 0
             for s in slot_ids:
@@ -650,7 +771,7 @@ class Engine:
     # ------------------------------------------------------------------
     # one-wave convenience: same-shape batch, single decode program
     # ------------------------------------------------------------------
-    def generate(self, prompts, max_new: int):
+    def generate(self, prompts, max_new: int, vision=None):
         """Generate ``max_new`` tokens for a batch of equal-length prompts.
 
         One prefill + ONE jitted scan over the remaining max_new - 1 steps:
@@ -659,6 +780,7 @@ class Engine:
         truncated at their EOS: frozen slots re-feed their last token on
         device, and those repeats are masked out of the returned (B, T)
         array (padded with ``eos_id``) instead of leaking to the caller.
+        ``vision``: optional (B, P, d_model) vision-embed batch (VLM).
         """
         prompts = np.asarray(prompts, np.int32)
         B = prompts.shape[0]
@@ -666,7 +788,9 @@ class Engine:
             raise ValueError(f"batch {B} > n_slots={self.cfg.n_slots}")
         self.reset()
         first = self.admit_wave(list(prompts), list(range(B)),
-                                [max_new] * B)
+                                [max_new] * B,
+                                vision=None if vision is None
+                                else list(np.asarray(vision)))
         if max_new > 1:
             toks, valid = self.decode_chunk(max_new - 1)
             t, v, _, _ = self.harvest(toks, valid)

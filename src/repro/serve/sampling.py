@@ -1,8 +1,8 @@
 """On-device token sampling for the serving engine.
 
 ``SamplingConfig`` is a frozen (hashable) dataclass so it can close over the
-jitted decode program as a static value — greedy vs temperature vs top-k
-select different traced graphs, never a per-token host branch.
+jitted decode program as a static value — greedy vs temperature vs top-k vs
+top-p select different traced graphs, never a per-token host branch.
 """
 from __future__ import annotations
 
@@ -15,17 +15,43 @@ import jax.numpy as jnp
 @dataclass(frozen=True)
 class SamplingConfig:
     temperature: float = 0.0  # 0 => greedy argmax
-    top_k: int = 0  # 0 => sample the full softmax
+    top_k: int = 0  # 0 => no top-k truncation
+    # nucleus mass in (0, 1]; >= 1 => no top-p truncation. 0 is rejected
+    # rather than read as "disabled": small values degenerate toward top-1,
+    # so a silent flip to full-softmax at exactly 0 would invert intent.
+    top_p: float = 1.0
     seed: int = 0  # PRNG seed for the engine's sampling stream
+
+    def __post_init__(self):
+        if self.top_p <= 0.0:
+            raise ValueError(
+                f"top_p={self.top_p} must be > 0 (use 1.0 to disable; "
+                "values near 0 approach greedy)")
 
     @property
     def greedy(self) -> bool:
         return self.temperature <= 0.0
 
 
+def _nucleus_mask(logits, top_p: float):
+    """Keep the SMALLEST prefix of the probability-sorted vocab whose mass
+    reaches ``top_p`` — i.e. a token survives iff the mass strictly before
+    it is < top_p. Same exact-ties discipline as top-k: ``jnp.argsort`` is
+    stable, so tied logits at the nucleus boundary are kept lowest-index
+    first, never all-or-none (which would silently inflate the nucleus)."""
+    order = jnp.argsort(-logits, axis=-1)  # descending, ties by lowest index
+    svals = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(svals, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs  # exclusive prefix mass
+    keep_sorted = before < top_p  # always keeps the top-1 token
+    return jnp.zeros(logits.shape, bool).at[
+        jnp.arange(logits.shape[0])[:, None], order].set(keep_sorted)
+
+
 def sample_tokens(logits, key, sc: SamplingConfig):
     """logits (B, V) -> sampled token ids (B,) int32. Pure and jit-safe;
-    ``sc`` must be static at trace time."""
+    ``sc`` must be static at trace time. top-k truncation applies first,
+    then top-p renormalizes over the survivors (the usual composition)."""
     if sc.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / sc.temperature
@@ -38,4 +64,6 @@ def sample_tokens(logits, key, sc: SamplingConfig):
         keep = jnp.zeros(logits.shape, bool).at[
             jnp.arange(logits.shape[0])[:, None], idx].set(True)
         logits = jnp.where(keep, logits, -jnp.inf)
+    if sc.top_p < 1.0:  # __post_init__ guarantees top_p > 0
+        logits = jnp.where(_nucleus_mask(logits, sc.top_p), logits, -jnp.inf)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

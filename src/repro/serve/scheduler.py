@@ -45,6 +45,16 @@ class Request:
     rid: int
     tokens: np.ndarray  # (P,) int32 prompt
     max_new: int = 16
+    # VLM: precomputed vision-patch embeddings (n_patches, d_model) that
+    # prefill feeds ahead of the text tokens (they occupy the request's
+    # first cache positions). None for text-only requests; REQUIRED when
+    # the engine serves a vision-frontend model.
+    vision_embeds: Optional[np.ndarray] = None
+
+    @property
+    def n_vis(self) -> int:
+        return 0 if self.vision_embeds is None else \
+            int(self.vision_embeds.shape[0])
 
 
 @dataclass
@@ -124,39 +134,50 @@ class Scheduler:
                 match_of: Dict[int, object] = {}  # rid -> PrefixEntry|None
                 while queue and len(take) < len(free):
                     r0 = queue[0]
-                    ent = eng.prefix_match(np.asarray(r0.tokens))
-                    need = eng.pages_needed(r0.tokens, r0.max_new, match=ent)
-                    new_matched = matched | (
-                        {ent.pid} if ent is not None else set())
-                    budget = eng.free_pages + \
-                        eng.evictable_pages(exclude=new_matched)
-                    if taken_need + need > budget:
-                        if not take and all(r is None for r in self._slot_rid):
-                            raise ValueError(
-                                f"request {r0.rid} needs {need} KV pages"
-                                f" > pool capacity {budget}; it can never be "
-                                "admitted")
-                        break
-                    taken_need += need
-                    matched = new_matched
-                    match_of[r0.rid] = ent
+                    if eng.paged:
+                        # vision requests never map token prefixes (their
+                        # vision prefix occupies the leading cache positions)
+                        ent = None if r0.vision_embeds is not None else \
+                            eng.prefix_match(np.asarray(r0.tokens))
+                        need = eng.pages_needed(r0.tokens, r0.max_new,
+                                                match=ent, n_vis=r0.n_vis)
+                        new_matched = matched | (
+                            {ent.pid} if ent is not None else set())
+                        budget = eng.free_pages + \
+                            eng.evictable_pages(exclude=new_matched)
+                        if taken_need + need > budget:
+                            if not take and \
+                                    all(r is None for r in self._slot_rid):
+                                raise ValueError(
+                                    f"request {r0.rid} needs {need} KV pages"
+                                    f" > pool capacity {budget}; it can "
+                                    "never be admitted")
+                            break
+                        taken_need += need
+                        matched = new_matched
+                        match_of[r0.rid] = ent
                     take.append(queue.popleft())
-                waves: Dict[int, List[Request]] = {}
+                waves: Dict[tuple, List[Request]] = {}
                 for r in take:
+                    # bucket by padded text length AND patch count so each
+                    # wave prefills one traced shape (the engine re-splits
+                    # mixed patch counts, but pre-grouping keeps waves full)
                     b = _bucket_len(eng.cfg.prefill_buckets, len(r.tokens),
                                     eng.cfg.max_len)
-                    waves.setdefault(b, []).append(r)
+                    waves.setdefault((b, r.n_vis), []).append(r)
                 t_round = time.perf_counter()  # admission round began
                 wave_items = sorted(waves.items())
                 for wi, (b, wave) in enumerate(wave_items):
                     slots = [free.pop(0) for _ in wave]
                     t_wave = time.perf_counter()
                     try:
-                        first = eng.admit_wave([r.tokens for r in wave], slots,
-                                               [r.max_new for r in wave],
-                                               keep_pids=matched,
-                                               matches=[match_of[r.rid]
-                                                        for r in wave])
+                        first = eng.admit_wave(
+                            [r.tokens for r in wave], slots,
+                            [r.max_new for r in wave],
+                            keep_pids=matched,
+                            matches=[match_of.get(r.rid) for r in wave]
+                            if eng.paged else None,
+                            vision=[r.vision_embeds for r in wave])
                     except PagesExhausted:
                         # the budget's reclaimable slack was optimistic (the
                         # pages belong to a prefix this very wave maps, so

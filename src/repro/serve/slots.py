@@ -25,6 +25,9 @@ class SlotState(NamedTuple):
     max_total: jnp.ndarray  # (S,) int32 — prompt_len + max_new - 1 (cache cap)
     active: jnp.ndarray  # (S,) bool — slot holds a live request
     finished: jnp.ndarray  # (S,) bool — done, awaiting host harvest
+    rope_delta: jnp.ndarray  # (S,) int32 — rotary pos = pos + rope_delta
+    # (0 for text slots; a VLM slot carries grid - n_patches because the
+    # M-RoPE text stream restarts at the vision grid edge)
 
 
 def init_slots(n_slots: int) -> SlotState:
@@ -38,11 +41,12 @@ def init_slots(n_slots: int) -> SlotState:
         max_total=jnp.zeros((n_slots,), i32),
         active=jnp.zeros((n_slots,), bool),
         finished=jnp.zeros((n_slots,), bool),
+        rope_delta=jnp.zeros((n_slots,), i32),
     )
 
 
 def admit(state: SlotState, slots, first_token, prompt_len,
-          max_total) -> SlotState:
+          max_total, rope_delta=None) -> SlotState:
     """Scatter a wave of freshly-prefilled requests into their slots.
 
     slots: (K,) int32 slot indices; padding rows use index n_slots which is
@@ -51,6 +55,8 @@ def admit(state: SlotState, slots, first_token, prompt_len,
     bucket, not once per wave.
     """
     kw = dict(mode="drop")
+    if rope_delta is None:
+        rope_delta = jnp.zeros_like(prompt_len)
     return SlotState(
         last_token=state.last_token.at[slots].set(first_token, **kw),
         pos=state.pos.at[slots].set(prompt_len, **kw),
@@ -58,6 +64,7 @@ def admit(state: SlotState, slots, first_token, prompt_len,
         max_total=state.max_total.at[slots].set(max_total, **kw),
         active=state.active.at[slots].set(True, **kw),
         finished=state.finished.at[slots].set(False, **kw),
+        rope_delta=state.rope_delta.at[slots].set(rope_delta, **kw),
     )
 
 

@@ -1,0 +1,267 @@
+"""Family-matrix serving: SSM / hybrid / VLM through the spec-driven engine.
+
+Greedy scheduler-stream output must be bit-exact vs a per-request full
+forward over [prompt | generated] — for recurrent families that proves the
+snapshot-on-prefill / scatter-admit / zero-reset slot lifecycle, for VLM the
+vision-prefix plumbing and the decode-time rotary offset. Runs forced-CPU
+(`make test-serve-families`).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import state_spec as SSPEC
+from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module", params=["mamba2-1.3b", "zamba2-7b"])
+def recurrent(request):
+    cfg = get_config(request.param).reduced()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    cfg = get_config("qwen2-vl-2b").reduced()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def assert_greedy_vs_forward(model, params, prompt, gen_toks, vis=None):
+    """Every generated token == the argmax continuation of ONE full forward
+    over [vision? | prompt | generated]."""
+    seq = np.concatenate([np.asarray(prompt), np.asarray(gen_toks)])
+    inputs = {"tokens": jnp.asarray(seq[None].astype(np.int32))}
+    P = 0
+    if vis is not None:
+        inputs["vision_embeds"] = jnp.asarray(np.asarray(vis)[None])
+        P = vis.shape[0]
+    logits, _ = model.forward(params, inputs)
+    ref = np.asarray(jnp.argmax(logits[0], axis=-1))
+    off = P + len(prompt) - 1
+    for i, t in enumerate(np.asarray(gen_toks)):
+        assert t == ref[off + i], (
+            f"token {i}: engine {t} != full-forward argmax {ref[off + i]}")
+
+
+def _stream(cfg, n=9, vis_patches=0, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        toks = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 14))).astype(np.int32)
+        vis = rng.standard_normal(
+            (vis_patches, cfg.d_model)).astype(np.float32) \
+            if vis_patches else None
+        reqs.append(Request(rid, toks, int(rng.integers(1, 8)),
+                            vision_embeds=vis))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid: scheduler-stream greedy parity incl. slot reuse
+# ---------------------------------------------------------------------------
+
+def test_recurrent_stream_matches_full_forward(recurrent):
+    """9 mixed-length requests through 4 slots: slot reuse forces the
+    snapshot/scatter-admit/zero-reset lifecycle on the recurrent leaves;
+    every completion must be the exact greedy continuation."""
+    model, params = recurrent
+    cfg = model.cfg
+    reqs = _stream(cfg)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=32, chunk=4,
+                              prefill_buckets=(8, 16)))
+    comps = Scheduler(eng).run(reqs)
+    assert sorted(c.rid for c in comps) == list(range(9))
+    assert eng.trace_counts["decode"] == 1, "one decode program, ever"
+    for c in comps:
+        r = reqs[c.rid]
+        assert len(c.tokens) == r.max_new
+        assert_greedy_vs_forward(model, params, r.tokens, c.tokens)
+    assert not np.asarray(eng.state.active).any()
+    # released slots' recurrent state is zero-reset, not left to churn
+    for g in eng.spec.recurrent_groups:
+        for leaf in eng.spec.unpack(eng.cache)[g.name]:
+            assert np.abs(np.asarray(leaf)).max() == 0.0
+
+
+def test_hybrid_paged_equals_dense_pool():
+    """Zamba2 pages its shared-attention KV; the mamba leaves slot-scatter
+    either way. Paged and dense pools must emit identical tokens."""
+    cfg = get_config("zamba2-7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _stream(cfg, seed=3)
+    mk = lambda paged: Engine(
+        model, params,
+        EngineConfig(n_slots=4, max_len=32, chunk=4, prefill_buckets=(8, 16),
+                     paged=paged, page_size=8))
+    eng_p = mk(True)
+    assert eng_p.paged and eng_p.pstate is not None
+    out = {}
+    for paged, eng in ((True, eng_p), (False, mk(False))):
+        comps = Scheduler(eng).run(reqs)
+        out[paged] = {c.rid: list(c.tokens) for c in comps}
+    assert out[True] == out[False]
+    assert eng_p.free_pages == eng_p.cfg.pool_pages, "pages leaked"
+
+
+def test_ssm_has_nothing_to_page():
+    """A pure-recurrent spec ignores paged=True (no KV to page): no arena,
+    no page accounting, and prefix registration is rejected."""
+    cfg = get_config("mamba2-1.3b").reduced()
+    model = Model(cfg)
+    eng = Engine(model, model.init(jax.random.PRNGKey(0)),
+                 EngineConfig(n_slots=2, max_len=32, paged=True,
+                              prefill_buckets=(8,)))
+    assert not eng.paged and eng.pstate is None
+    with pytest.raises(ValueError, match="paged"):
+        eng.register_prefix(np.zeros(16, np.int32))
+    with pytest.raises(ValueError, match="page accounting"):
+        eng.free_pages
+
+
+def test_mamba_prefill_snapshot_matches_stepwise(recurrent):
+    """Snapshot-on-prefill under bucket padding: the (ssm, conv) states the
+    padded forward returns at seq_lens must equal decoding the same prompt
+    token-by-token (the conv window must hold raw PRE-conv inputs)."""
+    model, params = recurrent
+    cfg = model.cfg
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 5),
+                                         0, cfg.vocab_size), np.int32)
+    _, _, states = model.forward(
+        params, {"tokens": jnp.asarray(np.pad(toks, ((0, 0), (0, 11))))},
+        return_cache=True, seq_lens=jnp.asarray([5, 5], jnp.int32))
+    by_group = model.cache_spec.unpack(states)
+    name = model.cache_spec.recurrent_groups[0].name
+    ssm_snap, conv_snap = by_group[name]
+
+    cache = model.init_cache(2, 16)
+    for t in range(5):
+        _, cache = model.decode_step(
+            params, {"token": jnp.asarray(toks[:, t]), "pos": jnp.int32(t)},
+            cache)
+    ssm_ref, conv_ref = model.cache_spec.unpack(cache)[name]
+    np.testing.assert_allclose(np.asarray(ssm_snap), np.asarray(ssm_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(conv_snap), np.asarray(conv_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# VLM: vision_embeds requests through the scheduler stream
+# ---------------------------------------------------------------------------
+
+def test_vlm_stream_matches_full_forward(vlm):
+    model, params = vlm
+    cfg = model.cfg
+    reqs = _stream(cfg, vis_patches=cfg.vision_patches, seed=1)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=4, max_len=64, chunk=4,
+                              prefill_buckets=(8, 16)))
+    comps = Scheduler(eng).run(reqs)
+    assert sorted(c.rid for c in comps) == list(range(9))
+    for c in comps:
+        r = reqs[c.rid]
+        assert len(c.tokens) == r.max_new
+        assert_greedy_vs_forward(model, params, r.tokens, c.tokens,
+                                 vis=r.vision_embeds)
+
+
+def test_vlm_request_without_vision_rejected(vlm):
+    model, params = vlm
+    eng = Engine(model, params, EngineConfig(n_slots=2, max_len=64,
+                                             prefill_buckets=(8,)))
+    with pytest.raises(ValueError, match="vision_embeds"):
+        eng.admit_wave([np.zeros(4, np.int32)], [0], [2])
+
+
+def test_vision_on_text_model_rejected():
+    """The converse guard: vision_embeds on a non-vision model would be
+    silently dropped by the forward while slot/page bookkeeping still
+    counted its positions — reject loudly instead."""
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    eng = Engine(model, model.init(jax.random.PRNGKey(0)),
+                 EngineConfig(n_slots=2, max_len=32, prefill_buckets=(8,)))
+    vis = np.zeros((4, cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="no vision frontend"):
+        eng.admit_wave([np.zeros(4, np.int32)], [0], [2], vision=[vis])
+
+
+def test_vlm_dense_pool_bucket_capped_by_vision(vlm):
+    """Dense pool: the text bucket must be capped at max_len - n_patches —
+    a fallback bucket of max_len would scatter n_patches + max_len KV
+    positions into a max_len row (trace-time shape error)."""
+    model, params = vlm
+    cfg = model.cfg
+    P = cfg.vision_patches
+    rng = np.random.default_rng(5)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=P + 32, paged=False,
+                              chunk=2, prefill_buckets=(16, 64)))
+    # 20 text tokens: over the 16 bucket, so the fallback engages — it must
+    # be P + 32 - P = 32, not P + 32
+    toks = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    vis = rng.standard_normal((P, cfg.d_model)).astype(np.float32)
+    comps = Scheduler(eng).run([Request(0, toks, 4, vision_embeds=vis)])
+    assert len(comps) == 1 and len(comps[0].tokens) == 4
+    assert_greedy_vs_forward(model, params, toks, comps[0].tokens, vis=vis)
+
+
+def test_vlm_budget_counts_vision_positions(vlm):
+    """The vision prefix occupies cache positions: max_len and page budgets
+    must count it, not just the text tokens."""
+    model, params = vlm
+    cfg = model.cfg
+    P = cfg.vision_patches
+    vis = np.zeros((P, cfg.d_model), np.float32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=P + 6, page_size=4,
+                              prefill_buckets=(8,)))
+    assert eng.pages_needed(np.zeros(3, np.int32), 2, n_vis=P) == \
+        -(-(P + 3 + 1) // 4)
+    with pytest.raises(ValueError, match="cache slots"):
+        eng.admit_wave([np.zeros(6, np.int32)], [0], [2], vision=[vis])
+
+
+# ---------------------------------------------------------------------------
+# encoder-only stays rejected
+# ---------------------------------------------------------------------------
+
+def test_encoder_only_rejected():
+    cfg = get_config("hubert-xlarge").reduced()
+    model = Model(cfg)
+    with pytest.raises(ValueError, match="no decode path"):
+        Engine(model, None)
+
+
+# ---------------------------------------------------------------------------
+# spec shapes stay honest
+# ---------------------------------------------------------------------------
+
+def test_cache_spec_layouts():
+    for arch, kinds in [("qwen3-8b", {SSPEC.KV}),
+                        ("mamba2-1.3b", {SSPEC.RECURRENT}),
+                        ("zamba2-7b", {SSPEC.KV, SSPEC.RECURRENT}),
+                        ("qwen2-vl-2b", {SSPEC.KV})]:
+        spec = Model(get_config(arch).reduced()).cache_spec
+        assert {g.kind for g in spec.groups} == kinds
+    spec = Model(get_config("hubert-xlarge").reduced()).cache_spec
+    assert not spec.groups, "encoder-only family must declare no decode state"
+    # slot_state_bytes: dense KV row + fixed recurrent leaves
+    z = Model(get_config("zamba2-7b").reduced())
+    per = z.cache_spec.slot_state_bytes(32)
+    assert per > 0
+    cache = z.init_cache(1, 32)
+    total = sum(x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(cache))
+    assert per == total
