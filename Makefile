@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-kernels test-serve-families ci bench \
-	bench-serving serve
+.PHONY: test test-fast test-kernels test-serve-families test-serve-mesh ci \
+	bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -26,6 +26,13 @@ test-kernels:
 test-serve-families:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_serve_families.py
+
+# mesh lane: sharded-vs-single-device serving parity (slow-marked subprocess
+# tests; each child forces an 8-device CPU host itself, so the parent env is
+# scrubbed of any leaked XLA flags and pinned to CPU)
+test-serve-mesh:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_serve_distributed.py
 
 ci: test-fast
 

@@ -94,6 +94,12 @@ def main() -> None:
             print(f"claim,table9_paged_attn_bytes_scale_with_cached,{ok}")
             print(f"claim,table9_paged_attn_bytes_25pct_frac,"
                   f"{b[25] / r['gather_bytes']:.2f}")
+        if "mesh_kv_ratio" in r:
+            # sharding the KV arena over the model axis must actually cut
+            # per-device KV bytes (TP=2 on the 4x2 bench mesh => ~0.5x)
+            print(f"claim,table9_mesh_splits_kv_per_device,"
+                  f"{r['mesh_kv_ratio'] <= 0.75}")
+            print(f"claim,table9_mesh_kv_bytes_ratio,{r['mesh_kv_ratio']:.2f}")
 
 
 if __name__ == "__main__":

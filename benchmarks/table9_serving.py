@@ -27,7 +27,13 @@ measures:
      configs through the SAME engine + scheduler — tokens/s, decode-state
      bytes per slot (CacheSpec accounting: fixed recurrent leaves vs a
      max_len KV row), and a greedy decode-parity assert of every completion
-     against a per-request full forward.
+     against a per-request full forward,
+  8. mesh-sharded decode: the same paged engine single-device vs sharded
+     over a forced-host 4x2 (data, model) CPU mesh (subprocess — the parent
+     process must keep seeing one device) — decode tokens/s, per-device KV
+     arena bytes (the model axis splits KV heads, so each chip holds
+     1/TP of the arena), and a greedy token-equality assert. CPU numbers
+     measure plumbing overhead only; the HBM-per-chip split is the claim.
 
 Rows land in the usual CSV; a JSONL record for results/report.py
 --serving is written next to the other results.
@@ -36,6 +42,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -158,6 +166,72 @@ def family_stream(arch, n_requests=12, n_slots=4, gen=8):
     return {"family": cfg.family, "arch": arch, "tok_per_s": n_tok / wall,
             "state_bytes_per_slot": model.cache_spec.slot_state_bytes(max_len),
             "paged": eng.paged}
+
+
+def mesh_worker(data_ax=4, model_ax=2, out=sys.stdout):
+    """Section 8's subprocess body (``--mesh-worker``): runs under a forced
+    multi-device CPU host, builds the smoke dense arch's paged engine twice
+    — single-device and (data, model)-meshed — times one warm decode chunk
+    through each, and prints a single JSON line. Per-device KV bytes come
+    from the arena leaves' actual shard sizes, so the number reports what
+    the mesh really buys: each device holds 1/TP of the KV heads (and the
+    dense slot axis would further split over data)."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_dev_mesh
+    from repro.models.model import Model
+
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, G = BATCH, PROMPT, GEN
+    prompts = list(np.asarray(
+        calibration_batch(cfg.vocab_size, B, P, seed=7)))
+
+    def run_one(mesh):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=B, max_len=P + G, chunk=G - 1, prefill_buckets=(P,),
+            paged=True, page_size=8, mesh=mesh))
+        eng.admit_wave(prompts, list(range(B)), [G] * B)
+        _ = eng.harvest(*eng.decode_chunk())  # warm the decode trace
+        eng.reset()
+        first = eng.admit_wave(prompts, list(range(B)), [G] * B)
+        t0 = time.perf_counter()
+        toks, valid = eng.decode_chunk(G - 1)
+        t, _, _, _ = eng.harvest(toks, valid)
+        dt = time.perf_counter() - t0
+        per_dev = {}
+        for leaf in jax.tree_util.tree_leaves(eng.cache):
+            for sh in leaf.addressable_shards:
+                did = sh.device.id
+                per_dev[did] = per_dev.get(did, 0) + sh.data.nbytes
+        tokens = np.concatenate([first[:, None], t[:, :B].T], axis=1)
+        return tokens, B * (G - 1) / dt, max(per_dev.values())
+
+    toks_1, tps_1, kv_1 = run_one(None)
+    toks_m, tps_m, kv_m = run_one(make_dev_mesh(data_ax, model_ax))
+    rec = {"mesh": [data_ax, model_ax], "devices": jax.device_count(),
+           "single_tok_per_s": tps_1, "sharded_tok_per_s": tps_m,
+           "kv_bytes_per_device_single": kv_1,
+           "kv_bytes_per_device_sharded": kv_m,
+           "greedy_match": bool((toks_1 == toks_m).all())}
+    print(json.dumps(rec), file=out, flush=True)
+    return rec
+
+
+def mesh_section():
+    """Spawn the forced-host 4x2 mesh worker and parse its JSON line (the
+    parent benchmark process must keep its single CPU device, exactly like
+    tests/test_distributed.py's subprocess pattern)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.table9_serving", "--mesh-worker"],
+        capture_output=True, text=True, env=env, cwd=root, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def run(model=None, params=None):
@@ -365,6 +439,20 @@ def run(model=None, params=None):
                      f"{fam['state_bytes_per_slot'] / 1e3:.0f}KB"))
         rec["family_serving"][arch] = fam
 
+    # 8: mesh-sharded decode — forced-host 4x2 CPU mesh (subprocess) ---------
+    m8 = mesh_section()
+    assert m8["greedy_match"], "sharded decode diverged from single-device"
+    kv_ratio = m8["kv_bytes_per_device_sharded"] / m8["kv_bytes_per_device_single"]
+    rows.append(("table9/mesh_sharded_tok_per_s", 0,
+                 f"{m8['sharded_tok_per_s']:.0f} (1-dev "
+                 f"{m8['single_tok_per_s']:.0f}; 4x2 CPU mesh measures "
+                 "plumbing, not speed)"))
+    rows.append(("table9/mesh_kv_bytes_per_device", 0,
+                 f"{m8['kv_bytes_per_device_sharded'] / 1e3:.0f}KB vs "
+                 f"{m8['kv_bytes_per_device_single'] / 1e3:.0f}KB "
+                 f"({kv_ratio:.2f}x)"))
+    rec["mesh_serving"] = m8
+
     emit(rows)
     try:
         os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)), exist_ok=True)
@@ -374,8 +462,11 @@ def run(model=None, params=None):
         pass
     return {"speedup": speedup, "paged_slots_ratio": slots_ratio,
             "paged_attn_bytes": occ_bytes, "gather_bytes": gather_bytes,
-            "rows": rows, "record": rec}
+            "mesh_kv_ratio": kv_ratio, "rows": rows, "record": rec}
 
 
 if __name__ == "__main__":
-    run()
+    if "--mesh-worker" in sys.argv:
+        mesh_worker()
+    else:
+        run()

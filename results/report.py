@@ -57,8 +57,9 @@ def serving_table(path):
             "pruned tok/s | 2:4 weight ratio | req/s | TTFT p50/p95 | "
             "TPOT p50/p95 | paged slots (equal HBM) | KV bytes/slot | "
             "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather | "
-            "family matrix (tok/s @ state KB/slot) |",
-            "|" + "---|" * 15]
+            "family matrix (tok/s @ state KB/slot) | "
+            "mesh KV B/device (4x2) |",
+            "|" + "---|" * 16]
     for line in open(path):
         r = json.loads(line)
         if "paged_concurrent_slots" in r:
@@ -87,6 +88,15 @@ def serving_table(path):
                 for f in r["family_serving"].values())
         else:
             fam = "-"
+        if r.get("mesh_serving"):
+            # tensor-parallel serving: each device of the model axis holds
+            # 1/TP of the KV arena (the per-chip-HBM claim; CPU tok/s only
+            # measures plumbing overhead)
+            m = r["mesh_serving"]
+            mesh = (f"{m['kv_bytes_per_device_sharded'] / 1e3:.0f}KB vs "
+                    f"{m['kv_bytes_per_device_single'] / 1e3:.0f}KB")
+        else:
+            mesh = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
@@ -94,7 +104,7 @@ def serving_table(path):
             f"{r['req_per_s']:.1f} | "
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
             f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
-            f"{paged} | {bps} | {skipped} | {attn} | {fam} |")
+            f"{paged} | {bps} | {skipped} | {attn} | {fam} | {mesh} |")
     return "\n".join(rows)
 
 

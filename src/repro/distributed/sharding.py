@@ -16,6 +16,7 @@ Default strategy (hillclimbed further in EXPERIMENTS.md §Perf):
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -129,6 +130,31 @@ def make_rules(cfg: ModelConfig, mesh: Mesh, kind: str,
         "seq": None,
         "kv_len": "model" if kind == "decode" else None,
     }
+    # Head-structured dims appear FLATTENED in the param shapes (wq is
+    # (embed, heads*hd), wk/wv (embed, kv_heads*hd), mamba's inner is
+    # nheads*headdim), so _spec_for's per-dim divisibility check alone would
+    # happily split mid-head whenever head_dim picks up the slack (e.g.
+    # kv_heads=2 on a 4-way model axis: 2*16=32 divides by 4). A mid-head
+    # split is numerically WRONG under SPMD on this jax build — the
+    # (count, hd) reshape + rotary split downstream miscompiles (verified:
+    # tests/test_serve_distributed.py's divisibility case) — so degrade by
+    # the semantic unit, the head COUNT, here where the config is in hand.
+    if tp > 1:
+        if cfg.num_heads % tp:
+            rules["heads"] = None
+        if cfg.num_kv_heads % tp:
+            rules["kv_heads"] = None
+        if (getattr(cfg, "ssm_nheads", 0) or 0) % tp:
+            rules["ssm_heads"] = None
+            # "inner" also labels dims that are NOT pure nheads*headdim
+            # (in_proj's z|x|B|C|dt concat, the conv window's x|B|C): those
+            # segments are only ever consumed elementwise or by static
+            # slices, which SPMD reshards correctly at any boundary (pinned
+            # bit-exact by the mesh parity suite even with the boundary
+            # mid-segment). The hazard is the x segment's reshape to
+            # (nheads, headdim) for the SSD scan — head-aligned exactly
+            # when nheads divides tp's split of d_inner, i.e. this gate.
+            rules["inner"] = None
     if overrides:
         rules.update(overrides)
     return rules
@@ -188,6 +214,86 @@ def input_shardings(mesh: Mesh, cfg: ModelConfig, specs: Dict, kind: str,
         else:  # scalars (pos, ...)
             out[name] = NamedSharding(mesh, P())
     return out
+
+
+def serve_rules(mesh: Mesh, cfg: ModelConfig, n_slots: int,
+                overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    """Logical->mesh rules for the serving engine's runtime state.
+
+    Derived from the one :func:`make_rules` table (kind="decode") with the
+    serve-specific deltas:
+
+    * ``batch`` == the slot axis: sharded over the data axes — but only when
+      they divide ``n_slots``. An indivisible pool degrades to replication
+      with a *warning* instead of failing inside the jitted programs
+      (mirroring :func:`_spec_for`'s per-dim divisibility rule).
+    * ``kv_len`` / ``pages`` replicated: the engine addresses KV by per-slot
+      cache positions and block tables — any slot must reach any position /
+      page, so the context-parallel decode split of the dryrun rules does
+      not apply. Heads still split over ``model``.
+    * an indivisible ``kv_heads`` also warns here (``_spec_for`` would
+      silently replicate that dim everywhere it appears).
+    """
+    rules = make_rules(cfg, mesh, "decode")
+    rules["kv_len"] = None
+    rules["pages"] = None
+    dp = mesh_dp_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    if dsize > 1 and n_slots % dsize != 0:
+        warnings.warn(
+            f"serve mesh: n_slots={n_slots} is not divisible by the data "
+            f"axes {dp} (size {dsize}); slot state and per-slot pools "
+            "degrade to replication", RuntimeWarning, stacklevel=2)
+        rules["batch"] = None
+    tp = mesh.shape.get("model", 1)
+    if tp > 1 and cfg.num_kv_heads % tp != 0:
+        warnings.warn(
+            f"serve mesh: num_kv_heads={cfg.num_kv_heads} is not divisible "
+            f"by the model axis ({tp}); KV head dims degrade to "
+            "replication", RuntimeWarning, stacklevel=2)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, spec, cache: Any,
+                          pstate: Any, n_slots: int, paged: bool,
+                          rules: Optional[Dict] = None) -> Dict[str, Any]:
+    """NamedShardings for the serving engine's device-resident state.
+
+    Returns ``{"cache", "slots", "pstate", "repl", "rules"}``:
+
+    * ``cache``: pytree matching ``cache`` — each leaf placed by its
+      CacheSpec group's logical axes (``CacheSpec.cache_logical``): slots
+      over ``data`` for per-slot pools, KV/SSM heads over ``model``, page
+      arenas' page axis replicated (any block table may reference any page).
+    * ``slots``: the (n_slots,) spec shared by every SlotState scalar and
+      the sampling draws (a pytree prefix — all leaves are slot vectors).
+    * ``pstate``: PageState shardings — ``ref`` replicated (the free list is
+      global), ``block_tables`` rows over ``data`` with their slots.
+    * ``repl``: fully-replicated sharding for wave inputs, PRNG key, and the
+      host-mirrored scalars (free pages / prefix registry stay host-side and
+      therefore trivially replicated).
+    """
+    if rules is None:
+        rules = serve_rules(mesh, cfg, n_slots)
+    logical = spec.cache_logical(paged)
+    cache_sh = jax.tree_util.tree_map(
+        lambda leaf, lg: NamedSharding(
+            mesh, _spec_for(leaf.shape, lg, rules, mesh)),
+        cache, logical)
+    slot_sh = NamedSharding(mesh, _spec_for((n_slots,), ("batch",), rules, mesh))
+    repl = NamedSharding(mesh, P())
+    pstate_sh = None
+    if pstate is not None:
+        pstate_sh = type(pstate)(
+            ref=repl,
+            block_tables=NamedSharding(mesh, _spec_for(
+                pstate.block_tables.shape, ("batch", None), rules, mesh)))
+    return {"cache": cache_sh, "slots": slot_sh, "pstate": pstate_sh,
+            "repl": repl, "rules": rules}
 
 
 def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any, kind: str = "decode",

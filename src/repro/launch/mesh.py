@@ -23,3 +23,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_dev_mesh(data: int = 1, model: int = 1):
     """Small mesh for multi-device CPU tests (subprocess sets device count)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh(spec: str):
+    """``"4,2"`` -> a (data=4, model=2) mesh (the serve CLI's ``--mesh``
+    flag). The host must expose data*model devices (on CPU: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    try:
+        data, model = (int(x) for x in spec.split(","))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'data,model' axis sizes (e.g. 4,2), got {spec!r}")
+    return make_dev_mesh(data, model)

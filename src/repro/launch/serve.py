@@ -14,7 +14,8 @@ Two modes:
 Every decoder family serves — dense, MoE, SSM (``--arch mamba2-1.3b``),
 hybrid (``--arch zamba2-7b``), VLM (``--arch qwen2-vl-2b``; the CLI attaches
 stub vision-patch embeddings to each request, matching the repo's stub
-vision frontend). Demonstrates the paper's deployment story: the same engine
+vision frontend). ``--mesh 4,2`` runs the engine tensor/data-parallel over
+a (data, model) device mesh — same tokens, sharded params + KV arena. Demonstrates the paper's deployment story: the same engine
 serves dense or Wanda++-pruned (2:4 zeros) weights;
 benchmarks/table9_serving.py quantifies the throughput + latency effect.
 """
@@ -29,6 +30,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import PruneConfig
 from repro.data import calibration_batch
+from repro.launch.mesh import parse_mesh
 from repro.models.model import Model
 from repro.serve import Engine, EngineConfig, Request, SamplingConfig
 from repro.serve.scheduler import Scheduler, percentile
@@ -39,7 +41,7 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  sampling: SamplingConfig = SamplingConfig(),
                  chunk: int = None, n_slots: int = None, paged: bool = True,
                  page_size: int = 16, n_pages: int = None,
-                 paged_kernel: bool = None, extra_len: int = 0):
+                 paged_kernel: bool = None, extra_len: int = 0, mesh=None):
     """Returns (engine, cfg). Prunes the weights first when requested.
 
     The default max_len covers prompt + generation plus the arch's vision
@@ -64,7 +66,7 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         chunk=chunk or max(gen - 1, 1),
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
         paged=paged, page_size=page_size, n_pages=n_pages,
-        paged_kernel=paged_kernel,
+        paged_kernel=paged_kernel, mesh=mesh,
     )
     return Engine(model, params, ecfg, sampling), cfg
 
@@ -82,13 +84,13 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           smoke: bool = True, pruned: str = None, max_len: int = None,
           sampling: SamplingConfig = SamplingConfig(), paged: bool = True,
           page_size: int = 16, n_pages: int = None,
-          paged_kernel: bool = None):
+          paged_kernel: bool = None, mesh=None):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
                                sampling=sampling, paged=paged,
                                page_size=page_size, n_pages=n_pages,
-                               paged_kernel=paged_kernel)
+                               paged_kernel=paged_kernel, mesh=mesh)
     rng = np.random.default_rng(7)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
@@ -120,7 +122,7 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    sampling: SamplingConfig = SamplingConfig(),
                    paged: bool = True, page_size: int = 16,
                    n_pages: int = None, shared_prefix: int = 0,
-                   paged_kernel: bool = None):
+                   paged_kernel: bool = None, mesh=None):
     """Mixed-length request stream through the continuous-batching scheduler.
 
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
@@ -131,7 +133,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                                pruned=pruned, extra_len=shared_prefix,
                                sampling=sampling, chunk=max(gen // 2, 1),
                                paged=paged, page_size=page_size,
-                               n_pages=n_pages, paged_kernel=paged_kernel)
+                               n_pages=n_pages, paged_kernel=paged_kernel,
+                               mesh=mesh)
     rng = np.random.default_rng(7)
     prefix = None
     if shared_prefix > 0:
@@ -202,7 +205,15 @@ def main():
                     help="force the Pallas paged-attention kernel even "
                          "off-TPU (interpret mode — slow, correctness "
                          "only)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="shard the engine over a (data, model) device mesh "
+                         "(e.g. 4,2): params by the sharding rule table, "
+                         "slots/block tables over data, KV heads over "
+                         "model. Needs data*model devices (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N). Default: single-device engine")
     args = ap.parse_args()
+    mesh = parse_mesh(args.mesh) if args.mesh else None
     paged_kernel = True if args.paged_attn_kernel else \
         (False if args.gather_decode else None)
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
@@ -213,12 +224,12 @@ def main():
                        sampling=sampling, paged=not args.dense_pool,
                        page_size=args.page_size, n_pages=args.n_pages,
                        shared_prefix=args.shared_prefix,
-                       paged_kernel=paged_kernel)
+                       paged_kernel=paged_kernel, mesh=mesh)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,
               paged=not args.dense_pool, page_size=args.page_size,
-              n_pages=args.n_pages, paged_kernel=paged_kernel)
+              n_pages=args.n_pages, paged_kernel=paged_kernel, mesh=mesh)
 
 
 if __name__ == "__main__":

@@ -249,7 +249,10 @@ def n_attn_apps(cfg: ModelConfig) -> int:
 
 def _kv_group(cfg: ModelConfig, kv_dtype, apps: int, name="kv") -> StateGroup:
     hd = cfg.resolved_head_dim
-    leaf = lambda n: StateLeaf(n, (cfg.num_kv_heads, hd), kv_dtype)
+    # pspec: head dim splits over the mesh `model` axis (same logical name
+    # the wk/wv param rules use, so KV state lands where its heads compute)
+    leaf = lambda n: StateLeaf(n, (cfg.num_kv_heads, hd), kv_dtype,
+                               pspec=("kv_heads", None))
     return StateGroup(name, SPEC.KV, apps, (leaf("k"), leaf("v")))
 
 
@@ -257,8 +260,9 @@ def _mamba_group(cfg: ModelConfig, dtype, apps: int, name="mamba") -> StateGroup
     conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
     return StateGroup(name, SPEC.RECURRENT, apps, (
         StateLeaf("ssm", (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
-                  jnp.float32),
-        StateLeaf("conv", (cfg.ssm_conv - 1, conv_dim), dtype),
+                  jnp.float32, pspec=("ssm_heads", None, None)),
+        StateLeaf("conv", (cfg.ssm_conv - 1, conv_dim), dtype,
+                  pspec=(None, "inner")),
     ))
 
 

@@ -26,8 +26,8 @@ its Mamba layers slot-scatter.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -42,10 +42,30 @@ class StateLeaf:
     ``shape`` is the trailing per-token shape for ``KV`` leaves — e.g.
     ``(num_kv_heads, head_dim)`` — and the full per-slot shape for
     ``RECURRENT`` leaves — e.g. ``(nheads, headdim, ssm_state)``.
+
+    ``pspec`` names the *logical* sharding axis of each ``shape`` dim (the
+    vocabulary of distributed/sharding.py's rule tables: "kv_heads",
+    "ssm_heads", "inner", ... or None for replicated). The serving engine
+    maps these through the same logical->mesh rules the train/decode
+    programs use, so a mesh places dense pools, page arenas, and recurrent
+    leaves consistently with the params that read them. Empty == all
+    replicated.
     """
     name: str
     shape: Tuple[int, ...]
     dtype: Any
+    pspec: Tuple[Optional[str], ...] = field(default=())
+
+    @property
+    def logical(self) -> Tuple[Optional[str], ...]:
+        """``pspec`` padded/validated against ``shape``."""
+        if not self.pspec:
+            return (None,) * len(self.shape)
+        if len(self.pspec) != len(self.shape):
+            raise ValueError(
+                f"leaf {self.name}: pspec {self.pspec} does not match "
+                f"shape {self.shape}")
+        return tuple(self.pspec)
 
 
 @dataclass(frozen=True)
@@ -133,6 +153,26 @@ class CacheSpec:
                 out[g.name] = tuple(
                     jnp.zeros((g.apps, n_slots) + l.shape, l.dtype)
                     for l in g.leaves)
+        return self.pack(out)
+
+    # -- sharding --------------------------------------------------------
+    def cache_logical(self, paged: bool) -> Any:
+        """Cache-shaped pytree of logical-axis tuples for the pool layouts
+        ``init_dense`` / ``init_paged`` build: the leading dims get
+        ("layers", "batch", "kv_len") / ("layers", "pages", None) /
+        ("layers", "batch") by kind, the trailing dims each leaf's
+        :attr:`StateLeaf.pspec`. distributed/sharding.py maps the names to
+        mesh axes (serve rules keep "kv_len"/"pages" replicated — any slot's
+        block table must reach any page; heads split over `model`, slots
+        over `data`)."""
+        out = {}
+        for g in self.groups:
+            if g.kind == KV:
+                lead = ("layers", "pages", None) if paged \
+                    else ("layers", "batch", "kv_len")
+            else:
+                lead = ("layers", "batch")
+            out[g.name] = tuple(lead + l.logical for l in g.leaves)
         return self.pack(out)
 
     # -- accounting ------------------------------------------------------

@@ -37,6 +37,21 @@ dense (L, n_slots, max_len, KV, hd) pool as the parity/memory baseline; a
 spec with no KV groups (pure SSM) has nothing to page and always uses the
 per-slot pool.
 
+The engine is **mesh-aware** (``EngineConfig.mesh``): given a
+`(data, model)` mesh (launch/mesh.py), params shard by the same
+distributed/sharding.py rule table the train/dryrun programs use (TP heads /
+ffn over ``model``), and the runtime state shards with them — slot scalars,
+per-slot pools, and block-table rows over ``data``; KV and recurrent head
+dims over ``model`` via each CacheSpec leaf's ``pspec``; the page arena's
+page axis, the free list, and the host mirrors (free-page count, prefix
+registry) replicated, because any slot's block table must reach any page.
+Every jitted program is built with explicit ``in_shardings``/
+``out_shardings`` so the state never silently migrates. Sharded greedy
+decode is bit-exact against the single-device engine, and sampled decode
+draws from per-slot keys (serve/sampling.py) so meshed streams reproduce
+the unmeshed ones token for token; ``mesh=None`` is exactly the
+single-device engine.
+
 Shared prompt prefixes (:meth:`Engine.register_prefix`) live in a
 **multi-prefix registry**: each registered prefix is prefetched once into
 refcounted pages and mapped — never recomputed — into every request that
@@ -53,6 +68,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.models import state_spec as SSPEC
 from repro.models.layers import KV_QSCALE
@@ -97,6 +113,17 @@ class EngineConfig:
     # Pallas interpreter — a correctness path, ~4x slower than the gather's
     # plain HLO). True/False force either path (tests, benchmarks, CLI).
     paged_kernel: Optional[bool] = None
+    # (data, model) serving mesh (launch/mesh.py). Params shard by the
+    # distributed/sharding.py rule table (TP heads/ffn over `model`); slot
+    # state, per-slot pools, and block-table rows shard over `data`; KV /
+    # recurrent head dims over `model` via each CacheSpec leaf's pspec; the
+    # page arena's page axis and the host mirrors (free pages, prefix
+    # registry) stay replicated. Divisibility is validated at Engine
+    # construction — an indivisible n_slots (data) or kv_heads (model)
+    # degrades that axis to replication with a RuntimeWarning (mirroring
+    # sharding.py's per-dim rule) instead of failing inside jit.
+    # None == the exactly-single-device engine, byte-for-byte unchanged.
+    mesh: Optional[Mesh] = None
 
     @property
     def max_blocks(self) -> int:
@@ -174,13 +201,8 @@ class Engine:
             else jax.default_backend() == "tpu"
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
-        self.state: SlotState = init_slots(cfg.n_slots)
         self.pstate: Optional[PageState] = None
         if self.paged:
-            self.cache = model.init_paged_cache(cfg.pool_pages, cfg.page_size,
-                                                n_slots=cfg.n_slots)
-            self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
-                                          cfg.max_blocks)
             # host mirror of the device free list (allocation is
             # deterministic, so admission can check capacity without a
             # device round-trip) — paged pools ONLY: a dense pool carrying
@@ -193,25 +215,120 @@ class Engine:
             self._next_pid = 0
             self._lru_clock = 0
             self._slot_prefix = np.full(cfg.n_slots, -1, np.int64)
-        else:
-            self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
+        # mesh-sharded serving: derive shardings from the one logical->mesh
+        # rule table (distributed/sharding.py) against eval_shape'd pool
+        # SHAPES — nothing is allocated yet, so _alloc_pools below can build
+        # every pool as a jitted program with out_shardings (each shard
+        # lands directly on its device; a host-side init would materialise
+        # the FULL arena on one device first, the very per-chip HBM ceiling
+        # the mesh exists to lift). Every runtime program is then built with
+        # explicit in/out shardings. mesh=None keeps the single-device
+        # engine exactly as before (no sharding args anywhere).
+        self.mesh = cfg.mesh
+        self._sh = None
+        self._alloc_jits = None
+        if self.mesh is not None:
+            from repro.distributed import sharding as SHARD
+            self._sh = SHARD.serve_state_shardings(
+                self.mesh, mcfg, spec, jax.eval_shape(self._mk_cache),
+                jax.eval_shape(self._mk_pstate) if self.paged else None,
+                cfg.n_slots, self.paged)
+            self._sh["params"] = SHARD.param_shardings(
+                self.mesh, mcfg, params, "decode")
+            self.params = jax.device_put(self.params, self._sh["params"])
+            n_slots = cfg.n_slots
+            self._alloc_jits = (
+                jax.jit(lambda: init_slots(n_slots),
+                        out_shardings=self._sh["slots"]),
+                jax.jit(self._mk_cache, out_shardings=self._sh["cache"]),
+                jax.jit(self._mk_pstate, out_shardings=self._sh["pstate"])
+                if self.paged else None)
+        self._alloc_pools()
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         # trace counters: the no-retrace-per-token guarantee is testable
         self.trace_counts = {"decode": 0, "prefill": 0}
         self._decode_jit = {}  # chunk length T -> compiled program
+        W, C, S, PS, R = self._prog_shardings()
         if self.paged:
-            self._prefill_jit = jax.jit(self._prefill_paged_impl,
-                                        donate_argnums=(1, 2, 3, 4))
-            self._prefill_shared_jit = jax.jit(self._prefill_shared_impl,
-                                               donate_argnums=(1, 2, 3, 4))
-            self._register_jit = jax.jit(self._register_impl,
-                                         donate_argnums=(1, 2))
-            self._unreserve_jit = jax.jit(PAGE.unreserve, donate_argnums=(0,))
+            self._prefill_jit = self._jit(
+                self._prefill_paged_impl, (1, 2, 3, 4),
+                (W, C, S, PS, R, R, R, R, R, R), (C, S, PS, R, R, R))
+            self._prefill_shared_jit = self._jit(
+                self._prefill_shared_impl, (1, 2, 3, 4),
+                (W, C, S, PS, R, R, R, R, R, R, R), (C, S, PS, R, R, R))
+            self._register_jit = self._jit(
+                self._register_impl, (1, 2), (W, C, PS, R), (C, PS, R, R))
+            self._unreserve_jit = self._jit(PAGE.unreserve, (0,), (PS, R), PS)
         else:
-            self._prefill_jit = jax.jit(self._prefill_pool_impl,
-                                        donate_argnums=(1, 2, 3))
-        self._release_jit = jax.jit(self._release_impl,
-                                    donate_argnums=(0, 1, 2))
+            self._prefill_jit = self._jit(
+                self._prefill_pool_impl, (1, 2, 3),
+                (W, C, S, R, R, R, R, R, R), (C, S, R, R))
+        self._release_jit = self._jit(
+            self._release_impl, (0, 1, 2), (C, S, PS, R), (C, S, PS))
+
+    # ------------------------------------------------------------------
+    # mesh plumbing
+    # ------------------------------------------------------------------
+    def _mk_cache(self):
+        cfg = self.cfg
+        if self.paged:
+            return self.model.init_paged_cache(cfg.pool_pages, cfg.page_size,
+                                               n_slots=cfg.n_slots)
+        return self.model.init_cache(cfg.n_slots, cfg.max_len)
+
+    def _mk_pstate(self):
+        cfg = self.cfg
+        return PAGE.init_pages(cfg.pool_pages, cfg.n_slots, cfg.max_blocks)
+
+    def _alloc_pools(self):
+        """Fresh slot state, cache, and page state (init + every reset).
+        Under a mesh the initializers are jitted with ``out_shardings`` so
+        each device allocates only ITS shard of the pools; the PRNG key is
+        placed replicated. Host mirrors (_free_pages, _slot_pages, the
+        prefix registry) are numpy-side and reset by the caller."""
+        if self._sh is None:
+            self.state = init_slots(self.cfg.n_slots)
+            self.cache = self._mk_cache()
+            self.pstate = self._mk_pstate() if self.paged else None
+            return
+        mk_state, mk_cache, mk_pstate = self._alloc_jits
+        self.state = mk_state()
+        self.cache = mk_cache()
+        self.pstate = mk_pstate() if self.paged else None
+        self.key = jax.device_put(self.key, self._sh["repl"])
+
+    def _prog_shardings(self):
+        """(params, cache, slot-state, page-state, replicated) sharding
+        entries for the jitted programs. All None when unmeshed — self._jit
+        then ignores them and builds the plain single-device jits. The
+        slot-state entry is ONE sharding used as a pytree prefix for every
+        SlotState scalar; the page-state entry falls back to replicated for
+        dense pools (the pstate argument is None there)."""
+        if self._sh is None:
+            return None, None, None, None, None
+        ps = self._sh["pstate"] if self._sh["pstate"] is not None \
+            else self._sh["repl"]
+        return (self._sh["params"], self._sh["cache"], self._sh["slots"],
+                ps, self._sh["repl"])
+
+    def _jit(self, fn, donate, in_sh, out_sh):
+        if self._sh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        return jax.jit(fn, donate_argnums=donate,
+                       in_shardings=in_sh, out_shardings=out_sh)
+
+    def _for_sampling(self, logits):
+        """Under a mesh, pin sampled-path logits to REPLICATED before the
+        categorical draw. The TP unembed leaves logits vocab-sharded, and
+        jax's default (non-partitionable) threefry is not layout-invariant:
+        random bits generated against a vocab-sharded operand differ from
+        the single-device stream, which would break the same-seed parity
+        guarantee. Greedy needs no constraint (argmax is layout-exact), so
+        the pure-greedy programs keep the cheap sharded reduction."""
+        if self._sh is not None and not self.sampling.greedy:
+            logits = jax.lax.with_sharding_constraint(
+                logits, self._sh["repl"])
+        return logits
 
     # ------------------------------------------------------------------
     # jitted programs
@@ -230,7 +347,7 @@ class Engine:
                 inputs["block_table"] = block_tables
             logits, cache = self.model.decode_step(
                 params, inputs, cache, paged_kernel=self.paged_kernel)
-            nxt = sample_tokens(logits, sub, sc)
+            nxt = sample_tokens(self._for_sampling(logits), sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
             # the KV write lands on a position admission will overwrite
             # (paged: on an unmapped block, where the scatter drops it) and
@@ -253,7 +370,7 @@ class Engine:
         last = jnp.take_along_axis(
             logits, jnp.maximum(lasts, 0)[:, None, None], axis=1)[:, 0]
         key, sub = jax.random.split(key)
-        return sample_tokens(last, sub, self.sampling), key
+        return sample_tokens(self._for_sampling(last), sub, self.sampling), key
 
     def _admit_state(self, state, slots, first, plens, max_news, rope_delta):
         """Scatter slot metadata for an admitted wave; ``plens`` counts every
@@ -357,7 +474,7 @@ class Engine:
                      "last": suff_lens - 1, "block_table": bt}, cache,
             paged_kernel=self.paged_kernel)
         key, sub = jax.random.split(key)
-        first = sample_tokens(last, sub, self.sampling)
+        first = sample_tokens(self._for_sampling(last), sub, self.sampling)
 
         new_state, _ = self._admit_state(state, slots, first, plens, max_news,
                                          jnp.zeros_like(plens))
@@ -393,9 +510,12 @@ class Engine:
 
     def _decode_fn(self, T: int):
         if T not in self._decode_jit:
-            self._decode_jit[T] = jax.jit(
-                functools.partial(self._decode_impl, T=T),
-                donate_argnums=(1, 2, 3))
+            W, C, S, PS, R = self._prog_shardings()
+            bt = PS.block_tables if (self._sh is not None and self.paged) \
+                else R
+            self._decode_jit[T] = self._jit(
+                functools.partial(self._decode_impl, T=T), (1, 2, 3),
+                (W, C, S, R, bt), (C, S, R, R, R))
         return self._decode_jit[T]
 
     # ------------------------------------------------------------------
@@ -403,23 +523,16 @@ class Engine:
     # ------------------------------------------------------------------
     def reset(self):
         cfg = self.cfg
-        self.state = init_slots(cfg.n_slots)
+        survivors = []
         if self.paged:
-            self.cache = self.model.init_paged_cache(cfg.pool_pages,
-                                                     cfg.page_size,
-                                                     n_slots=cfg.n_slots)
-            self.pstate = PAGE.init_pages(cfg.pool_pages, cfg.n_slots,
-                                          cfg.max_blocks)
             self._free_pages = cfg.pool_pages
             self._slot_pages[:] = 0
             self._slot_prefix[:] = -1
             survivors = [e.tokens for e in self._prefixes.values()]
             self._prefixes = {}
-        else:
-            self.cache = self.model.init_cache(cfg.n_slots, cfg.max_len)
-            survivors = []
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         self.key = jax.random.PRNGKey(self.sampling.seed)
+        self._alloc_pools()
         for toks in survivors:  # registered prefixes survive resets
             self.register_prefix(toks)
 

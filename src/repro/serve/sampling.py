@@ -3,6 +3,13 @@
 ``SamplingConfig`` is a frozen (hashable) dataclass so it can close over the
 jitted decode program as a static value — greedy vs temperature vs top-k vs
 top-p select different traced graphs, never a per-token host branch.
+
+Draws are keyed **per slot** (:func:`slot_keys`): the chunk key is folded
+with each row's index, so a slot's stream depends only on (seed, step,
+slot) — not on the batch width a wave was padded to, and not on how a
+serving mesh lays the batch out. The mesh parity suite
+(tests/test_serve_distributed.py) pins sampled decode bit-exact between the
+single-device and sharded engines on the strength of this.
 """
 from __future__ import annotations
 
@@ -48,10 +55,22 @@ def _nucleus_mask(logits, top_p: float):
         jnp.arange(logits.shape[0])[:, None], order].set(keep_sorted)
 
 
+def slot_keys(key, n: int):
+    """One PRNG key per slot row: ``fold_in(key, row)``. The fold is PINNED
+    to the row index, so a row's draw depends only on (key, row) — never on
+    the batch width (wave padding rows cannot shift live rows' streams) and
+    never on how a mesh lays the batch out across devices. This is what
+    makes sampled decode bit-reproducible between the single-device engine
+    and a `(data, model)`-sharded one."""
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(n, dtype=jnp.uint32))
+
+
 def sample_tokens(logits, key, sc: SamplingConfig):
     """logits (B, V) -> sampled token ids (B,) int32. Pure and jit-safe;
     ``sc`` must be static at trace time. top-k truncation applies first,
-    then top-p renormalizes over the survivors (the usual composition)."""
+    then top-p renormalizes over the survivors (the usual composition).
+    Each row draws from its own :func:`slot_keys` key (see there for why)."""
     if sc.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / sc.temperature
@@ -66,4 +85,6 @@ def sample_tokens(logits, key, sc: SamplingConfig):
         logits = jnp.where(keep, logits, -jnp.inf)
     if sc.top_p < 1.0:  # __post_init__ guarantees top_p > 0
         logits = jnp.where(_nucleus_mask(logits, sc.top_p), logits, -jnp.inf)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, axis=-1)
+    )(slot_keys(key, logits.shape[0]), logits).astype(jnp.int32)

@@ -1,0 +1,22 @@
+"""Shared env for subprocess tests that force a multi-device CPU host.
+
+The parent pytest process must keep seeing exactly 1 device, so SPMD tests
+spawn children with ``--xla_force_host_platform_device_count`` set. ONE
+definition of that env (used by tests/test_distributed.py and
+tests/test_serve_distributed.py) so hardening — like pinning
+``JAX_PLATFORMS=cpu`` so a dryrun shell's TPU flags can never leak into a
+child — lands everywhere at once. benchmarks/table9_serving.py's
+``mesh_section`` builds the same env inline (benchmarks must not import
+from tests/).
+"""
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def forced_cpu_env(devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return env

@@ -1,22 +1,19 @@
 """SPMD correctness on a multi-device CPU mesh (subprocess: tests in this
 process must keep seeing exactly 1 device)."""
 import json
-import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _forced_host import forced_cpu_env
 
 
 def _run(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=900)
+                         capture_output=True, text=True,
+                         env=forced_cpu_env(devices), timeout=900)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
 

@@ -211,6 +211,28 @@ def test_oversized_request_rejected(dense):
 # sampling
 # ---------------------------------------------------------------------------
 
+def test_sample_tokens_rows_pinned_to_slot_key():
+    """A row's draw depends only on (key, row index): the same leading rows
+    must sample the same tokens whether the batch is 4 or 8 wide — wave
+    padding or a mesh's batch layout can widen a batch, but must never
+    shift a live row's stream. (This is the host-side half of the sharded
+    determinism story; tests/test_serve_distributed.py pins the meshed
+    engine against the single-device one end to end.)"""
+    from repro.serve.sampling import slot_keys
+
+    logits = jax.random.normal(jax.random.PRNGKey(2), (8, 32))
+    key = jax.random.PRNGKey(9)
+    sc = SamplingConfig(temperature=0.8, top_k=8, top_p=0.9)
+    wide = np.asarray(sample_tokens(logits, key, sc))
+    narrow = np.asarray(sample_tokens(logits[:4], key, sc))
+    np.testing.assert_array_equal(wide[:4], narrow)
+    # the per-row keys themselves are width-independent and distinct
+    k8 = np.asarray(slot_keys(key, 8))
+    k4 = np.asarray(slot_keys(key, 4))
+    np.testing.assert_array_equal(k8[:4], k4)
+    assert len({tuple(k) for k in k8}) == 8, "slot keys must be distinct"
+
+
 def test_sample_tokens_topk_membership():
     logits = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
     sc = SamplingConfig(temperature=1.0, top_k=4)
