@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-kernels test-serve-families test-serve-mesh ci \
-	bench bench-serving serve
+.PHONY: test test-fast test-kernels test-serve-families test-serve-mesh \
+	test-sparse-serve ci bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -26,6 +26,13 @@ test-kernels:
 test-serve-families:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_serve_families.py
+
+# sparse-serve lane: 2:4 pack/unpack properties + compressed-vs-masked-vs-
+# dense engine parity (forced CPU, like the family lane) — the fast loop
+# when touching kernels/sparse_matmul24.py or the compressed serve path
+test-sparse-serve:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_sparse_serve.py
 
 # mesh lane: sharded-vs-single-device serving parity (slow-marked subprocess
 # tests; each child forces an 8-device CPU host itself, so the parent env is

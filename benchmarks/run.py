@@ -100,6 +100,17 @@ def main() -> None:
             print(f"claim,table9_mesh_splits_kv_per_device,"
                   f"{r['mesh_kv_ratio'] <= 0.75}")
             print(f"claim,table9_mesh_kv_bytes_ratio,{r['mesh_kv_ratio']:.2f}")
+        if "compressed24" in r:
+            # build-time 2:4 packing must beat re-masking dense weights in
+            # flight at equal output tokens (greedy parity is asserted
+            # inside the benchmark itself)
+            c = r["compressed24"]
+            print(f"claim,table9_compressed24_beats_masked_dense,"
+                  f"{c['beats_masked']}")
+            print(f"claim,table9_compressed24_speedup_vs_masked,"
+                  f"{c['compressed_tok_per_s'] / c['masked_tok_per_s']:.2f}x")
+            print(f"claim,table9_compressed24_weight_ratio_bf16,"
+                  f"{c['packed_ratio_bf16']:.4f}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,14 @@ measures:
      arena bytes (the model axis splits KV heads, so each chip holds
      1/TP of the arena), and a greedy token-equality assert. CPU numbers
      measure plumbing overhead only; the HBM-per-chip split is the claim.
+  9. compressed 2:4 serving: a 2:4-pruned model served from compacted
+     (vals + packed 2-bit idx) storage vs the masked-dense reference
+     (dense weights multiplied by an int8 mask every decode step —
+     kernels/masked_matmul.py's semantic). Greedy tokens must match
+     bit-exactly across compressed / masked / dense engines, measured
+     packed bytes must hit compressed24_ratio, and compressed decode
+     tok/s must beat masked-dense at equal output tokens — the claim
+     that packing at engine build beats re-masking in flight.
 
 Rows land in the usual CSV; a JSONL record for results/report.py
 --serving is written next to the other results.
@@ -218,6 +226,95 @@ def mesh_worker(data_ax=4, model_ax=2, out=sys.stdout):
     return rec
 
 
+def compressed_section():
+    """Section 9: compressed 2:4 decode vs the masked-dense reference.
+
+    Uses its own config — wide enough (d_model 256, d_ff 2048, 8 layers)
+    that per-step weight handling dominates Python dispatch, with short
+    chunks (2) so the masked engine re-materialises ``w * mask`` once per
+    decode call rather than having XLA hoist it out of one long scan.
+    Weights are magnitude-pruned to exact 2:4 along the reduction axis, so
+    every projection passes ``sparsity_check24`` and the compressed engine's
+    auto-detect packs all of them."""
+    from repro.configs import get_config
+    from repro.core.masks import nm_mask as core_nm
+    from repro.core.pruner import tree_get, tree_set
+    from repro.kernels.ops import compressed24_ratio
+    from repro.models.blocks import prunable_table
+    from repro.models.model import Model
+
+    cfg9 = get_config("llama1-7b").reduced(
+        d_model=256, d_ff=2048, num_layers=8, num_heads=4, num_kv_heads=4,
+        head_dim=64)
+    model = Model(cfg9)
+    params = model.init(jax.random.PRNGKey(0))
+    blocks, dense_bytes = params["blocks"], 0
+    for _, path in prunable_table(cfg9).items():
+        if path[-1] != "w":
+            continue
+        w = tree_get(blocks, path)
+        if w is None or w.ndim != 3:
+            continue
+        mask = jax.vmap(lambda wl: core_nm(jnp.abs(wl.T), 2, 4).T)(w)
+        blocks = tree_set(blocks, path, jnp.where(mask, w, 0))
+        dense_bytes += w.size * w.dtype.itemsize
+    params = dict(params, blocks=blocks)
+
+    B9, P9, G9, CH9 = 8, 16, 33, 2  # first token + 32 decode = 16 chunks of 2
+    prompts = list(np.asarray(
+        calibration_batch(cfg9.vocab_size, B9, P9, seed=29)))
+    n_chunks = (G9 - 1) // CH9
+
+    def run_mode(mode):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=B9, max_len=P9 + G9, chunk=CH9, prefill_buckets=(P9,),
+            paged=True, page_size=8, compressed24=mode))
+        eng.admit_wave(prompts, list(range(B9)), [G9] * B9)
+        _ = eng.harvest(*eng.decode_chunk(CH9))  # warm the decode trace
+        dt = float("inf")
+        for _ in range(2):  # best-of-2 shields the claim gate from noise
+            eng.reset()
+            first = eng.admit_wave(prompts, list(range(B9)), [G9] * B9)
+            chunks = []
+            t0 = time.perf_counter()
+            for _ in range(n_chunks):
+                toks, valid = eng.decode_chunk(CH9)
+                t, _, _, _ = eng.harvest(toks, valid)
+                chunks.append(t[:, :B9].T)
+            dt = min(dt, time.perf_counter() - t0)
+        tokens = np.concatenate([first[:, None]] + chunks, axis=1)
+        return eng, tokens, B9 * n_chunks * CH9 / dt
+
+    eng_c, toks_c, tps_c = run_mode("auto")
+    eng_m, toks_m, tps_m = run_mode("masked")
+    eng_d, toks_d, tps_d = run_mode("off")
+    assert eng_c.compressed24 == eng_m.compressed24 > 0, \
+        "auto-detect missed 2:4 projections"
+    assert (toks_c == toks_m).all() and (toks_c == toks_d).all(), \
+        "compressed decode diverged from the masked-dense reference"
+
+    # storage accounting: packed leaves only (what a TPU serve would keep
+    # in HBM; the CPU fallback's build-time dense copy is scratch)
+    packed_bytes = 0
+    for _, path in prunable_table(cfg9).items():
+        if path[-1] != "w":
+            continue
+        p = tree_get(eng_c.params["blocks"], path[:-1])
+        if p is None or "w24_vals" not in p:
+            continue
+        packed_bytes += sum(int(np.prod(p[k].shape)) * p[k].dtype.itemsize
+                            for k in ("w24_vals", "w24_idx"))
+    ratio = packed_bytes / dense_bytes
+    assert abs(ratio - compressed24_ratio(4)) < 1e-6, \
+        f"packed ratio {ratio} != {compressed24_ratio(4)} (f32)"
+    return {"n_proj": eng_c.compressed24,
+            "compressed_tok_per_s": tps_c, "masked_tok_per_s": tps_m,
+            "dense_tok_per_s": tps_d, "greedy_match": True,
+            "packed_ratio_f32": ratio,
+            "packed_ratio_bf16": compressed24_ratio(2),
+            "beats_masked": bool(tps_c > tps_m)}
+
+
 def mesh_section():
     """Spawn the forced-host 4x2 mesh worker and parse its JSON line (the
     parent benchmark process must keep its single CPU device, exactly like
@@ -270,16 +367,18 @@ def run(model=None, params=None):
     rows.append(("table9/pruned_sparsity_mean", 0,
                  f"{np.mean(list(sp.values())):.3f}"))
     # TPU projection: decode is weight-traffic-bound; 2:4 compaction moves
-    # 0.5625x the prunable-body bytes (bf16 vals + int8 idx) => TPOT win.
-    # Body matches cfg.param_count()'s GQA-aware attention formula and the
-    # PRUNABLE table (attn + mlp matmuls; embeddings/head stay dense).
+    # compressed24_ratio(2) = 0.5625x the prunable-body bytes (bf16 vals +
+    # packed 2-bit idx) => TPOT win. Body matches cfg.param_count()'s
+    # GQA-aware attention formula and the PRUNABLE table (attn + mlp
+    # matmuls; embeddings/head stay dense).
+    from repro.kernels.ops import compressed24_ratio
     d, f, hd = cfg.d_model, cfg.d_ff, cfg.resolved_head_dim
     qd, kvd = cfg.num_heads * hd, cfg.num_kv_heads * hd
     attn = d * qd + 2 * d * kvd + qd * d
     mlp = (3 if cfg.act == "silu" else 2) * d * f
     body = cfg.num_layers * (attn + mlp)
     w_bytes = cfg.param_count() * 2
-    w_sparse = (cfg.param_count() - body) * 2 + body * 2 * 0.5625
+    w_sparse = (cfg.param_count() - body) * 2 + body * 2 * compressed24_ratio(2)
     rows.append(("table9/tpu_projected_tpot_ratio", 0,
                  f"{w_sparse / w_bytes:.3f}"))
     rec.update(pruned_tok_per_s=pruned_tps,
@@ -453,6 +552,20 @@ def run(model=None, params=None):
                  f"({kv_ratio:.2f}x)"))
     rec["mesh_serving"] = m8
 
+    # 9: compressed 2:4 decode vs masked-dense reference ---------------------
+    c9 = compressed_section()
+    assert c9["greedy_match"]
+    rows.append(("table9/compressed24_tok_per_s", 0,
+                 f"{c9['compressed_tok_per_s']:.0f} (masked "
+                 f"{c9['masked_tok_per_s']:.0f}, dense "
+                 f"{c9['dense_tok_per_s']:.0f})"))
+    rows.append(("table9/compressed24_weight_ratio", 0,
+                 f"{c9['packed_ratio_f32']:.5f} f32 measured "
+                 f"({c9['packed_ratio_bf16']:.4f} bf16 projected)"))
+    rows.append(("table9/compressed24_beats_masked_dense", 0,
+                 str(c9["beats_masked"])))
+    rec["compressed24_serving"] = c9
+
     emit(rows)
     try:
         os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)), exist_ok=True)
@@ -462,7 +575,8 @@ def run(model=None, params=None):
         pass
     return {"speedup": speedup, "paged_slots_ratio": slots_ratio,
             "paged_attn_bytes": occ_bytes, "gather_bytes": gather_bytes,
-            "mesh_kv_ratio": kv_ratio, "rows": rows, "record": rec}
+            "mesh_kv_ratio": kv_ratio, "compressed24": c9,
+            "rows": rows, "record": rec}
 
 
 if __name__ == "__main__":

@@ -35,9 +35,10 @@ def main():
     err = float(jnp.abs(y_sparse - y_dense).max())
     dense_bytes = ws.size * 2
     sparse_bytes = vals.size * 2 + idx.size
+    assert sparse_bytes / dense_bytes == ops.compressed24_ratio(2)
     print(f"[kernel] 2:4 compacted matmul max err vs dense: {err:.2e}")
     print(f"[kernel] weight bytes: {sparse_bytes / dense_bytes:.3f}x of dense "
-          f"(bf16 vals + int8 idx)")
+          f"(bf16 vals + packed 2-bit idx)")
 
 
 if __name__ == "__main__":

@@ -58,8 +58,9 @@ def serving_table(path):
             "TPOT p50/p95 | paged slots (equal HBM) | KV bytes/slot | "
             "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather | "
             "family matrix (tok/s @ state KB/slot) | "
-            "mesh KV B/device (4x2) |",
-            "|" + "---|" * 16]
+            "mesh KV B/device (4x2) | "
+            "2:4 compressed tok/s (vs masked) |",
+            "|" + "---|" * 17]
     for line in open(path):
         r = json.loads(line)
         if "paged_concurrent_slots" in r:
@@ -97,6 +98,16 @@ def serving_table(path):
                     f"{m['kv_bytes_per_device_single'] / 1e3:.0f}KB")
         else:
             mesh = "-"
+        if r.get("compressed24_serving"):
+            # 2:4 packed (vals + 2-bit idx) decode vs the masked-dense
+            # reference: same greedy tokens, fewer weight bytes per step
+            c = r["compressed24_serving"]
+            c24 = (f"{c['compressed_tok_per_s']:.0f} vs "
+                   f"{c['masked_tok_per_s']:.0f} "
+                   f"({c['compressed_tok_per_s'] / c['masked_tok_per_s']:.1f}x, "
+                   f"{c['n_proj']} proj @ {c['packed_ratio_bf16']:.4f}x bf16)")
+        else:
+            c24 = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
@@ -104,7 +115,8 @@ def serving_table(path):
             f"{r['req_per_s']:.1f} | "
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
             f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
-            f"{paged} | {bps} | {skipped} | {attn} | {fam} | {mesh} |")
+            f"{paged} | {bps} | {skipped} | {attn} | {fam} | {mesh} | "
+            f"{c24} |")
     return "\n".join(rows)
 
 

@@ -34,29 +34,35 @@ _PATH_RULES = [
     # token gathers against a 2-way-sharded table force SPMD full-remat)
     (r"^embed$", ("vocab", "embed_table")),
     (r"^head$", ("embed_table", "vocab")),
-    # attention (leading "layers" dim added automatically for stacked blocks)
-    (r"attn/wq/w$", ("embed", "heads")),
-    (r"attn/wk/w$", ("embed", "kv_heads")),
-    (r"attn/wv/w$", ("embed", "kv_heads")),
-    (r"attn/wo/w$", ("heads", "embed")),
+    # attention (leading "layers" dim added automatically for stacked
+    # blocks). The 2:4 compressed-serving leaves (w24_vals (K/2, N),
+    # w24_idx (K/8, N) packed, mask24 (K, N) — models/blocks.py
+    # compress_params24) carry the SAME logical axes as the dense w: the
+    # row axis is still the input/embed dim (just /2 or /8 in size — an
+    # indivisible shard degrades to replication via the per-dim rule), the
+    # column axis is still the TP output dim.
+    (r"attn/wq/(w|w24_vals|w24_idx|mask24)$", ("embed", "heads")),
+    (r"attn/wk/(w|w24_vals|w24_idx|mask24)$", ("embed", "kv_heads")),
+    (r"attn/wv/(w|w24_vals|w24_idx|mask24)$", ("embed", "kv_heads")),
+    (r"attn/wo/(w|w24_vals|w24_idx|mask24)$", ("heads", "embed")),
     (r"attn/wq/b$", ("heads",)),
     (r"attn/w[kv]/b$", ("kv_heads",)),
     (r"attn/.*lora_a$", ("embed", None)),
     (r"attn/.*lora_b$", (None, "heads")),
     # MLP
-    (r"mlp/w[gu1]/w$", ("embed", "ffn")),
-    (r"mlp/w[d2]/w$", ("ffn", "embed")),
+    (r"mlp/w[gu1]/(w|w24_vals|w24_idx|mask24)$", ("embed", "ffn")),
+    (r"mlp/w[d2]/(w|w24_vals|w24_idx|mask24)$", ("ffn", "embed")),
     (r"mlp/w\w/b$", (None,)),
     # MoE
-    (r"moe/router/w$", ("embed", None)),
+    (r"moe/router/(w|w24_vals|w24_idx|mask24)$", ("embed", None)),
     (r"moe/wg$", ("experts", "embed", None)),
     (r"moe/wu$", ("experts", "embed", None)),
     (r"moe/wd$", ("experts", None, "embed")),
-    (r"moe/shared/w[gu]/w$", ("embed", "ffn")),
-    (r"moe/shared/wd/w$", ("ffn", "embed")),
+    (r"moe/shared/w[gu]/(w|w24_vals|w24_idx|mask24)$", ("embed", "ffn")),
+    (r"moe/shared/wd/(w|w24_vals|w24_idx|mask24)$", ("ffn", "embed")),
     # Mamba2
-    (r"mamba/in_proj/w$", ("embed", "inner")),
-    (r"mamba/out_proj/w$", ("inner", "embed")),
+    (r"mamba/in_proj/(w|w24_vals|w24_idx|mask24)$", ("embed", "inner")),
+    (r"mamba/out_proj/(w|w24_vals|w24_idx|mask24)$", ("inner", "embed")),
     (r"mamba/conv_w$", (None, "inner")),
     (r"mamba/conv_b$", ("inner",)),
     (r"mamba/(A_log|D|dt_bias)$", ("ssm_heads",)),

@@ -8,6 +8,8 @@ weights may be regrown and re-pruned).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -27,8 +29,14 @@ def _kernel(x_ref, w_ref, m_ref, o_ref):
 
 
 def masked_matmul_pallas(x, w, mask, *, block_m: int = 128, block_n: int = 128,
-                         block_k: int = 512, interpret: bool = True):
-    """x: (M, K); w: (K, N); mask: (K, N) int8/bool. Returns (M, N) f32."""
+                         block_k: int = 512,
+                         interpret: Optional[bool] = None):
+    """x: (M, K); w: (K, N); mask: (K, N) int8/bool. Returns (M, N) f32.
+    ``interpret=None`` resolves via ops._interpret_default (True off-TPU —
+    a hard-coded True would silently run the Python interpreter on TPU)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
     M, K = x.shape
     N = w.shape[1]
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)

@@ -15,6 +15,7 @@ the (8, 128) f32 VMEM layout.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +55,16 @@ def _kernel_nograd(w_ref, xnorm_ref, mask_ref, *, alpha, n, m):
 
 def nm_mask_pallas(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0,
                    n: int = 2, m: int = 4, block_out: int = 256,
-                   block_in: int = 512, interpret: bool = True):
+                   block_in: int = 512, interpret: Optional[bool] = None):
     """w_oi: (d_out, d_in); xnorm: (d_in,); g_oi: optional (d_out, d_in).
 
     Returns int8 keep-mask (d_out, d_in) with exactly n of every m kept.
+    ``interpret=None`` resolves via ops._interpret_default (True off-TPU —
+    a hard-coded True would silently run the Python interpreter on TPU).
     """
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
     d_out, d_in = w_oi.shape
     bo = min(block_out, d_out)
     bi = min(block_in, d_in)

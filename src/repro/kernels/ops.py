@@ -1,8 +1,10 @@
-"""Jit'd public wrappers for the Pallas kernels + packing utilities.
+"""Jit'd public wrappers for the Pallas kernels + 2:4 packing utilities.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
+``interpret`` resolves to True off-TPU (this container is CPU-only; the
 kernel bodies execute in Python for correctness validation) and False on
-TPU, where pallas_call lowers to Mosaic.
+TPU, where pallas_call lowers to Mosaic. The resolution happens INSIDE each
+kernel module (``interpret=None`` default) so direct callers get the same
+behavior as these wrappers.
 """
 from __future__ import annotations
 
@@ -25,21 +27,21 @@ def _interpret_default() -> bool:
 def nm_mask(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0, n: int = 2,
             m: int = 4):
     """Fused score + N:M mask (int8). See kernels/nm_mask.py."""
-    return nm_mask_pallas(w_oi, xnorm, g_oi, alpha=alpha, n=n, m=m,
-                          interpret=_interpret_default())
+    return nm_mask_pallas(w_oi, xnorm, g_oi, alpha=alpha, n=n, m=m)
 
 
-@jax.jit
-def sparse_matmul24(x, vals, idx):
-    """y = x @ decompress_2:4(vals, idx). See kernels/sparse_matmul24.py."""
-    return sparse_matmul24_pallas(x, vals, idx,
-                                  interpret=_interpret_default())
+@functools.partial(jax.jit, static_argnames=("w_qscale",))
+def sparse_matmul24(x, vals, idx, bias=None, w_qscale=None):
+    """y = x @ decompress_2:4(vals, idx) [+ bias], fused in one kernel.
+    ``w_qscale``: int8 ``vals`` dequant scale (None == float vals).
+    See kernels/sparse_matmul24.py for the packed-index storage contract."""
+    return sparse_matmul24_pallas(x, vals, idx, bias=bias, w_qscale=w_qscale)
 
 
 @jax.jit
 def masked_matmul(x, w, mask):
     """y = x @ (w * mask) with the mask applied at tile load."""
-    return masked_matmul_pallas(x, w, mask, interpret=_interpret_default())
+    return masked_matmul_pallas(x, w, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "kv_qscale"))
@@ -48,33 +50,87 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
     """Single-query decode attention straight off the paged KV arena.
     See kernels/paged_attention.py for the grid/layout contract."""
     return paged_attention_pallas(q, k_pages, v_pages, block_table, lengths,
-                                  scale=scale, kv_qscale=kv_qscale,
-                                  interpret=_interpret_default())
+                                  scale=scale, kv_qscale=kv_qscale)
 
 
 # ---------------------------------------------------------------------------
-# 2:4 packing (offline, at model-export time)
+# 2:4 compacted storage (offline, at engine-build / model-export time)
+#
+# A 2:4-sparse (K, N) weight packs into
+#   vals (K/2, N)  the two surviving values per group of 4 along K
+#   idx  (K/8, N)  uint8, each value's offset in its group, 2 bits per
+#                  entry: byte b holds entries [4b, 4b+4) of the logical
+#                  (K/2, N) int index plane, entry t in bits [2t, 2t+2)
+#
+# so compressed bytes / dense bytes = (itemsize/2 + 1/8) / itemsize:
+# 0.5625x for bf16, 0.53125x for f32 (compressed24_ratio below). The byte
+# layout is chosen so the kernel's in-tile unpack is a repeat + shift
+# (kernels/sparse_matmul24.py) — no gathers on the TPU vector units.
 # ---------------------------------------------------------------------------
+
+def _pack24_idx(idx2):
+    """Logical 2-bit index plane (..., K/2, N) in [0,4) -> packed uint8
+    (..., K/8, N)."""
+    g = idx2.astype(jnp.uint8).reshape(*idx2.shape[:-2], idx2.shape[-2] // 4,
+                                       4, idx2.shape[-1])
+    return (g[..., 0, :] | (g[..., 1, :] << 2) | (g[..., 2, :] << 4)
+            | (g[..., 3, :] << 6))
+
+
+def unpack24_idx(idx):
+    """Packed uint8 (..., K/8, N) -> logical index plane (..., K/2, N) int32."""
+    parts = jnp.stack([(idx >> (2 * t)) & 3 for t in range(4)], axis=-2)
+    return parts.reshape(*idx.shape[:-2], idx.shape[-2] * 4,
+                         idx.shape[-1]).astype(jnp.int32)
+
 
 def compact24(w) -> tuple:
-    """Pack a 2:4-sparse (K, N) weight into (vals, idx), both (K/2, N).
+    """Pack a 2:4-sparse (..., K, N) weight into (vals, packed idx).
 
-    Within every group of 4 consecutive rows there must be <= 2 nonzeros
-    (guaranteed by the 2:4 pruner); ties broken by position.
+    Within every group of 4 consecutive K rows there must be <= 2 nonzeros
+    (guaranteed by the 2:4 pruner); groups with > 2 zeros keep their
+    nonzeros plus leading zero positions, ties broken by position (stable).
+    Leading dims (stacked layer axes) pack elementwise.
     """
-    K, N = w.shape
-    assert K % 4 == 0
-    g = w.reshape(K // 4, 4, N)
+    K = w.shape[-2]
+    assert K % 8 == 0, f"2:4 packing needs K % 8 == 0, got K={K}"
+    g = w.reshape(*w.shape[:-2], K // 4, 4, w.shape[-1])
     is_zero = (g == 0)
     # stable argsort: nonzero positions first, original order preserved
-    order = jnp.argsort(is_zero.astype(jnp.int32), axis=1, stable=True)
-    top2 = order[:, :2, :].astype(jnp.int8)  # (K/4, 2, N)
-    vals = jnp.take_along_axis(g, top2.astype(jnp.int32), axis=1)  # (K/4, 2, N)
-    return vals.reshape(K // 2, N), top2.reshape(K // 2, N)
+    order = jnp.argsort(is_zero.astype(jnp.int32), axis=-2, stable=True)
+    top2 = order[..., :2, :]  # (..., K/4, 2, N)
+    vals = jnp.take_along_axis(g, top2, axis=-2)
+    idx2 = top2.reshape(*w.shape[:-2], K // 2, w.shape[-1])
+    return vals.reshape(*w.shape[:-2], K // 2, w.shape[-1]), _pack24_idx(idx2)
+
+
+def decompress24(vals, idx):
+    """(vals, packed idx) -> dense (..., K, N), bit-exact inverse of
+    ``compact24`` on pruner output (zeros come back as +0.0, matching
+    ``jnp.where(mask, w, 0)``)."""
+    K2, N = vals.shape[-2], vals.shape[-1]
+    idx2 = unpack24_idx(idx)
+    v = vals.reshape(*vals.shape[:-2], K2 // 2, 2, N)
+    i = idx2.reshape(*vals.shape[:-2], K2 // 2, 2, N)
+    off = jnp.arange(4, dtype=idx2.dtype).reshape(4, 1)  # group-local row
+    dense = (jnp.where(i[..., 0:1, :] == off, v[..., 0:1, :], 0)
+             + jnp.where(i[..., 1:2, :] == off, v[..., 1:2, :], 0))
+    return dense.reshape(*vals.shape[:-2], K2 * 2, N).astype(vals.dtype)
 
 
 def sparsity_check24(w) -> bool:
-    """True iff every group of 4 along K has >= 2 zeros."""
-    K, N = w.shape
-    g = (w.reshape(K // 4, 4, N) == 0).sum(axis=1)
+    """True iff every group of 4 along K (axis -2) has >= 2 zeros."""
+    K = w.shape[-2]
+    if K % 4 != 0:
+        return False
+    g = (w.reshape(*w.shape[:-2], K // 4, 4, w.shape[-1]) == 0).sum(axis=-2)
     return bool((g >= 2).all())
+
+
+def compressed24_ratio(itemsize: int) -> float:
+    """Compressed (vals + packed 2-bit idx) bytes as a fraction of dense
+    bytes for a weight of the given itemsize: 0.5625 for bf16, 0.53125 for
+    f32. The single source of truth for every projection/accounting site
+    (launch/dryrun.py, benchmarks) — derived from the storage format above,
+    so it cannot drift from what compact24 actually emits."""
+    return (0.5 * itemsize + 0.125) / itemsize

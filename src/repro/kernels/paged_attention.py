@@ -42,12 +42,14 @@ mirroring the symmetric KV_QSCALE quantization of models/layers.py. Rows
 with ``lengths[b] == 0`` produce a zero output vector (the gather path has
 no such case; decode always has length >= 1).
 
-``interpret=True`` (the off-TPU default via kernels/ops.py) runs the same
-body through the Pallas interpreter for CPU correctness testing.
+``interpret=None`` resolves to True off-TPU (ops._interpret_default) and
+runs the same body through the Pallas interpreter for CPU correctness
+testing; on TPU it lowers to Mosaic.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,11 +110,16 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
                            scale: float, kv_qscale=None,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """q: (B, KV, G, hd); k/v_pages: (n_pages, page_size, KV, hd);
     block_table: (B, MB) int32; lengths: (B,) int32. Returns (B, KV, G, hd)
     in q.dtype. ``kv_qscale``: int8 arena dequant scale (None == float KV).
+    ``interpret=None`` resolves via ops._interpret_default (True off-TPU —
+    a hard-coded True would silently run the Python interpreter on TPU).
     """
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
     B, KV, G, hd = q.shape
     n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
     assert k_pages.shape == v_pages.shape == (n_pages, page_size, KV, hd)
@@ -146,6 +153,11 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
     return pl.pallas_call(
         kern, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            # slots are independent; the page axis revisits the m/l/acc carry
+            dimension_semantics=("parallel", "arbitrary"),
+            vmem_limit_bytes=64 * 1024 * 1024,
+        ),
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)

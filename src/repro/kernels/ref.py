@@ -16,22 +16,33 @@ def nm_mask_ref(w_oi, xnorm, g_oi=None, *, alpha=100.0, n=2, m=4):
 
 
 def decompress24_ref(vals, idx, K):
-    """vals/idx: (K/2, N) -> dense (K, N)."""
+    """vals (K/2, N) + packed 2-bit idx (K/8, N) uint8 -> dense (K, N).
+
+    Scatter-based oracle, deliberately a different algorithm from the
+    compare-select decompression in ops.decompress24 and the kernel."""
     N = vals.shape[1]
+    # unpack: logical index row r sits in byte r//4 at bits [2*(r%4), ...)
+    idx2 = jnp.stack([(idx >> (2 * t)) & 3 for t in range(4)],
+                     axis=1).reshape(K // 2, N).astype(jnp.int32)
     dense = jnp.zeros((K, N), vals.dtype)
     groups = K // 4
     for t in range(2):
         v = vals[t::2, :]  # (K/4, N)
-        i = idx[t::2, :].astype(jnp.int32)
+        i = idx2[t::2, :]
         rows = jnp.arange(groups)[:, None] * 4 + i  # (K/4, N) dense row ids
         cols = jnp.broadcast_to(jnp.arange(N)[None, :], rows.shape)
         dense = dense.at[rows, cols].add(v)
     return dense
 
 
-def sparse_matmul24_ref(x, vals, idx):
-    dense = decompress24_ref(vals, idx, x.shape[1])
-    return (x.astype(jnp.float32) @ dense.astype(jnp.float32))
+def sparse_matmul24_ref(x, vals, idx, bias=None, w_qscale=None):
+    dense = decompress24_ref(vals, idx, x.shape[1]).astype(jnp.float32)
+    if w_qscale is not None:
+        dense = dense / w_qscale
+    y = x.astype(jnp.float32) @ dense
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 def masked_matmul_ref(x, w, mask):

@@ -1,74 +1,133 @@
-"""Pallas TPU kernel: 2:4 compacted-weight matmul  y = x @ decompress(W).
+"""Pallas TPU kernel: 2:4 compacted-weight matmul  y = x @ decompress(W) + b.
 
 TPU adaptation of the paper's NVIDIA-sparse-tensor-core deployment story
 (Appendix B.1): TPUs have no sparse MXU, but decode is weight-bandwidth
-bound, so the win is moving HALF the weight bytes HBM->VMEM and expanding
+bound, so the win is moving 0.5625x the weight bytes HBM->VMEM and expanding
 to a dense tile on-chip for the MXU.
 
-Storage: vals (K/2, N) keeps the 2 surviving values per group of 4 along K;
-idx (K/2, N) int8 in [0,4) records each value's offset inside its group.
-Decompression is two broadcast-compares against an iota (no gathers — TPU
-vector units hate gathers):
+Storage (see kernels/ops.py compact24): vals (K/2, N) keeps the 2 surviving
+values per group of 4 along K; idx (K/8, N) uint8 packs each value's 2-bit
+offset inside its group, four entries per byte — byte b holds logical index
+rows [4b, 4b+4), entry t in bits [2t, 2t+2). Decompression is a repeat +
+shift to unpack, then two broadcast-compares against an iota (no gathers —
+TPU vector units hate gathers):
 
-    dense[k, n] = sum_t vals[g*2+t, n] * (idx[g*2+t, n] == k % 4),  g = k//4
+    dense[k, n] = sum_t vals[g*2+t, n] * (idx2[g*2+t, n] == k % 4),  g = k//4
 
-Grid (M/bm, N/bn, K/bk) with K innermost: the output tile lives in VMEM
-across the K loop (revisiting), initialized at k==0.
+Grid (M/bm, N/bn, K/bk) with K innermost: a float32 VMEM scratch accumulates
+across the K loop (revisiting) and the epilogue — optional fused bias add,
+cast back to x.dtype — runs on the last K step. ``w_qscale`` dequantizes
+int8 ``vals`` in-tile (mirroring paged_attention's kv_qscale), stacking the
+int8 quant saving on top of the 2:4 compaction. The jitted wrapper zero-pads
+ragged M up to the block and slices the result back, so decode batch widths
+need not divide ``block_m``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, vals_ref, idx_ref, o_ref):
+def _body(x_ref, vals_ref, idx_ref, bias_ref, o_ref, acc_ref, *, w_qscale):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]                       # (bm, bk)
-    vals = vals_ref[...]                 # (bk/2, bn)
-    idx = idx_ref[...].astype(jnp.int32)  # (bk/2, bn)
+    x = x_ref[...]                        # (bm, bk)
+    vals = vals_ref[...]                  # (bk/2, bn)
+    if w_qscale is not None:
+        vals = vals.astype(jnp.float32) / w_qscale
+    packed = idx_ref[...].astype(jnp.int32)  # (bk/8, bn) uint8 bytes
     bk = x.shape[1]
     bn = vals.shape[1]
+
+    # unpack: logical index row r sits in byte r//4 at bits [2*(r%4), ...)
+    bytes_rep = jnp.repeat(packed, 4, axis=0)  # (bk/2, bn)
+    shift = (jax.lax.broadcasted_iota(jnp.int32, (bk // 2, bn), 0) % 4) * 2
+    idx2 = (bytes_rep >> shift) & 3
 
     # expand to a dense (bk, bn) tile in VMEM with 2 broadcast-compares
     within = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) % 4  # k % 4
     v0 = vals[0::2, :]   # (bk/4, bn) first kept value per group
     v1 = vals[1::2, :]
-    i0 = idx[0::2, :]
-    i1 = idx[1::2, :]
+    i0 = idx2[0::2, :]
+    i1 = idx2[1::2, :]
     rep = lambda a: jnp.repeat(a, 4, axis=0)  # group -> 4 dense rows
-    dense = (rep(v0) * (rep(i0) == within).astype(v0.dtype)
-             + rep(v1) * (rep(i1) == within).astype(v1.dtype))
-    o_ref[...] += jnp.dot(x, dense, preferred_element_type=jnp.float32
-                          ).astype(o_ref.dtype)
+    dense = (jnp.where(rep(i0) == within, rep(v0), 0)
+             + jnp.where(rep(i1) == within, rep(v1), 0))
+    acc_ref[...] += jnp.dot(x, dense, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if bias_ref is not None:
+            acc = acc + bias_ref[...].astype(jnp.float32)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def sparse_matmul24_pallas(x, vals, idx, *, block_m: int = 128,
-                           block_n: int = 128, block_k: int = 128,
-                           interpret: bool = True):
-    """x: (M, K); vals/idx: (K/2, N). Returns (M, N) in f32."""
+def _kernel_bias(x_ref, vals_ref, idx_ref, bias_ref, o_ref, acc_ref, *,
+                 w_qscale):
+    _body(x_ref, vals_ref, idx_ref, bias_ref, o_ref, acc_ref,
+          w_qscale=w_qscale)
+
+
+def _kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, w_qscale):
+    _body(x_ref, vals_ref, idx_ref, None, o_ref, acc_ref, w_qscale=w_qscale)
+
+
+def sparse_matmul24_pallas(x, vals, idx, *, bias=None, w_qscale=None,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 512,
+                           interpret: Optional[bool] = None):
+    """x: (M, K); vals: (K/2, N); idx: (K/8, N) uint8 packed (see module
+    docstring); bias: optional (N,). Returns (M, N) in x.dtype. M may be
+    ragged (padded internally); N and K must divide their blocks, K % 8 == 0.
+    ``interpret=None`` resolves via ops._interpret_default (True off-TPU)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
     M, K = x.shape
     N = vals.shape[1]
-    assert vals.shape[0] == K // 2 and idx.shape == vals.shape
+    assert K % 8 == 0, f"K={K} must be a multiple of 8 (packed 2-bit idx)"
+    assert vals.shape[0] == K // 2 and idx.shape == (K // 8, N), \
+        (x.shape, vals.shape, idx.shape)
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % 4 == 0
-    grid = (M // bm, N // bn, K // bk)
+    assert N % bn == 0 and K % bk == 0 and bk % 8 == 0
+    pad = (-M) % bm
+    if pad:  # ragged decode batch: zero-pad rows, slice the result back
+        x = jnp.concatenate([x, jnp.zeros((pad, K), x.dtype)], axis=0)
+    grid = ((M + pad) // bm, N // bn, K // bk)
 
-    return pl.pallas_call(
-        _kernel, grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
-        ],
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk // 8, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, vals, idx]
+    kern = functools.partial(_kernel, w_qscale=w_qscale)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias.reshape(1, N))
+        kern = functools.partial(_kernel_bias, w_qscale=w_qscale)
+
+    out = pl.pallas_call(
+        kern, grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M + pad, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            # M/N tiles are independent; the K axis revisits the accumulator
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            vmem_limit_bytes=64 * 1024 * 1024,
+        ),
         interpret=interpret,
-    )(x, vals, idx)
+    )(*operands)
+    return out[:M] if pad else out

@@ -291,7 +291,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         # the 2:4 + int8-KV serving projection (the paper's Table 7 analogue)
         ideal_bytes = pb + cb
         rec["roofline"]["decode_mem_eff"] = ideal_bytes / max(byt, 1e-30)
-        w24 = pb * 0.5625  # bf16 vals + packed 2-bit idx (kernels/sparse_matmul24)
+        from repro.kernels.ops import compressed24_ratio
+        # bf16 vals + packed 2-bit idx (kernels/sparse_matmul24): 0.5625x
+        w24 = pb * compressed24_ratio(2)
         cbq = cb if kv_dtype == "int8" else cb * 0.5
         rec["roofline"]["derived_24_int8kv_ms"] = (w24 + cbq) / HW.hbm_bw * 1e3
         rec["roofline"]["tpot_ms"] = byt / HW.hbm_bw * 1e3

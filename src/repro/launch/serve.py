@@ -16,7 +16,10 @@ hybrid (``--arch zamba2-7b``), VLM (``--arch qwen2-vl-2b``; the CLI attaches
 stub vision-patch embeddings to each request, matching the repo's stub
 vision frontend). ``--mesh 4,2`` runs the engine tensor/data-parallel over
 a (data, model) device mesh — same tokens, sharded params + KV arena. Demonstrates the paper's deployment story: the same engine
-serves dense or Wanda++-pruned (2:4 zeros) weights;
+serves dense or Wanda++-pruned (2:4 zeros) weights; with ``--pruned 2:4``
+the engine auto-packs 2:4 projections into compacted (vals + 2-bit idx)
+storage at build (``--compressed-24`` to control, ``--sparse-24-kernel``
+to force the Pallas decode matmul off-TPU);
 benchmarks/table9_serving.py quantifies the throughput + latency effect.
 """
 from __future__ import annotations
@@ -41,7 +44,8 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  sampling: SamplingConfig = SamplingConfig(),
                  chunk: int = None, n_slots: int = None, paged: bool = True,
                  page_size: int = 16, n_pages: int = None,
-                 paged_kernel: bool = None, extra_len: int = 0, mesh=None):
+                 paged_kernel: bool = None, extra_len: int = 0, mesh=None,
+                 compressed24: str = None, compressed24_kernel: bool = None):
     """Returns (engine, cfg). Prunes the weights first when requested.
 
     The default max_len covers prompt + generation plus the arch's vision
@@ -67,8 +71,13 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
         paged=paged, page_size=page_size, n_pages=n_pages,
         paged_kernel=paged_kernel, mesh=mesh,
+        compressed24=compressed24, compressed24_kernel=compressed24_kernel,
     )
-    return Engine(model, params, ecfg, sampling), cfg
+    engine = Engine(model, params, ecfg, sampling)
+    if engine.compressed24:
+        print(f"[serve] compressed 2:4 weights: {engine.compressed24} "
+              f"projections packed (vals + 2-bit idx)")
+    return engine, cfg
 
 
 def _stub_vision(cfg, rng):
@@ -84,13 +93,16 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           smoke: bool = True, pruned: str = None, max_len: int = None,
           sampling: SamplingConfig = SamplingConfig(), paged: bool = True,
           page_size: int = 16, n_pages: int = None,
-          paged_kernel: bool = None, mesh=None):
+          paged_kernel: bool = None, mesh=None, compressed24: str = None,
+          compressed24_kernel: bool = None):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
                                sampling=sampling, paged=paged,
                                page_size=page_size, n_pages=n_pages,
-                               paged_kernel=paged_kernel, mesh=mesh)
+                               paged_kernel=paged_kernel, mesh=mesh,
+                               compressed24=compressed24,
+                               compressed24_kernel=compressed24_kernel)
     rng = np.random.default_rng(7)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
@@ -122,7 +134,9 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    sampling: SamplingConfig = SamplingConfig(),
                    paged: bool = True, page_size: int = 16,
                    n_pages: int = None, shared_prefix: int = 0,
-                   paged_kernel: bool = None, mesh=None):
+                   paged_kernel: bool = None, mesh=None,
+                   compressed24: str = None,
+                   compressed24_kernel: bool = None):
     """Mixed-length request stream through the continuous-batching scheduler.
 
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
@@ -134,7 +148,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                                sampling=sampling, chunk=max(gen // 2, 1),
                                paged=paged, page_size=page_size,
                                n_pages=n_pages, paged_kernel=paged_kernel,
-                               mesh=mesh)
+                               mesh=mesh, compressed24=compressed24,
+                               compressed24_kernel=compressed24_kernel)
     rng = np.random.default_rng(7)
     prefix = None
     if shared_prefix > 0:
@@ -205,6 +220,19 @@ def main():
                     help="force the Pallas paged-attention kernel even "
                          "off-TPU (interpret mode — slow, correctness "
                          "only)")
+    ap.add_argument("--compressed-24", default=None,
+                    choices=["auto", "on", "off", "masked"],
+                    help="serve 2:4-pruned projections from compacted "
+                         "(vals + 2-bit idx) storage. auto (default): "
+                         "compress whatever passes the 2:4 check; on: "
+                         "require at least one compressed projection; "
+                         "masked: keep dense weights + int8 masks (the "
+                         "parity/throughput reference)")
+    ap.add_argument("--sparse-24-kernel", action="store_true",
+                    help="force the Pallas sparse_matmul24 decode kernel "
+                         "even off-TPU (interpret mode — slow, correctness "
+                         "only); default picks it on TPU, the XLA "
+                         "decompress-once path elsewhere")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="shard the engine over a (data, model) device mesh "
                          "(e.g. 4,2): params by the sharding rule table, "
@@ -216,6 +244,7 @@ def main():
     mesh = parse_mesh(args.mesh) if args.mesh else None
     paged_kernel = True if args.paged_attn_kernel else \
         (False if args.gather_decode else None)
+    sparse_kernel = True if args.sparse_24_kernel else None
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p, seed=args.seed)
     if args.requests > 0:
@@ -224,12 +253,16 @@ def main():
                        sampling=sampling, paged=not args.dense_pool,
                        page_size=args.page_size, n_pages=args.n_pages,
                        shared_prefix=args.shared_prefix,
-                       paged_kernel=paged_kernel, mesh=mesh)
+                       paged_kernel=paged_kernel, mesh=mesh,
+                       compressed24=args.compressed_24,
+                       compressed24_kernel=sparse_kernel)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,
               paged=not args.dense_pool, page_size=args.page_size,
-              n_pages=args.n_pages, paged_kernel=paged_kernel, mesh=mesh)
+              n_pages=args.n_pages, paged_kernel=paged_kernel, mesh=mesh,
+              compressed24=args.compressed_24,
+              compressed24_kernel=sparse_kernel)
 
 
 if __name__ == "__main__":

@@ -94,6 +94,88 @@ def prunable_table(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# 2:4 compressed-weight serving: engine-build param transform
+# ---------------------------------------------------------------------------
+
+def _tget(t, path):
+    for p in path:
+        if not isinstance(t, dict) or p not in t:
+            return None
+        t = t[p]
+    return t
+
+
+def _tset(t, path, val):
+    if len(path) == 1:
+        return {**t, path[0]: val}
+    return {**t, path[0]: _tset(t[path[0]], path[1:], val)}
+
+
+def compress_params24(cfg: ModelConfig, params, *, keep_dense: bool = True,
+                      masked: bool = False):
+    """Detect 2:4-sparse projections and rewrite them for serving.
+
+    Walks every prunable 2-D projection (``prunable_table``; expert stacks
+    and non-``w`` leaves are skipped) over the stacked ``blocks`` axis —
+    and Zamba2's unstacked ``shared_attn`` — and, where the weight passes
+    ``sparsity_check24`` (with K % 8 == 0 for the 2-bit index packing):
+
+      default      replace ``w`` with the compacted (``w24_vals``,
+                   ``w24_idx``) pair (kernels/ops.py compact24 — 0.5625x
+                   bf16 / 0.53125x f32 weight bytes). ``keep_dense=True``
+                   (the off-TPU serving mode) additionally materializes the
+                   dense copy ONCE via decompress24 — bit-exact, so greedy
+                   decode matches the uncompressed engine token for token —
+                   because without a sparse matmul unit a per-step
+                   decompression only adds work. On TPU (``keep_dense=
+                   False``) only the packed pair ships, and the Pallas
+                   kernel reads it directly (layers.sparse24_lin).
+      masked=True  attach the int8 keep-mask as ``mask24`` instead (keep
+                   ``w``): the masked-dense reference mode the serving
+                   benchmark gates against (layers.masked24_lin).
+
+    Random-init or dense-trained weights never pass the sparsity check, so
+    the transform is an exact no-op for non-pruned checkpoints. Returns
+    ``(new_params, n_compressed)``.
+    """
+    from repro.kernels.ops import compact24, decompress24, sparsity_check24
+
+    def xform(tree, table):
+        n = 0
+        if tree is None:
+            return tree, 0
+        for _, path in table.items():
+            if path[-1] != "w":
+                continue  # expert-stacked (E, D, F) leaves: no serve kernel
+            w = _tget(tree, path)
+            if w is None or w.ndim < 2 or w.shape[-2] % 8 != 0:
+                continue
+            if not sparsity_check24(w):
+                continue
+            pdict = dict(_tget(tree, path[:-1]))
+            if masked:
+                pdict["mask24"] = (w != 0).astype(jnp.int8)
+            else:
+                vals, idx = compact24(w)
+                del pdict["w"]
+                pdict["w24_vals"] = vals
+                pdict["w24_idx"] = idx
+                if keep_dense:
+                    pdict["w"] = decompress24(vals, idx)
+            tree = _tset(tree, path[:-1], pdict)
+            n += 1
+        return tree, n
+
+    out = dict(params)
+    out["blocks"], n = xform(params["blocks"], prunable_table(cfg))
+    if cfg.family == "hybrid" and "shared_attn" in params:
+        out["shared_attn"], ns = xform(params["shared_attn"],
+                                       PRUNABLE["hybrid_shared"])
+        n += ns
+    return out, n
+
+
+# ---------------------------------------------------------------------------
 # dense / vlm / audio transformer block
 # ---------------------------------------------------------------------------
 

@@ -41,9 +41,60 @@ def linear(p, x):
 
 def default_lin(name, p, x):
     """Pluggable matmul backend. Swapped out to (a) tap per-layer inputs for
-    Wanda/RGS statistics, (b) apply sparsity masks in-flight, or (c) dispatch
-    to the Pallas 2:4 compacted kernel on the serving path."""
+    Wanda/RGS statistics, (b) apply sparsity masks in-flight (masked24_lin),
+    or (c) dispatch to the Pallas 2:4 compacted kernel on the serving path
+    (sparse24_lin)."""
     return linear(p, x)
+
+
+def sparse24_lin(use_kernel: bool = False):
+    """Serve-path backend for 2:4-compressed projections (dispatch is
+    content-based: params carrying ``w24_vals``/``w24_idx`` from
+    blocks.compress_params24 take the compressed path, everything else falls
+    through to ``linear``). ``use_kernel=True`` runs the Pallas compacted
+    matmul (kernels/sparse_matmul24.py, 0.5625x bf16 weight traffic, bias
+    fused); otherwise the engine-build dense copy (``w``, materialized once
+    via decompress24 — bit-exact) serves through plain ``linear``, with a
+    per-call decompression fallback when no dense copy was kept. The LoRA
+    epilogue matches ``linear``'s exactly."""
+    def lin(name, p, x):
+        if "w24_vals" not in p:
+            return linear(p, x)
+        if not use_kernel and "w" in p:
+            return linear(p, x)
+        if use_kernel:
+            from repro.kernels.ops import sparse_matmul24
+            lead = x.shape[:-1]
+            y = sparse_matmul24(x.reshape(-1, x.shape[-1]), p["w24_vals"],
+                                p["w24_idx"], bias=p.get("b"))
+            y = y.reshape(*lead, y.shape[-1])
+        else:
+            from repro.kernels.ops import decompress24
+            y = x @ decompress24(p["w24_vals"], p["w24_idx"])
+            if "b" in p:
+                y = y + p["b"]
+        if "lora_a" in p:
+            y = y + 2.0 * ((x @ p["lora_a"]) @ p["lora_b"]).astype(y.dtype)
+        return y
+    return lin
+
+
+def masked24_lin(name, p, x):
+    """Masked-dense reference backend: serve (w, mask) with the int8 mask
+    applied in-flight on every call — the pre-compression 2:4 serving mode
+    (kernels/masked_matmul.py semantics; 1.25x dense weight traffic). Params
+    without a ``mask24`` fall through to ``linear``. Numerically the mask
+    multiply is an exact no-op on pruner output (w is already zeroed where
+    mask == 0), which is what makes the compressed-vs-masked benchmark
+    token-comparison bit-exact."""
+    if "mask24" not in p:
+        return linear(p, x)
+    y = x @ (p["w"] * p["mask24"].astype(p["w"].dtype))
+    if "b" in p:
+        y = y + p["b"]
+    if "lora_a" in p:
+        y = y + 2.0 * ((x @ p["lora_a"]) @ p["lora_b"]).astype(y.dtype)
+    return y
 
 
 def scoped(lin, prefix):

@@ -52,6 +52,17 @@ draws from per-slot keys (serve/sampling.py) so meshed streams reproduce
 the unmeshed ones token for token; ``mesh=None`` is exactly the
 single-device engine.
 
+Weights are served **2:4-compressed** when the checkpoint is 2:4-pruned
+(``EngineConfig.compressed24``, default auto-detect): at engine build every
+sparse projection packs ONCE into (w24_vals, w24_idx) — 2-bit packed
+indices, 0.5625x bf16 weight bytes (kernels/ops.py compact24) — and block
+matmuls dispatch through ``layers.sparse24_lin``: the Pallas compacted
+matmul on TPU (``compressed24_kernel``), or a build-time dense
+materialization elsewhere (bit-exact, so greedy tokens match the
+uncompressed engine). ``compressed24="masked"`` instead serves the
+(w, int8 mask) pair with the mask applied in-flight each step — the
+masked-dense reference the serving benchmark gates against.
+
 Shared prompt prefixes (:meth:`Engine.register_prefix`) live in a
 **multi-prefix registry**: each registered prefix is prefetched once into
 refcounted pages and mapped — never recomputed — into every request that
@@ -113,6 +124,26 @@ class EngineConfig:
     # Pallas interpreter — a correctness path, ~4x slower than the gather's
     # plain HLO). True/False force either path (tests, benchmarks, CLI).
     paged_kernel: Optional[bool] = None
+    # 2:4 compressed-weight serving (models/blocks.py compress_params24).
+    #   "auto" (== None)  detect 2:4-sparse projections at engine build and
+    #                     pack them into (w24_vals, w24_idx) — 2-bit packed
+    #                     indices, 0.5625x bf16 weight bytes. Non-pruned
+    #                     checkpoints never pass the sparsity check, so auto
+    #                     is an exact no-op for them.
+    #   "on"              same, but raise if nothing is 2:4-sparse.
+    #   "off"             serve the params untouched (masked-dense status quo).
+    #   "masked"          attach int8 keep-masks and apply them in-flight
+    #                     every step (layers.masked24_lin) — the reference
+    #                     mode the serving benchmark gates against.
+    # Greedy decode is bit-exact across auto/on/off/masked on the non-kernel
+    # path (decompression is the exact inverse of the packing).
+    compressed24: Optional[str] = None
+    # Compressed projections through the Pallas compacted matmul vs the
+    # engine-build dense copy. None == auto: kernel on TPU (where reading
+    # 0.5625x the weight bytes is the decode win), dense copy elsewhere (a
+    # per-step decompression without a sparse matmul unit only adds work;
+    # the dense copy is materialized ONCE from the packed form, bit-exact).
+    compressed24_kernel: Optional[bool] = None
     # (data, model) serving mesh (launch/mesh.py). Params shard by the
     # distributed/sharding.py rule table (TP heads/ffn over `model`); slot
     # state, per-slot pools, and block-table rows shard over `data`; KV /
@@ -199,6 +230,35 @@ class Engine:
         self.paged = cfg.paged and spec.has_kv
         self.paged_kernel = cfg.paged_kernel if cfg.paged_kernel is not None \
             else jax.default_backend() == "tpu"
+        # 2:4 compressed-weight serving: pack sparse projections ONCE at
+        # build (before any mesh placement, so the packed leaves shard by
+        # the same rule table), then dispatch every block matmul through
+        # the matching lin backend. self._lin stays None when nothing
+        # compressed — the model then runs its default linear path.
+        mode = cfg.compressed24 if cfg.compressed24 is not None else "auto"
+        if mode not in ("auto", "on", "off", "masked"):
+            raise ValueError(
+                f"compressed24={mode!r}: expected auto|on|off|masked")
+        self.compressed24_kernel = cfg.compressed24_kernel \
+            if cfg.compressed24_kernel is not None \
+            else jax.default_backend() == "tpu"
+        self.compressed24 = 0  # projections actually compressed/masked
+        self._lin = None
+        if mode != "off" and params is not None:
+            from repro.models.blocks import compress_params24
+            from repro.models.layers import masked24_lin, sparse24_lin
+            params, n24 = compress_params24(
+                mcfg, params, keep_dense=not self.compressed24_kernel,
+                masked=(mode == "masked"))
+            if mode == "on" and n24 == 0:
+                raise ValueError(
+                    "compressed24='on': no 2:4-sparse projection found "
+                    "(serve a pruned checkpoint, or use 'auto')")
+            if n24:
+                self.params = params
+                self.compressed24 = n24
+                self._lin = masked24_lin if mode == "masked" \
+                    else sparse24_lin(self.compressed24_kernel)
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.pstate: Optional[PageState] = None
@@ -346,7 +406,8 @@ class Engine:
             if block_tables is not None:
                 inputs["block_table"] = block_tables
             logits, cache = self.model.decode_step(
-                params, inputs, cache, paged_kernel=self.paged_kernel)
+                params, inputs, cache, paged_kernel=self.paged_kernel,
+                lin=self._lin)
             nxt = sample_tokens(self._for_sampling(logits), sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
             # the KV write lands on a position admission will overwrite
@@ -396,7 +457,8 @@ class Engine:
             n_patches = vis.shape[1]
         logits, _, states = self.model.forward(params, inputs,
                                                return_cache=True,
-                                               seq_lens=plens)
+                                               seq_lens=plens,
+                                               lin=self._lin)
         eff = plens + n_patches
         delta = jnp.full_like(plens, _rope_delta(n_patches))
         return logits, states, eff, delta
@@ -472,7 +534,7 @@ class Engine:
         last, cache = self.model.prefill_paged(
             params, {"tokens": tokens, "pos": shared_lens,
                      "last": suff_lens - 1, "block_table": bt}, cache,
-            paged_kernel=self.paged_kernel)
+            paged_kernel=self.paged_kernel, lin=self._lin)
         key, sub = jax.random.split(key)
         first = sample_tokens(self._for_sampling(last), sub, self.sampling)
 
@@ -494,7 +556,7 @@ class Engine:
             params, {"tokens": tokens, "pos": jnp.zeros((1,), jnp.int32),
                      "last": jnp.asarray([tokens.shape[1] - 1], jnp.int32),
                      "block_table": bt}, cache,
-            paged_kernel=self.paged_kernel)
+            paged_kernel=self.paged_kernel, lin=self._lin)
         return cache, pstate, pages, ok
 
     def _release_impl(self, cache, state, pstate, slots):

@@ -67,9 +67,15 @@ class TestSparseMatmul24:
         ws = jnp.where(mask, w, 0)
         assert ops.sparsity_check24(ws)
         vals, idx = ops.compact24(ws)
-        assert vals.shape == (256, 128) and idx.dtype == jnp.int8
+        # idx packs four 2-bit entries per byte: (K/8, N) uint8
+        assert vals.shape == (256, 128)
+        assert idx.shape == (64, 128) and idx.dtype == jnp.uint8
         np.testing.assert_allclose(
             np.asarray(ref.decompress24_ref(vals, idx, 512)), np.asarray(ws))
+        # compare-select decompression is BIT-exact (scatter oracle above,
+        # +0.0 zeros like the pruner's jnp.where)
+        assert np.array_equal(np.asarray(ops.decompress24(vals, idx)),
+                              np.asarray(ws))
 
     def test_equals_dense_matmul(self):
         """Compacted path == dense matmul on the sparse weights."""
@@ -80,6 +86,58 @@ class TestSparseMatmul24:
         x = _rand((32, 256), jnp.float32, 5)
         np.testing.assert_allclose(np.asarray(ops.sparse_matmul24(x, vals, idx)),
                                    np.asarray(x @ ws), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("M", [1, 5, 130])
+    def test_ragged_m(self, M):
+        """Decode batch widths need not divide block_m: pad/slice wrapper."""
+        w = _rand((128, 128), jnp.float32, 6)
+        mask = core_nm(jnp.abs(w.T), 2, 4).T
+        ws = jnp.where(mask, w, 0)
+        vals, idx = ops.compact24(ws)
+        x = _rand((M, 128), jnp.float32, 7)
+        np.testing.assert_allclose(np.asarray(ops.sparse_matmul24(x, vals, idx)),
+                                   np.asarray(x @ ws), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_returns_input_dtype(self, dtype):
+        """No silent f32 upcast of bf16 serve activations."""
+        w = _rand((128, 128), dtype, 8)
+        mask = core_nm(jnp.abs(w.astype(jnp.float32).T), 2, 4).T
+        vals, idx = ops.compact24(jnp.where(mask, w, 0))
+        y = ops.sparse_matmul24(_rand((8, 128), dtype, 9), vals, idx)
+        assert y.dtype == dtype
+
+    def test_fused_bias(self):
+        w = _rand((128, 256), jnp.float32, 10)
+        mask = core_nm(jnp.abs(w.T), 2, 4).T
+        ws = jnp.where(mask, w, 0)
+        vals, idx = ops.compact24(ws)
+        b = _rand((256,), jnp.float32, 11)
+        x = _rand((16, 128), jnp.float32, 12)
+        got = ops.sparse_matmul24(x, vals, idx, bias=b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ ws + b),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.sparse_matmul24_ref(x, vals, idx,
+                                                                bias=b)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_int8_weight_dequant(self):
+        """int8 vals dequantize in-kernel (w_qscale), like kv_qscale in
+        paged_attention: int8 quant stacks on top of the 2:4 compaction."""
+        rng = np.random.default_rng(13)
+        K, N, scale = 128, 128, 16.0
+        v8 = rng.integers(-127, 128, (K // 2, N)).astype(np.int8)
+        idx2 = np.stack([rng.permutation(4)[:2] for _ in range(K // 2 // 2 * N)]
+                        ).reshape(K // 4, N, 2).transpose(0, 2, 1)
+        idx2 = np.sort(idx2, axis=1).reshape(K // 2, N)
+        packed = ops._pack24_idx(jnp.asarray(idx2))
+        vals = jnp.asarray(v8)
+        x = _rand((8, K), jnp.float32, 14)
+        got = ops.sparse_matmul24(x, vals, packed, w_qscale=scale)
+        want = ref.sparse_matmul24_ref(x, vals, packed, w_qscale=scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestMaskedMatmul:

@@ -1,0 +1,271 @@
+"""Compressed 2:4 serving: pack/unpack properties + engine parity suite.
+
+Three layers of evidence that the compacted (vals + packed 2-bit idx)
+weight path can be THE serve path for 2:4-pruned checkpoints:
+
+  1. property roundtrips (via the optional-hypothesis shim): 2-bit
+     pack/unpack is lossless, ``compact24`` -> ``decompress24`` is
+     BIT-exact against the pruner's masked weights — including groups
+     holding more than two zeros (the survivors pin to the nonzero
+     positions first, then the remaining slots in position order), and
+     stacked (L, K, N) parameter trees;
+  2. backend-level: ``sparse24_lin`` / ``masked24_lin`` reproduce the
+     default ``linear`` epilogues (bias, LoRA) exactly;
+  3. end-to-end: greedy ``Engine`` decode is BIT-EXACT (token-for-token)
+     across compressed / masked / dense engines, for the one-wave path,
+     the Pallas-kernel path (interpret off-TPU), and a mixed-length
+     continuous-batching stream — plus the storage-accounting and
+     auto-detection contracts (random init never compresses; ``on``
+     without a 2:4 checkpoint raises).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.configs import get_config
+from repro.core.masks import nm_mask as core_nm
+from repro.core.pruner import tree_get, tree_set
+from repro.kernels import ops
+from repro.models.blocks import compress_params24, prunable_table
+from repro.models.layers import linear, masked24_lin, sparse24_lin
+from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.scheduler import Scheduler
+
+
+def _sparse24(seed, K, N, extra_zeros=0.0, dtype=jnp.float32):
+    """Random exact-2:4 weight; ``extra_zeros`` forces some groups to hold
+    more than two zeros (the pruner's mask keeps <= 2 survivors anyway)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    if extra_zeros:
+        w[rng.random((K, N)) < extra_zeros] = 0.0
+    m = core_nm(jnp.abs(jnp.asarray(w).T), 2, 4).T
+    return jnp.where(m, jnp.asarray(w).astype(dtype), 0)
+
+
+def _prune24(model, params):
+    """Magnitude-2:4 every prunable stacked (L, K, N) projection."""
+    blocks = params["blocks"]
+    for _, path in prunable_table(model.cfg).items():
+        if path[-1] != "w":
+            continue
+        w = tree_get(blocks, path)
+        if w is None or w.ndim != 3 or w.shape[-2] % 8:
+            continue
+        mask = jax.vmap(lambda wl: core_nm(jnp.abs(wl.T), 2, 4).T)(w)
+        blocks = tree_set(blocks, path, jnp.where(mask, w, 0))
+    return dict(params, blocks=blocks)
+
+
+@pytest.fixture(scope="module")
+def pruned():
+    cfg = get_config("llama1-7b").reduced()
+    model = Model(cfg)
+    params = _prune24(model, model.init(jax.random.PRNGKey(0)))
+    return model, params
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# 1: pack/unpack + compaction properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10 ** 6))
+def test_pack_unpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    idx2 = np.sort(np.stack(
+        [rng.permutation(4)[:2] for _ in range(16 * 32)]), axis=1)
+    idx2 = jnp.asarray(idx2.reshape(16, 32, 2).transpose(0, 2, 1)
+                       .reshape(32, 32), jnp.int32)
+    packed = ops._pack24_idx(idx2)
+    assert packed.shape == (8, 32) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(ops.unpack24_idx(packed)),
+                                  np.asarray(idx2))
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 0.8))
+def test_compact_decompress_bitexact(seed, extra_zeros):
+    ws = _sparse24(seed, 64, 32, extra_zeros=extra_zeros)
+    assert ops.sparsity_check24(ws)
+    vals, idx = ops.compact24(ws)
+    assert vals.shape == (32, 32) and idx.shape == (8, 32)
+    assert idx.dtype == jnp.uint8
+    # bit-exact: +0.0 zeros, same as the pruner's jnp.where(mask, w, 0)
+    assert np.array_equal(np.asarray(ops.decompress24(vals, idx)),
+                          np.asarray(ws))
+
+
+def test_compact_tiebreak_pins_nonzeros_first():
+    """A group with > 2 zeros keeps its nonzeros first, then pads with the
+    earliest zero positions — the layout contract the kernel decodes."""
+    col = np.zeros((8, 1), np.float32)
+    col[2, 0] = 5.0  # group 0: [0, 0, 5, 0]
+    col[4, 0], col[5, 0] = 3.0, 4.0  # group 1: [3, 4, 0, 0]
+    vals, idx = ops.compact24(jnp.asarray(col))
+    np.testing.assert_array_equal(np.asarray(vals)[:, 0], [5.0, 0.0, 3.0, 4.0])
+    np.testing.assert_array_equal(np.asarray(ops.unpack24_idx(idx))[:, 0],
+                                  [2, 0, 0, 1])
+
+
+@given(st.integers(0, 10 ** 6))
+def test_compact_stacked_leading_dims(seed):
+    """(L, K, N) stacks compact exactly like a per-layer loop."""
+    ws = jnp.stack([_sparse24(seed + i, 32, 16) for i in range(3)])
+    assert ops.sparsity_check24(ws)
+    vals, idx = ops.compact24(ws)
+    assert vals.shape == (3, 16, 16) and idx.shape == (3, 4, 16)
+    for i in range(3):
+        vi, ii = ops.compact24(ws[i])
+        np.testing.assert_array_equal(np.asarray(vals[i]), np.asarray(vi))
+        np.testing.assert_array_equal(np.asarray(idx[i]), np.asarray(ii))
+    assert np.array_equal(np.asarray(ops.decompress24(vals, idx)),
+                          np.asarray(ws))
+
+
+def test_sparsity_check_rejects_dense():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 16)),
+                    jnp.float32)
+    assert not ops.sparsity_check24(w)
+    assert not ops.sparsity_check24(w[:30])  # K % 4 != 0
+
+
+def test_compressed_ratio_constants():
+    assert ops.compressed24_ratio(4) == 0.53125  # f32 vals + 2-bit idx
+    assert ops.compressed24_ratio(2) == 0.5625   # bf16 vals + 2-bit idx
+
+
+# ---------------------------------------------------------------------------
+# 2: lin backends reproduce the default linear epilogues
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_lin_backends_match_linear(use_kernel):
+    rng = np.random.default_rng(3)
+    ws = _sparse24(3, 64, 32)
+    p = {"w": ws, "b": jnp.asarray(rng.normal(size=(32,)), jnp.float32),
+         "lora_a": jnp.asarray(rng.normal(size=(64, 4)), jnp.float32),
+         "lora_b": jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(2, 5, 64)), jnp.float32)
+    want = linear(p, x)
+
+    vals, idx = ops.compact24(ws)
+    pc = {k: v for k, v in p.items() if k != "w"}
+    pc.update(w24_vals=vals, w24_idx=idx)
+    got = sparse24_lin(use_kernel)("wq", pc, x)
+    tol = dict(rtol=1e-5, atol=1e-5) if use_kernel else dict(rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+    pm = dict(p, mask24=(ws != 0).astype(jnp.int8))
+    got_m = masked24_lin("wq", pm, x)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+    # no 2:4 leaves -> both backends fall through to the dense linear
+    np.testing.assert_array_equal(np.asarray(sparse24_lin(use_kernel)("wq", p, x)),
+                                  np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(masked24_lin("wq", p, x)),
+                                  np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# 3: engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _mk(model, params, mode, kernel=None, n_slots=4, chunk=5):
+    return Engine(model, params, EngineConfig(
+        n_slots=n_slots, max_len=32, chunk=chunk, prefill_buckets=(8,),
+        paged=True, page_size=8, compressed24=mode,
+        compressed24_kernel=kernel))
+
+
+def test_engine_generate_bitexact_modes(pruned):
+    model, params = pruned
+    B, P, G = 4, 8, 6
+    prompts = _prompts(model.cfg, B, P)
+    out = {m: _mk(model, params, m).generate(prompts, G)
+           for m in ("off", "auto", "on", "masked")}
+    np.testing.assert_array_equal(out["auto"], out["off"])
+    np.testing.assert_array_equal(out["on"], out["off"])
+    np.testing.assert_array_equal(out["masked"], out["off"])
+
+
+def test_engine_generate_bitexact_kernel_path(pruned):
+    """compressed24_kernel=True routes the big projections through the
+    Pallas sparse_matmul24 kernel (interpret off-TPU): same tokens."""
+    model, params = pruned
+    prompts = _prompts(model.cfg, 2, 8)
+    out_k = _mk(model, params, "on", kernel=True, n_slots=2,
+                chunk=3).generate(prompts, 4)
+    out_d = _mk(model, params, "off", n_slots=2, chunk=3).generate(prompts, 4)
+    np.testing.assert_array_equal(out_k, out_d)
+
+
+def test_engine_stream_bitexact_modes(pruned):
+    """Mixed-length continuous-batching stream (slot churn, ragged
+    positions): identical completions compressed vs masked vs dense."""
+    model, params = pruned
+    cfg = model.cfg
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 9))).astype(np.int32),
+                    int(rng.integers(1, 6)))
+            for rid in range(7)]
+    out = {}
+    for mode in ("off", "auto", "masked"):
+        comps = Scheduler(_mk(model, params, mode, chunk=4)).run(reqs)
+        out[mode] = {c.rid: list(c.tokens) for c in comps}
+    assert out["auto"] == out["off"]
+    assert out["masked"] == out["off"]
+
+
+def test_engine_compression_accounting(pruned):
+    """Every prunable projection compresses; packed bytes hit the ratio."""
+    model, params = pruned
+    eng = _mk(model, params, "auto")
+    n_prunable = sum(1 for _, path in prunable_table(model.cfg).items()
+                     if path[-1] == "w")
+    assert eng.compressed24 == n_prunable > 0
+    packed = dense = 0
+    for _, path in prunable_table(model.cfg).items():
+        if path[-1] != "w":
+            continue
+        p = tree_get(eng.params["blocks"], path[:-1])
+        assert "w24_vals" in p and p["w24_idx"].dtype == jnp.uint8
+        packed += p["w24_vals"].nbytes + p["w24_idx"].nbytes
+        dense += tree_get(params["blocks"], path).nbytes
+    assert packed / dense == ops.compressed24_ratio(4)
+
+
+def test_compress_params24_bitexact(pruned):
+    """The build-time dense rematerialisation is BIT-exact: compressing
+    then decompressing reproduces the pruned checkpoint leaf-for-leaf."""
+    model, params = pruned
+    out, n = compress_params24(model.cfg, params, keep_dense=True)
+    assert n > 0
+    for _, path in prunable_table(model.cfg).items():
+        if path[-1] != "w":
+            continue
+        assert np.array_equal(np.asarray(tree_get(out["blocks"], path)),
+                              np.asarray(tree_get(params["blocks"], path)))
+
+
+def test_auto_is_noop_on_dense_checkpoint():
+    """Random init never passes the 2:4 check: auto compresses nothing,
+    and 'on' (which demands a sparse checkpoint) raises."""
+    cfg = get_config("llama1-7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = _mk(model, params, "auto")
+    assert eng.compressed24 == 0 and eng._lin is None
+    with pytest.raises(ValueError, match="compressed24"):
+        _mk(model, params, "on")
+    with pytest.raises(ValueError, match="compressed24"):
+        _mk(model, params, "bogus")
