@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-kernels test-serve-families test-serve-mesh \
-	test-sparse-serve ci bench bench-serving serve
+	test-sparse-serve analyze ci bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -41,7 +41,14 @@ test-serve-mesh:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_serve_distributed.py
 
-ci: test-fast
+# static-analysis lane (pure CPU, no slow marker): jit-safety lint vs the
+# checked-in baseline, the sharding-contract matrix (device-free AxisMesh
+# geometries) + trace-count pins + bf16-upcast check, and the Pallas VMEM
+# budget verifier. Exits non-zero on any unsuppressed finding.
+analyze:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m repro.analysis
+
+ci: analyze test-fast
 
 bench:
 	$(PY) -m benchmarks.run

@@ -1,0 +1,24 @@
+"""Static-analysis subsystem: jit-safety lint, SPMD sharding contracts,
+and Pallas VMEM budget verification (``python -m repro.analysis``).
+
+Submodules (imported lazily by the CLI — ``common``/``jitlint`` are pure
+stdlib-AST, ``contracts``/``vmem`` pull in jax + the model zoo):
+
+* :mod:`repro.analysis.jitlint` — AST lint over ``src/repro`` (host syncs
+  in jitted regions, pallas_call interpret/compiler-params contracts,
+  jit-without-shardings in mesh-aware modules, f32 casts in bf16 paths)
+  with a checked-in suppression baseline (``baseline.txt``).
+* :mod:`repro.analysis.contracts` — device-free sharding-contract matrix
+  (every assigned arch x mesh geometries), runtime trace-count pins, and
+  the bf16-upcast StableHLO check.
+* :mod:`repro.analysis.vmem` — static per-kernel VMEM footprint model
+  checked against each kernel's declared ``vmem_limit_bytes``.
+"""
+from repro.analysis.common import (BaselineResult, Finding, apply_baseline,
+                                   load_baseline, render_findings,
+                                   render_report, sort_findings,
+                                   write_baseline)
+
+__all__ = ["BaselineResult", "Finding", "apply_baseline", "load_baseline",
+           "render_findings", "render_report", "sort_findings",
+           "write_baseline"]

@@ -1,0 +1,86 @@
+"""CLI driver: ``python -m repro.analysis`` (a.k.a. ``make analyze``).
+
+Runs the three passes and exits non-zero on any unsuppressed finding:
+
+* ``jitlint``  — AST lint, filtered through ``baseline.txt`` (stale
+  baseline entries also fail: fixed violations must leave the baseline).
+* ``contracts`` — sharding-contract matrix + bf16-upcast check +
+  (unless ``--no-trace``) the runtime trace-count pins. No baseline:
+  a contracts finding is a real bug.
+* ``vmem``     — per-kernel VMEM plans over every assigned arch's real
+  shapes. No baseline either.
+
+``--write-baseline`` regenerates ``baseline.txt`` from the current jitlint
+findings (review the diff — every entry is a suppressed decision).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.common import (apply_baseline, load_baseline,
+                                   render_findings, render_report,
+                                   write_baseline)
+
+PASSES = ("jitlint", "contracts", "vmem")
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jit-safety lint, sharding contracts, VMEM budgets")
+    ap.add_argument("--only", choices=PASSES, default=None,
+                    help="run a single pass")
+    ap.add_argument("--baseline", default=default_baseline_path(),
+                    help="jitlint suppression baseline path")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the runtime trace-contract cells (pure "
+                    "static run)")
+    args = ap.parse_args(argv)
+    passes = (args.only,) if args.only else PASSES
+    failed = False
+
+    if "jitlint" in passes:
+        from repro.analysis import jitlint
+        findings = jitlint.lint_tree()
+        if args.write_baseline:
+            write_baseline(
+                args.baseline, findings,
+                header=("jitlint suppression baseline — reviewed, "
+                        "intentional findings.\n"
+                        "One entry per (rule | path | scope | snippet); "
+                        "line numbers never enter the key.\n"
+                        "Regenerate with: python -m repro.analysis "
+                        "--only jitlint --write-baseline"))
+            print(f"wrote {len({f.key for f in findings})} baseline "
+                  f"entries to {args.baseline}")
+            return 0
+        res = apply_baseline(findings, load_baseline(args.baseline))
+        print(render_report("jitlint", res))
+        failed |= bool(res.unsuppressed or res.stale)
+
+    if "contracts" in passes:
+        from repro.analysis import contracts
+        findings = contracts.run_all(trace=not args.no_trace)
+        print(render_findings("contracts", findings))
+        failed |= bool(findings)
+
+    if "vmem" in passes:
+        from repro.analysis import vmem
+        findings = vmem.run_default()
+        print(render_findings("vmem", findings))
+        failed |= bool(findings)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

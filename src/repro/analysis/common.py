@@ -1,0 +1,135 @@
+"""Shared plumbing for the static-analysis passes: findings, baselines,
+and report rendering.
+
+A :class:`Finding` is one rule violation. Findings are suppressed either
+inline (a ``# lint: allow(<rule>)`` comment on the offending line — for
+code whose intent is best documented at the site, e.g. the engine's single
+documented host sync) or via the checked-in baseline file
+(``src/repro/analysis/baseline.txt``) for pre-existing, reviewed findings.
+
+Baseline entries are keyed by ``rule | relpath | scope | snippet`` — the
+enclosing function qualname plus the normalized source line — NOT by line
+number, so unrelated edits shifting code do not invalidate the baseline.
+One entry suppresses every finding with the same key (a repeated idiom in
+one function is one decision). Staleness is enforced both ways: an
+unsuppressed finding fails the run, and a baseline entry matching zero
+findings fails it too (so fixed violations must leave the baseline).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+REPO_SRC_HINT = "src"  # paths in reports are repo-relative when possible
+
+
+def _norm_snippet(text: str) -> str:
+    """Normalize a source line for baseline matching: collapse whitespace
+    (indentation changes and reflow must not invalidate entries)."""
+    return " ".join(text.split())
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str  # rule id, e.g. "host-sync"
+    path: str  # repo-relative posix path
+    line: int  # 1-indexed
+    scope: str  # enclosing function qualname ("<module>" at top level)
+    snippet: str  # offending source line (stripped)
+    message: str  # human explanation
+
+    @property
+    def key(self) -> str:
+        return " | ".join((self.rule, self.path, self.scope,
+                           _norm_snippet(self.snippet)))
+
+    def render(self) -> str:
+        return (f"{self.rule:<18} {self.path}:{self.line} "
+                f"[{self.scope}] {self.message}")
+
+
+def rel_path(path: str, root: Optional[str] = None) -> str:
+    """Repo-relative posix path for reports and baseline keys."""
+    path = os.path.abspath(path)
+    if root:
+        try:
+            path = os.path.relpath(path, root)
+        except ValueError:
+            pass
+    return path.replace(os.sep, "/")
+
+
+# ---------------------------------------------------------------------------
+# baseline file: "# comment" lines pass through; entries are finding keys
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.append(line)
+    return out
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   header: str = "") -> None:
+    keys = sorted({f.key for f in findings})
+    with open(path, "w") as f:
+        if header:
+            for ln in header.splitlines():
+                f.write(f"# {ln}\n".replace("#  ", "# "))
+        for k in keys:
+            f.write(k + "\n")
+
+
+@dataclass
+class BaselineResult:
+    unsuppressed: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    stale: List[str] = field(default_factory=list)  # entries matching nothing
+
+
+def apply_baseline(findings: Iterable[Finding],
+                   baseline: Sequence[str]) -> BaselineResult:
+    res = BaselineResult()
+    entries = set(baseline)
+    hit: Dict[str, int] = {e: 0 for e in entries}
+    for f in findings:
+        if f.key in entries:
+            hit[f.key] += 1
+            res.suppressed.append(f)
+        else:
+            res.unsuppressed.append(f)
+    res.stale = sorted(e for e, n in hit.items() if n == 0)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# report rendering (stable ordering — golden-comparable in tests)
+# ---------------------------------------------------------------------------
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+def render_report(title: str, res: BaselineResult) -> str:
+    lines = [f"== {title}: {len(res.unsuppressed)} finding(s), "
+             f"{len(res.suppressed)} baselined, {len(res.stale)} stale =="]
+    for f in sort_findings(res.unsuppressed):
+        lines.append("  " + f.render())
+    for e in res.stale:
+        lines.append(f"  stale-suppression  {e}  "
+                     "(baseline entry matches no finding — remove it)")
+    return "\n".join(lines)
+
+
+def render_findings(title: str, findings: Sequence[Finding]) -> str:
+    lines = [f"== {title}: {len(findings)} finding(s) =="]
+    for f in sort_findings(findings):
+        lines.append("  " + f.render())
+    return "\n".join(lines)

@@ -1,0 +1,497 @@
+"""Abstract-interpretation contracts for the serving stack.
+
+Three contract families, all reported as :class:`~repro.analysis.common.
+Finding`s (a finding here is a real bug, so unlike jitlint there is no
+baseline — the expected report is empty):
+
+**Sharding contracts** (static, device-free). The whole
+``distributed/sharding.py`` rule table is evaluated across the config
+matrix — every assigned architecture x a set of mesh geometries
+(:data:`GEOMETRIES`, via :class:`~repro.distributed.sharding.AxisMesh`
+stand-ins, so a 1-device CPU host checks 16-chip layouts) x param/serve
+state. Checked per leaf:
+
+* *divisibility*: a dim sharded over mesh axes of total size ``s`` has
+  ``dim % s == 0`` (``_spec_for`` guarantees this; the check catches any
+  path that bypasses it).
+* *head integrity* (the PR 5 bug class): a sharded dim whose logical name
+  is a head axis (``heads``/``kv_heads``/``ssm_heads``) must also divide
+  by the head COUNT — head-structured dims are flattened ``count*head_dim``
+  in the param shapes, so per-dim divisibility alone happily splits
+  mid-head (kv_heads=2, head_dim=16 on a 4-way model axis), which
+  miscompiles downstream. ``make_rules`` degrades these; re-introducing the
+  split (e.g. via overrides) must produce a finding.
+* *axis reuse*: no mesh axis appears twice in one PartitionSpec.
+* *golden pins*: a handful of known leaves (wq/wo/wg, embed, head) are
+  pinned to their exact expected specs on a reference geometry, so a
+  silently-dropped rule-table entry (everything degrades to replication —
+  "valid" but wrong) still fails.
+* *serve-state placement*: page arenas' page axis replicated, the page
+  free-list replicated, block-table rows and slot vectors over the data
+  axes exactly when ``n_slots`` divides them.
+
+**Trace contracts** (runtime, unmeshed, reduced configs). The engine's
+no-retrace / single-sync guarantee, pinned per serving cell in
+:data:`TRACE_CELLS` x :data:`EXPECTED_TRACES`: one prefill trace, one
+decode trace, one ``block_until_ready`` per generation, zero retraces on
+the second wave. tests/test_serve.py consumes these pins — this module is
+the single source of truth for the expected counts.
+
+**bf16 upcast contract** (static, lowered StableHLO). Lower the decode
+step of a bf16-parameterized model and scan the StableHLO for
+``convert`` ops taking a bf16 tensor of a *param-leaf shape* (ndim >= 2,
+i.e. a weight, not an activation) to f32 — an unintended upcast doubles
+decode weight traffic, the very thing 2:4 serving halves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.common import Finding
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.distributed import sharding as SHARD
+from repro.distributed.sharding import AxisMesh
+
+# ---------------------------------------------------------------------------
+# mesh geometries: evaluated with AxisMesh stand-ins (no devices needed)
+# ---------------------------------------------------------------------------
+
+GEOMETRIES: Dict[str, AxisMesh] = {
+    "tp2": AxisMesh(model=2),
+    "tp4": AxisMesh(model=4),
+    "dp2tp2": AxisMesh(data=2, model=2),
+    "dp4": AxisMesh(data=4),
+    "pod2dp2tp4": AxisMesh(pod=2, data=2, model=4),
+}
+
+# logical head axes -> the semantic unit count on the config. A sharded dim
+# carrying one of these must divide by the COUNT, not just the flattened
+# count*head_dim product ("inner" is excluded: its extra segments are
+# elementwise-safe at any boundary; its head hazard is gated on ssm_nheads
+# by make_rules and surfaces through "ssm_heads" leaves here).
+HEAD_COUNTS = {
+    "heads": lambda cfg: cfg.num_heads,
+    "kv_heads": lambda cfg: cfg.num_kv_heads,
+    "ssm_heads": lambda cfg: cfg.ssm_nheads,
+}
+
+
+def _mesh_size(mesh, entry) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _leaf_items(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(SHARD._path_str(path), leaf) for path, leaf in flat]
+
+
+def _zip_leaves(ref, *others) -> List[Tuple[str, Tuple[Any, ...]]]:
+    """Align companion trees (logical tuples, PartitionSpecs) to ``ref``'s
+    leaf positions — flatten_up_to returns sub-structures (a logical-axis
+    tuple, a registered-leaf PartitionSpec) whole at each ref leaf."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(ref)
+    cols = [treedef.flatten_up_to(t) for t in others]
+    return [(SHARD._path_str(p), (leaf,) + tuple(c[i] for c in cols))
+            for i, (p, leaf) in enumerate(flat)]
+
+
+def _spec_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _check_leaf_spec(findings: List[Finding], where: str, leaf_path: str,
+                     shape, logical, spec, mesh, cfg) -> None:
+    used: List[str] = []
+    for d, (dim, lg, entry) in enumerate(zip(shape, tuple(logical) + (None,)
+                                             * len(shape), tuple(spec)
+                                             + (None,) * len(shape))):
+        axes = _spec_axes(entry)
+        if not axes:
+            continue
+        size = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                findings.append(Finding(
+                    "shard-axis", where, 0, leaf_path,
+                    f"dim {d} -> {entry!r}",
+                    f"spec names mesh axis {a!r} not in {mesh.axis_names}"))
+                continue
+            size *= mesh.shape[a]
+        for a in axes:
+            if a in used:
+                findings.append(Finding(
+                    "shard-axis-reuse", where, 0, leaf_path,
+                    f"dim {d} -> {entry!r}",
+                    f"mesh axis {a!r} used twice in one PartitionSpec"))
+            used.append(a)
+        if dim % size != 0:
+            findings.append(Finding(
+                "shard-divisibility", where, 0, leaf_path,
+                f"dim {d}: {dim} over {entry!r}",
+                f"dim {dim} not divisible by mesh extent {size}"))
+        if lg in HEAD_COUNTS:
+            count = HEAD_COUNTS[lg](cfg) or 0
+            if count % size != 0:
+                findings.append(Finding(
+                    "mid-head-split", where, 0, leaf_path,
+                    f"dim {d} ({lg}={count}) split {size}-way",
+                    f"{lg} dim sharded {size}-way but the head count "
+                    f"{count} is not divisible — this splits mid-head "
+                    "(PR 5 bug class; make_rules must degrade it)"))
+
+
+# ---------------------------------------------------------------------------
+# param sharding contracts
+# ---------------------------------------------------------------------------
+
+def _param_shapes(cfg):
+    from repro.models.model import Model
+    model = Model(cfg)
+    return model, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def check_param_contracts(arch: str, geometry: str, kind: str = "decode",
+                          overrides: Optional[Dict] = None,
+                          cfg=None) -> List[Finding]:
+    """Evaluate the param rule table for one (arch, mesh geometry) cell."""
+    mesh = GEOMETRIES[geometry]
+    cfg = cfg if cfg is not None else get_config(arch).reduced()
+    _, shapes = _param_shapes(cfg)
+    where = f"contracts/params/{arch}@{geometry}/{kind}"
+    specs = SHARD.param_pspecs(mesh, cfg, shapes, kind, overrides)
+    logical = SHARD.logical_spec_tree(shapes)
+    findings: List[Finding] = []
+    for leaf_path, (leaf, lg, spec) in _zip_leaves(shapes, logical, specs):
+        _check_leaf_spec(findings, where, leaf_path, leaf.shape, lg, spec,
+                         mesh, cfg)
+    return findings
+
+
+# reference geometry golden pins: qwen3-8b reduced on dp2tp2 (divisible
+# everywhere), kind="decode". If the rule table silently drops an entry,
+# everything still *validates* (replication is always legal) — these pins
+# catch the silent degradation.
+_GOLDEN_PINS = {
+    # leaf-path regex -> expected PartitionSpec entries (stacked block
+    # leaves carry the leading replicated "layers" dim)
+    r"blocks/attn/wq/w$": (None, None, "model"),
+    r"blocks/attn/wo/w$": (None, "model", None),
+    r"blocks/mlp/wg/w$": (None, None, "model"),
+    r"blocks/mlp/wd/w$": (None, "model", None),
+    r"^embed$": ("model", None),
+    r"^head$": (None, "model"),
+}
+
+
+def check_golden_pins(arch: str = "qwen3-8b",
+                      geometry: str = "dp2tp2") -> List[Finding]:
+    mesh = GEOMETRIES[geometry]
+    cfg = get_config(arch).reduced()
+    _, shapes = _param_shapes(cfg)
+    where = f"contracts/golden/{arch}@{geometry}"
+    specs = SHARD.param_pspecs(mesh, cfg, shapes, "decode")
+    findings: List[Finding] = []
+    seen = set()
+    for leaf_path, (spec,) in _zip_leaves(specs):
+        for pat, want in _GOLDEN_PINS.items():
+            if re.search(pat, leaf_path):
+                seen.add(pat)
+                got = tuple(spec) + (None,) * (len(want) - len(tuple(spec)))
+                if tuple(got) != want:
+                    findings.append(Finding(
+                        "golden-pin", where, 0, leaf_path,
+                        f"{got!r}", f"expected spec {want!r} — a TP leaf "
+                        "silently degraded to the wrong placement"))
+    for pat in _GOLDEN_PINS:
+        if pat not in seen:
+            findings.append(Finding(
+                "golden-pin", where, 0, pat, "",
+                "pinned leaf not found in the param tree (path rules or "
+                "model layout changed — update the pin)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# serve-state placement contracts
+# ---------------------------------------------------------------------------
+
+def check_serve_contracts(arch: str, geometry: str, n_slots: int = 8,
+                          paged: bool = True) -> List[Finding]:
+    from repro.serve import paging
+
+    mesh = GEOMETRIES[geometry]
+    cfg = get_config(arch).reduced()
+    from repro.models.model import Model
+    model = Model(cfg)
+    spec = model.cache_spec
+    where = f"contracts/serve/{arch}@{geometry}/" \
+            f"{'paged' if paged else 'pool'}"
+    findings: List[Finding] = []
+    if not spec.groups:
+        return findings  # encoder-only: no decode state to place
+    paged = paged and spec.has_kv
+    if paged:
+        cache = jax.eval_shape(lambda: spec.init_paged(n_slots * 4, 16,
+                                                       n_slots))
+        pstate = jax.eval_shape(
+            lambda: paging.init_pages(n_slots * 4, n_slots, 4))
+    else:
+        cache = jax.eval_shape(lambda: spec.init_dense(n_slots, 32))
+        pstate = None
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        sh = SHARD.serve_state_pspecs(mesh, cfg, spec, cache, pstate,
+                                      n_slots, paged)
+    logical = spec.cache_logical(paged)
+    for leaf_path, (leaf, lg, ps) in _zip_leaves(cache, logical,
+                                                 sh["cache"]):
+        _check_leaf_spec(findings, where, leaf_path, leaf.shape, lg, ps,
+                         mesh, cfg)
+        # the page axis must stay replicated: any slot's block table may
+        # reference any page
+        for d, name in enumerate(lg):
+            if name == "pages" and tuple(ps)[d:d + 1] not in ((None,), ()):
+                findings.append(Finding(
+                    "serve-placement", where, 0, leaf_path,
+                    f"pages dim -> {tuple(ps)[d]!r}",
+                    "page arena's page axis must be replicated"))
+    dp = SHARD.mesh_dp_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    slots_divisible = dsize > 1 and n_slots % dsize == 0
+    slot_axes = _spec_axes(tuple(sh["slots"])[0] if tuple(sh["slots"])
+                           else None)
+    if slots_divisible and not slot_axes:
+        findings.append(Finding(
+            "serve-placement", where, 0, "slots", f"{sh['slots']!r}",
+            f"n_slots={n_slots} divides the data axes {dp} (size {dsize}) "
+            "but the slot vector is not sharded over them"))
+    if not slots_divisible and slot_axes:
+        findings.append(Finding(
+            "serve-placement", where, 0, "slots", f"{sh['slots']!r}",
+            f"slot vector sharded but n_slots={n_slots} does not divide "
+            f"the data axes {dp}"))
+    if sh["pstate"] is not None:
+        if tuple(sh["pstate"].ref) != ():
+            findings.append(Finding(
+                "serve-placement", where, 0, "pstate.ref",
+                f"{sh['pstate'].ref!r}",
+                "the page free-list must be fully replicated"))
+        bt = tuple(sh["pstate"].block_tables)
+        bt_row = _spec_axes(bt[0] if bt else None)
+        if slots_divisible and not bt_row:
+            findings.append(Finding(
+                "serve-placement", where, 0, "pstate.block_tables",
+                f"{bt!r}", "block-table rows must shard with their slots"))
+    if tuple(sh["repl"]) != ():
+        findings.append(Finding(
+            "serve-placement", where, 0, "repl", f"{sh['repl']!r}",
+            "wave inputs / PRNG key sharding must be fully replicated"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# static sweep driver
+# ---------------------------------------------------------------------------
+
+def run_static(archs: Optional[Sequence[str]] = None,
+               geometries: Optional[Sequence[str]] = None) -> List[Finding]:
+    archs = list(archs) if archs is not None else list(ASSIGNED_ARCHS)
+    geometries = list(geometries) if geometries is not None \
+        else list(GEOMETRIES)
+    findings: List[Finding] = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for geo in geometries:
+            findings.extend(check_param_contracts(arch, geo))
+            if not cfg.is_encoder_only:
+                findings.extend(check_serve_contracts(arch, geo))
+    findings.extend(check_golden_pins())
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# runtime trace contracts (unmeshed, reduced configs) — the single source
+# of truth for the engine's no-retrace / single-sync pins
+# ---------------------------------------------------------------------------
+
+# cell -> (arch, engine knobs, prune-first). "auto" on unpruned params is
+# pinned as an exact no-op (trace counts identical to "off").
+TRACE_CELLS: Dict[str, Dict[str, Any]] = {
+    "dense-paged": dict(arch="qwen3-8b", prune=False,
+                        engine=dict(paged=True, compressed24="off")),
+    "dense-pool": dict(arch="qwen3-8b", prune=False,
+                       engine=dict(paged=False, compressed24="off")),
+    "compressed24": dict(arch="qwen3-8b", prune=True,
+                         engine=dict(paged=True, compressed24="on")),
+    "masked24": dict(arch="qwen3-8b", prune=True,
+                     engine=dict(paged=True, compressed24="masked")),
+}
+
+# one prefill trace, ONE decode program for the whole generation, exactly
+# one device sync per chunk (the workload runs one chunk), zero retraces
+# on a second identical wave
+EXPECTED_TRACES: Dict[str, Dict[str, int]] = {
+    name: {"prefill": 1, "decode": 1, "syncs": 1, "retraces": 0}
+    for name in TRACE_CELLS
+}
+
+
+def magnitude_prune24(cfg, params):
+    """Exact magnitude 2:4 pruning of every prunable projection (top-2 |w|
+    per group of 4 along the input axis, index tie-break) — the cheap way
+    to make ``sparsity_check24`` pass for the compressed-serving trace
+    cells without running the full Wanda++ pipeline."""
+    from repro.models.blocks import _tget, _tset, prunable_table
+
+    def prune_leaf(w):
+        if w.ndim < 2 or w.shape[-2] % 4:
+            return w
+        shape = w.shape
+        g = np.abs(np.asarray(w)).reshape(
+            shape[:-2] + (shape[-2] // 4, 4, shape[-1]))
+        s_i = g[..., :, None, :]
+        s_j = g[..., None, :, :]
+        idx = np.arange(4)[:, None, None]
+        jdx = np.arange(4)[None, :, None]
+        rank = ((s_j > s_i) | ((s_j == s_i) & (jdx < idx))).sum(axis=-2)
+        keep = (rank < 2).reshape(shape)
+        return (np.asarray(w) * keep).astype(w.dtype)
+
+    blocks = params["blocks"]
+    for _, path in prunable_table(cfg).items():
+        if path[-1] != "w":
+            continue
+        w = _tget(blocks, path)
+        if w is None:
+            continue
+        blocks = _tset(blocks, path, jnp.asarray(prune_leaf(w)))
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def run_trace_cell(name: str) -> Tuple[Dict[str, int], List[Finding]]:
+    """Run one serving cell's workload; return (measured, findings)."""
+    from repro.models.model import Model
+    from repro.serve import Engine, EngineConfig
+
+    cell = TRACE_CELLS[name]
+    cfg = get_config(cell["arch"]).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if cell["prune"]:
+        params = magnitude_prune24(cfg, params)
+    B, P, G = 2, 8, 6
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (B, P), 0, cfg.vocab_size), np.int32)
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
+                              prefill_buckets=(P,), **cell["engine"]))
+    blocks = {"n": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        blocks["n"] += 1
+        return real(x)
+
+    jax.block_until_ready = counting
+    try:
+        eng.generate(prompts, G)
+        first = dict(eng.trace_counts)
+        syncs = blocks["n"]
+        eng.generate(prompts, G)
+    finally:
+        jax.block_until_ready = real
+    measured = {"prefill": first["prefill"], "decode": first["decode"],
+                "syncs": syncs,
+                "retraces": eng.trace_counts["decode"] - first["decode"]}
+    where = f"contracts/trace/{name}"
+    findings = []
+    for k, want in EXPECTED_TRACES[name].items():
+        if measured[k] != want:
+            findings.append(Finding(
+                "trace-pin", where, 0, k,
+                f"{k}={measured[k]}",
+                f"expected {k}={want}, measured {measured[k]} (the engine "
+                "retraced or added a device sync on the hot path)"))
+    if cell["prune"] and name == "compressed24" and eng.compressed24 == 0:
+        findings.append(Finding(
+            "trace-pin", where, 0, "compressed24", "0",
+            "compressed24 cell served zero packed projections"))
+    return measured, findings
+
+
+def check_trace_contracts(
+        cells: Optional[Iterable[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in (cells if cells is not None else TRACE_CELLS):
+        findings.extend(run_trace_cell(name)[1])
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# bf16 upcast contract (lowered StableHLO)
+# ---------------------------------------------------------------------------
+
+_CONVERT_RE = re.compile(
+    r"stablehlo\.convert\s+%[\w.#]+\s*:\s*\(tensor<([0-9x]+)xbf16>\)"
+    r"\s*->\s*tensor<\1xf32>")
+
+# weight shapes with a reviewed f32 upcast in the decode graph (none today)
+UPCAST_ALLOWLIST: set = set()
+
+
+def check_bf16_upcasts(arch: str = "qwen3-8b") -> List[Finding]:
+    """Lower a bf16-param decode step; flag f32 converts of weight-shaped
+    bf16 tensors (ndim >= 2 param leaves). 1-D leaves (norm scales, biases)
+    are exempt: their f32 numerics are intentional and O(d) not O(d^2)."""
+    from repro.models.model import Model
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, param_dtype=jnp.bfloat16)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    weight_shapes = set()
+    for leaf_path, (leaf,) in _zip_leaves(shapes):
+        if len(leaf.shape) >= 2 and leaf.dtype == jnp.bfloat16:
+            weight_shapes.add("x".join(str(d) for d in leaf.shape))
+    B = 2
+    cache = jax.eval_shape(lambda: model.init_cache(B, 16))
+    inputs = {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    hlo = jax.jit(model.decode_step).lower(shapes, inputs, cache).as_text()
+    where = f"contracts/bf16/{arch}"
+    findings: List[Finding] = []
+    flagged = set()
+    for m in _CONVERT_RE.finditer(hlo):
+        shape = m.group(1)
+        if shape in weight_shapes and shape not in UPCAST_ALLOWLIST \
+                and shape not in flagged:
+            flagged.add(shape)
+            findings.append(Finding(
+                "bf16-upcast", where, 0, f"tensor<{shape}>",
+                m.group(0)[:80],
+                f"bf16 param leaf of shape {shape} upcast to f32 in the "
+                "lowered decode step — doubles decode weight traffic"))
+    return findings
+
+
+def run_all(trace: bool = True) -> List[Finding]:
+    findings = run_static()
+    findings.extend(check_bf16_upcasts())
+    if trace:
+        findings.extend(check_trace_contracts())
+    return findings

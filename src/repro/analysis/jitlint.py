@@ -1,0 +1,440 @@
+"""AST jit-safety lint over ``src/repro``.
+
+Repo-specific rules, each a mechanically-detectable bug class this codebase
+has actually shipped (or nearly shipped):
+
+``host-sync``
+    Host synchronization constructs — ``.item()``, ``int()``/``float()``/
+    ``bool()`` on non-static values, ``np.asarray``/``np.array``,
+    ``jax.device_get``, ``block_until_ready`` — inside *jitted-region*
+    code (functions passed to ``jax.jit``/``self._jit``/``lax.scan``/
+    ``pl.pallas_call``/grad transforms, their nested functions, and
+    decorated jits). Inside a trace these either fail or silently force a
+    device round-trip per call. The rule also covers the whole body of the
+    declared hot-path modules (``HOT_PATH_MODULES``): the serve engine's
+    host-side driver ops sit on the per-chunk critical path, so every sync
+    there is a reviewed decision — intentional ones (the once-per-chunk
+    harvest, the host free-page mirror) live in the baseline or carry an
+    inline ``# lint: allow(host-sync)``.
+
+``pallas-interpret``
+    ``pl.pallas_call`` sites whose ``interpret`` handling deviates from the
+    repo contract: the enclosing wrapper must take ``interpret=None`` and
+    resolve it via ``ops._interpret_default``, and the call site must pass
+    that resolved local — never a hard-coded constant. (PR 6 bug class: a
+    hard ``interpret=True`` default would run the Python interpreter on
+    real TPUs.)
+
+``pallas-params``
+    ``pl.pallas_call`` sites missing ``compiler_params`` with explicit
+    ``dimension_semantics`` and ``vmem_limit_bytes`` — without them Mosaic
+    guesses the grid semantics and the VMEM budget verifier has no
+    declared limit to check against.
+
+``jit-shardings``
+    ``jax.jit`` calls in mesh-aware modules (any module importing
+    ``jax.sharding`` or ``repro.distributed``) without explicit
+    ``in_shardings``/``out_shardings`` — unsharded programs silently
+    migrate sharded state through one device (PR 5 bug class).
+
+``f32-cast``
+    Bare f32 casts/dtypes (``.astype(jnp.float32)``, ``dtype=jnp.float32``)
+    in the bf16 model-compute modules (``BF16_COMPUTE_MODULES``). An
+    unintended upcast doubles weight/activation traffic on the decode hot
+    path — exactly what 2:4 serving exists to halve. Intentional f32
+    numerics (softmax stats, norms, SSD state) are baselined;
+    ``preferred_element_type=jnp.float32`` (MXU accumulation) is always
+    allowed. Pallas kernel modules are exempt: f32 VMEM accumulators are
+    their documented contract.
+
+Suppression: inline ``# lint: allow(rule[, rule])`` on the offending line,
+or a baseline entry (see common.py).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.common import Finding, rel_path
+
+RULES = ("host-sync", "pallas-interpret", "pallas-params", "jit-shardings",
+         "f32-cast")
+
+# module-wide host-sync scanning (repo-relative, posix)
+HOT_PATH_MODULES = {
+    "repro/serve/engine.py",
+}
+
+# f32-cast rule scope: the bf16 model-compute path
+BF16_COMPUTE_MODULES = {
+    "repro/models/layers.py",
+    "repro/models/blocks.py",
+    "repro/models/model.py",
+    "repro/models/mamba2.py",
+    "repro/models/moe.py",
+    "repro/models/flash.py",
+}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([^)]*)\)")
+# opt a module into the path-scoped rule sets regardless of its location:
+#   # lint: module(hot-path, bf16-compute, mesh-aware)
+# (used by test fixtures; real modules are classified by relpath/imports)
+_MODULE_RE = re.compile(r"#\s*lint:\s*module\(([^)]*)\)")
+
+# call heads whose first function-valued argument becomes device code
+_JIT_ENTRY_ATTRS = {"jit", "_jit", "pallas_call", "scan", "checkpoint",
+                    "remat", "grad", "value_and_grad", "vmap", "custom_vjp"}
+
+_SYNC_WRAPPERS = {"int", "float", "bool"}
+_NP_SYNC_ATTRS = {"asarray", "array"}
+
+
+def src_root() -> str:
+    """The ``src/`` directory this package lives under."""
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _inline_allows(source: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _is_static_arg(node: ast.AST) -> bool:
+    """True when ``int()``/``float()``/``bool()`` over this expression is
+    host-static (shape math, lengths, constants) rather than a device sync."""
+    if isinstance(node, ast.Constant):
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in ("shape", "ndim",
+                                                           "size", "itemsize"):
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id in ("len", "range"):
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.numpy.float32' style dotted name for Attribute/Name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_f32_dtype(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d.endswith("float32") or (isinstance(node, ast.Constant)
+                                     and node.value == "float32")
+
+
+class _ModuleLint:
+    def __init__(self, path: str, relpath: str, tree: ast.Module,
+                 source: str):
+        self.relpath = relpath
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.allows = _inline_allows(source)
+        tags = set()
+        for m in _MODULE_RE.finditer(source):
+            tags |= {t.strip() for t in m.group(1).split(",")}
+        self.hot_path = relpath in HOT_PATH_MODULES or "hot-path" in tags
+        self.bf16 = relpath in BF16_COMPUTE_MODULES or "bf16-compute" in tags
+        self.mesh_aware = self._detect_mesh_aware(tree) or "mesh-aware" in tags
+        self.findings: List[Finding] = []
+        # qualname bookkeeping + jitted-region marking
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self._defs_by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._defs_by_name.setdefault(node.name, []).append(node)
+        self.jitted: Set[ast.AST] = set()
+        self._mark_jitted()
+
+    # -- classification --------------------------------------------------
+    @staticmethod
+    def _detect_mesh_aware(tree: ast.Module) -> bool:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module and (
+                    node.module.startswith("jax.sharding")
+                    or node.module.startswith("repro.distributed")):
+                return True
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("jax.sharding") \
+                            or a.name.startswith("repro.distributed"):
+                        return True
+        return False
+
+    # -- jitted-region marking -------------------------------------------
+    def _func_targets(self, node: ast.AST) -> List[ast.AST]:
+        """Function nodes a jit-entry argument resolves to: a direct
+        lambda/def name, a ``self.method`` reference, or the target of a
+        ``functools.partial`` wrapper."""
+        if isinstance(node, ast.Lambda):
+            return [node]
+        name = None
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr  # self._decode_impl -> "_decode_impl"
+        elif isinstance(node, ast.Call):
+            head = _dotted(node.func)
+            if head.endswith("partial") and node.args:
+                return self._func_targets(node.args[0])
+        if name is not None:
+            return list(self._defs_by_name.get(name, []))
+        return []
+
+    def _mark_jitted(self) -> None:
+        # 1) call-site targets: jax.jit(fn), self._jit(fn), lax.scan(fn),
+        #    pl.pallas_call(kernel), grad/vmap/checkpoint transforms
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            head = _dotted(node.func).rsplit(".", 1)[-1]
+            if head in _JIT_ENTRY_ATTRS and node.args:
+                for fn in self._func_targets(node.args[0]):
+                    self.jitted.add(fn)
+        # 2) decorated jits
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = ast.unparse(dec)
+                    if "jit" in d.split("(")[0].rsplit(".", 1)[-1] \
+                            or "jax.jit" in d:
+                        self.jitted.add(node)
+        # 3) transitive closure: nested defs of a jitted function trace too
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(self.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef, ast.Lambda)):
+                    continue
+                if node in self.jitted:
+                    continue
+                if self._enclosing_function(node) in self.jitted:
+                    self.jitted.add(node)
+                    changed = True
+
+    def _enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self._parents.get(cur)
+        return None
+
+    def _qualname(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                parts.append(cur.name)
+            elif isinstance(cur, ast.Lambda):
+                parts.append("<lambda>")
+            elif isinstance(cur, ast.ClassDef):
+                parts.append(cur.name)
+            cur = self._parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def _in_jitted_region(self, node: ast.AST) -> bool:
+        fn = self._enclosing_function(node)
+        return fn is not None and fn in self.jitted
+
+    # -- emission ---------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if rule in self.allows.get(line, ()):
+            return
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        scope = self._qualname(self._enclosing_function(node) or node)
+        self.findings.append(Finding(rule, self.relpath, line, scope,
+                                     snippet, message))
+
+    # -- rules ------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_host_sync(node)
+                self._check_pallas_call(node)
+                self._check_jit_shardings(node)
+                if self.bf16:
+                    self._check_f32(node)
+        return self.findings
+
+    def _check_host_sync(self, node: ast.Call) -> None:
+        in_scope = self._in_jitted_region(node) or self.hot_path
+        if not in_scope:
+            return
+        where = "in jitted region" if self._in_jitted_region(node) \
+            else "on the serve hot path"
+        head = _dotted(node.func)
+        tail = head.rsplit(".", 1)[-1]
+        if tail == "item" and isinstance(node.func, ast.Attribute):
+            self._emit("host-sync", node, f".item() {where} forces a "
+                       "device round-trip")
+        elif head in ("jax.device_get", "jax.block_until_ready") \
+                or tail == "block_until_ready":
+            self._emit("host-sync", node,
+                       f"{tail}() {where} blocks on the device")
+        elif isinstance(node.func, ast.Name) \
+                and node.func.id in _SYNC_WRAPPERS and node.args \
+                and not _is_static_arg(node.args[0]):
+            self._emit("host-sync", node,
+                       f"{node.func.id}() on a (possibly device) value "
+                       f"{where} is a blocking transfer")
+        elif isinstance(node.func, ast.Attribute) \
+                and tail in _NP_SYNC_ATTRS \
+                and _dotted(node.func.value) in ("np", "numpy"):
+            self._emit("host-sync", node,
+                       f"np.{tail}() {where} materializes on host")
+
+    def _check_pallas_call(self, node: ast.Call) -> None:
+        if _dotted(node.func).rsplit(".", 1)[-1] != "pallas_call":
+            return
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        # interpret contract
+        interp = kw.get("interpret")
+        if interp is None:
+            self._emit("pallas-interpret", node,
+                       "pallas_call without interpret= (must pass the "
+                       "resolved interpret local)")
+        elif isinstance(interp, ast.Constant):
+            self._emit("pallas-interpret", node,
+                       f"pallas_call with hard-coded interpret="
+                       f"{interp.value!r} (PR 6 bug class: must resolve "
+                       "via ops._interpret_default)")
+        else:
+            fn = self._enclosing_function(node)
+            ok_default = False
+            ok_resolve = False
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = fn.args
+                names = [a.arg for a in args.args + args.kwonlyargs]
+                defaults = dict(zip(
+                    [a.arg for a in args.args][len(args.args)
+                                               - len(args.defaults):],
+                    args.defaults))
+                defaults.update({a.arg: d for a, d in
+                                 zip(args.kwonlyargs, args.kw_defaults)
+                                 if d is not None})
+                if "interpret" in names:
+                    d = defaults.get("interpret")
+                    if isinstance(d, ast.Constant) and d.value is None:
+                        ok_default = True
+                    elif isinstance(d, ast.Constant):
+                        self._emit(
+                            "pallas-interpret", fn,
+                            f"interpret defaults to {d.value!r} — a hard "
+                            "default runs the wrong engine on TPU/CPU; "
+                            "use None + ops._interpret_default")
+                        ok_default = True  # already reported, don't double
+                for sub in ast.walk(fn):
+                    if isinstance(sub, (ast.Name, ast.Attribute)) \
+                            and _dotted(sub).endswith("_interpret_default"):
+                        ok_resolve = True
+            if not (ok_default and ok_resolve):
+                self._emit("pallas-interpret", node,
+                           "pallas_call wrapper must take interpret=None "
+                           "and resolve it via ops._interpret_default")
+        # compiler params contract
+        cp = kw.get("compiler_params")
+        if cp is None:
+            self._emit("pallas-params", node,
+                       "pallas_call without compiler_params "
+                       "(dimension_semantics + vmem_limit_bytes)")
+            return
+        if isinstance(cp, ast.Name):
+            # shared params built once in the wrapper: resolve the local
+            fn = self._enclosing_function(node)
+            for sub in ast.walk(fn if fn is not None else self.tree):
+                if isinstance(sub, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == cp.id
+                        for t in sub.targets):
+                    cp = sub.value
+                    break
+        cp_src = ast.unparse(cp)
+        if "dimension_semantics" not in cp_src:
+            self._emit("pallas-params", node,
+                       "compiler_params missing dimension_semantics")
+        if "vmem_limit_bytes" not in cp_src:
+            self._emit("pallas-params", node,
+                       "compiler_params missing vmem_limit_bytes")
+
+    def _check_jit_shardings(self, node: ast.Call) -> None:
+        if not self.mesh_aware:
+            return
+        head = _dotted(node.func)
+        if head not in ("jax.jit", "jit") and not head.endswith("._jit"):
+            return
+        kws = {k.arg for k in node.keywords if k.arg}
+        if head.endswith("._jit"):
+            return  # engine's own wrapper: it injects the shardings
+        if not ({"in_shardings", "out_shardings"} & kws):
+            self._emit("jit-shardings", node,
+                       "jax.jit in a mesh-aware module without explicit "
+                       "in_shardings/out_shardings (state may silently "
+                       "migrate through one device)")
+
+    def _check_f32(self, node: ast.Call) -> None:
+        head = _dotted(node.func)
+        tail = head.rsplit(".", 1)[-1]
+        if tail == "astype" and node.args and _is_f32_dtype(node.args[0]):
+            self._emit("f32-cast", node,
+                       "astype(float32) in a bf16 compute path")
+            return
+        for k in node.keywords:
+            if k.arg == "dtype" and _is_f32_dtype(k.value):
+                self._emit("f32-cast", node,
+                           "dtype=float32 in a bf16 compute path")
+                return
+        # positional dtype args to jnp constructors (jnp.zeros(s, jnp.float32))
+        if head.startswith(("jnp.", "jax.numpy.")):
+            for a in node.args:
+                if isinstance(a, (ast.Attribute, ast.Name)) \
+                        and _is_f32_dtype(a):
+                    self._emit("f32-cast", node,
+                               "f32 dtype literal in a bf16 compute path")
+                    return
+
+
+def lint_file(path: str, relpath: Optional[str] = None) -> List[Finding]:
+    with open(path) as f:
+        source = f.read()
+    rel = relpath if relpath is not None else rel_path(path, src_root())
+    tree = ast.parse(source, filename=path)
+    return _ModuleLint(path, rel, tree, source).run()
+
+
+def lint_tree(root: Optional[str] = None,
+              paths: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every module under ``src/repro`` (or explicit ``paths``)."""
+    base = src_root()
+    if paths is None:
+        pkg = os.path.join(base, "repro") if root is None else root
+        paths = []
+        for dirpath, _, names in os.walk(pkg):
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    paths.append(os.path.join(dirpath, n))
+    out: List[Finding] = []
+    for p in sorted(paths):
+        out.extend(lint_file(p))
+    return out

@@ -1,0 +1,186 @@
+"""Static VMEM budget verification for the four Pallas kernels.
+
+Instantiates each kernel module's ``vmem_plan`` hook (kernels/budget.py)
+over every assigned architecture's REAL deployment dimensions — the
+projection shapes the pruner/serving path actually runs the kernels on,
+derived from the same ``prunable_table`` walk the 2:4 machinery uses — and
+checks the implied working set against the declared ``vmem_limit_bytes``
+plus each kernel's block-divisibility constraints.
+
+Two lanes:
+
+* :func:`run_default` (the ``make analyze`` lane): block shapes are first
+  *resolved* per dimension — the largest feasible divisor not above the
+  kernel's default block (matching what a caller tuning that shape would
+  pick) — so the lane verifies that every real shape HAS a feasible
+  tiling, and fails if none exists or the resolved plan still blows the
+  declared limit.
+* :func:`sweep` (``launch/dryrun.py --check-vmem``): takes block shapes
+  as-given and reports every infeasible (shape x block) cell, so a sweep
+  grid can be vetted before burning TPU time on configurations Mosaic
+  would reject.
+
+All pure arithmetic — no tracing, no devices; safe in the CPU CI lane.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.common import Finding
+from repro.configs import ASSIGNED_ARCHS, get_config
+# the repro.kernels package namespace re-exports the jitted wrappers under
+# the same names as their modules, and `import pkg.mod as x` binds through
+# that shadowed attribute — resolve the MODULES via importlib instead
+import importlib
+
+masked_matmul = importlib.import_module("repro.kernels.masked_matmul")
+nm_mask = importlib.import_module("repro.kernels.nm_mask")
+paged_attention = importlib.import_module("repro.kernels.paged_attention")
+sparse_matmul24 = importlib.import_module("repro.kernels.sparse_matmul24")
+from repro.kernels.budget import KernelVmemPlan
+
+# decode wave width used for the matmul M dim in the default lane (the
+# serve engine's per-chunk batch; prefill M is covered by the sweep lane)
+DEFAULT_DECODE_M = 8
+DEFAULT_PAGE_SIZE = 16
+DEFAULT_MAX_BLOCKS = 8
+
+
+def resolve_block(dim: int, default: int, multiple: int = 1) -> Optional[int]:
+    """Largest b <= default with dim % b == 0 and b % multiple == 0 — the
+    block a caller tuning this shape would pick. None when no such b."""
+    for b in range(min(default, dim), 0, -1):
+        if dim % b == 0 and b % multiple == 0:
+            return b
+    return None
+
+
+def projection_shapes(cfg) -> List[Tuple[str, Tuple[int, int]]]:
+    """Distinct (tap, (K, N)) 2-D projection shapes of one arch — the
+    matrices the nm_mask / masked_matmul / sparse_matmul24 kernels run on.
+    Derived from the param tree via the same ``prunable_table`` walk the
+    2:4 serving transform uses, so the two can't disagree about coverage."""
+    from repro.models.blocks import _tget, prunable_table
+    from repro.models.model import Model
+
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    out: List[Tuple[str, Tuple[int, int]]] = []
+    seen = set()
+
+    def walk(tree, table):
+        if tree is None:
+            return
+        for tap, path in table.items():
+            if path[-1] != "w":
+                continue  # expert stacks: no serve kernel
+            w = _tget(tree, path)
+            if w is None or len(w.shape) < 2:
+                continue
+            kn = (int(w.shape[-2]), int(w.shape[-1]))
+            if kn not in seen:
+                seen.add(kn)
+                out.append((tap, kn))
+
+    walk(shapes.get("blocks"), prunable_table(cfg))
+    if cfg.family == "hybrid" and "shared_attn" in shapes:
+        from repro.models.blocks import PRUNABLE
+        walk(shapes["shared_attn"], PRUNABLE["hybrid_shared"])
+    return out
+
+
+def kernel_plans(arch: str, cfg=None) -> List[KernelVmemPlan]:
+    """Default-lane plans for one arch: every kernel x every real shape it
+    serves, with per-dimension block resolution."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    plans: List[KernelVmemPlan] = []
+    projs = projection_shapes(cfg)
+    M = DEFAULT_DECODE_M
+    for tap, (K, N) in projs:
+        # nm_mask scores (d_out, d_in) = (N, K) weight-major layout
+        bo = resolve_block(N, 256)
+        bi = resolve_block(K, 512, multiple=4)
+        p = nm_mask.vmem_plan(N, K, block_out=bo or 256, block_in=bi or 512)
+        p.config["tap"] = tap
+        if bo is None or bi is None:
+            p.violations.append(
+                f"no feasible (block_out, block_in) tiling for ({N}, {K})")
+        plans.append(p)
+        bn = resolve_block(N, 128)
+        bk = resolve_block(K, 512)
+        p = masked_matmul.vmem_plan(M, K, N, block_n=bn or 128,
+                                    block_k=bk or 512)
+        p.config["tap"] = tap
+        if bn is None or bk is None:
+            p.violations.append(
+                f"no feasible (block_n, block_k) tiling for K={K} N={N}")
+        plans.append(p)
+        if K % 8 == 0:  # 2:4-compactable shapes only
+            bk8 = resolve_block(K, 512, multiple=8)
+            p = sparse_matmul24.vmem_plan(M, K, N, block_n=bn or 128,
+                                          block_k=bk8 or 512)
+            p.config["tap"] = tap
+            if bn is None or bk8 is None:
+                p.violations.append(
+                    f"no feasible 2:4 tiling for K={K} N={N}")
+            plans.append(p)
+    if cfg.num_kv_heads > 0 and not cfg.is_encoder_only:
+        hd = cfg.resolved_head_dim
+        KV = cfg.num_kv_heads
+        G = max(cfg.num_heads // max(KV, 1), 1)
+        plans.append(paged_attention.vmem_plan(
+            DEFAULT_DECODE_M, KV, G, hd, page_size=DEFAULT_PAGE_SIZE,
+            max_blocks=DEFAULT_MAX_BLOCKS))
+    return plans
+
+
+def plan_findings(arch: str, plans: Iterable[KernelVmemPlan]) -> List[Finding]:
+    out: List[Finding] = []
+    for p in plans:
+        if p.feasible:
+            continue
+        cfgs = " ".join(f"{k}={v}" for k, v in p.config.items())
+        for why in p.why_infeasible():
+            out.append(Finding(
+                "vmem-budget", f"vmem/{arch}", 0,
+                f"{p.kernel}({cfgs})",
+                f"total={p.total_bytes / 2**20:.1f}MiB "
+                f"limit={p.limit_bytes / 2**20:.0f}MiB", why))
+    return out
+
+
+def run_default(archs: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for arch in (archs if archs is not None else ASSIGNED_ARCHS):
+        findings.extend(plan_findings(arch, kernel_plans(arch)))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# sweep lane: vet explicit (shape x block) grids (launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+def sweep(arch: str, block_ms: Sequence[int] = (8, 128),
+          block_ns: Sequence[int] = (128, 256),
+          block_ks: Sequence[int] = (256, 512),
+          cfg=None) -> Tuple[List[KernelVmemPlan], List[Finding]]:
+    """Blocks as-given (no resolution): every infeasible cell is reported,
+    so a launch sweep can drop configurations Mosaic would reject."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    plans: List[KernelVmemPlan] = []
+    for tap, (K, N) in projection_shapes(cfg):
+        for bm in block_ms:
+            for bn in block_ns:
+                for bk in block_ks:
+                    p = masked_matmul.vmem_plan(bm, K, N, block_m=bm,
+                                                block_n=bn, block_k=bk)
+                    p.config["tap"] = tap
+                    plans.append(p)
+                    if K % 8 == 0:
+                        p = sparse_matmul24.vmem_plan(bm, K, N, block_m=bm,
+                                                      block_n=bn, block_k=bk)
+                        p.config["tap"] = tap
+                        plans.append(p)
+    return plans, plan_findings(arch, plans)

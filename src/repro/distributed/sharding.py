@@ -105,13 +105,35 @@ def logical_spec_tree(params: Any) -> Any:
 
 # ---------------------------------------------------------------------------
 # rule tables: logical axis -> mesh axis (or tuple of axes)
+#
+# Every rule/spec function below needs only a mesh's GEOMETRY (axis names +
+# sizes), never its devices, so each accepts either a real jax Mesh or an
+# AxisMesh stand-in. The *_pspecs functions return plain PartitionSpecs —
+# the static-analysis contract checker (repro.analysis.contracts) evaluates
+# the whole rule table across mesh geometries on a 1-device CPU host with
+# them; the *_shardings wrappers bind a real Mesh into NamedShardings for
+# the runtime programs.
 # ---------------------------------------------------------------------------
 
-def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+
+class AxisMesh:
+    """Device-free stand-in for ``jax.sharding.Mesh`` in rule evaluation:
+    carries only ``shape`` (axis name -> size) and ``axis_names``."""
+
+    def __init__(self, **axes: int):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+    def __repr__(self):
+        return "AxisMesh(%s)" % ", ".join(
+            f"{k}={v}" for k, v in self.shape.items())
+
+
+def mesh_dp_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
-def make_rules(cfg: ModelConfig, mesh: Mesh, kind: str,
+def make_rules(cfg: ModelConfig, mesh, kind: str,
                overrides: Optional[Dict] = None) -> Dict[str, Any]:
     """Logical->mesh rules for (arch, shape-kind). `overrides` is the perf
     hillclimb lever (launch/dryrun.py --rules)."""
@@ -187,16 +209,26 @@ def _spec_for(shape, logical, rules, mesh) -> P:
     return P(*axes)
 
 
-def param_shardings(mesh: Mesh, cfg: ModelConfig, params: Any, kind: str,
-                    overrides: Optional[Dict] = None) -> Any:
-    """NamedSharding pytree for the param tree (arrays or ShapeDtypeStructs)."""
+def param_pspecs(mesh, cfg: ModelConfig, params: Any, kind: str,
+                 overrides: Optional[Dict] = None) -> Any:
+    """PartitionSpec pytree for the param tree. ``mesh`` may be an
+    :class:`AxisMesh` — only the geometry enters the rule evaluation."""
     rules = make_rules(cfg, mesh, kind, overrides)
     logical = logical_spec_tree(params)
     return jax.tree_util.tree_map(
-        lambda leaf, lg: NamedSharding(mesh, _spec_for(leaf.shape, lg, rules, mesh)),
+        lambda leaf, lg: _spec_for(leaf.shape, lg, rules, mesh),
         params, logical,
         is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(e, (str, type(None))) for e in x))
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params: Any, kind: str,
+                    overrides: Optional[Dict] = None) -> Any:
+    """NamedSharding pytree for the param tree (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps),
+        param_pspecs(mesh, cfg, params, kind, overrides),
+        is_leaf=lambda x: isinstance(x, P))
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +254,7 @@ def input_shardings(mesh: Mesh, cfg: ModelConfig, specs: Dict, kind: str,
     return out
 
 
-def serve_rules(mesh: Mesh, cfg: ModelConfig, n_slots: int,
+def serve_rules(mesh, cfg: ModelConfig, n_slots: int,
                 overrides: Optional[Dict] = None) -> Dict[str, Any]:
     """Logical->mesh rules for the serving engine's runtime state.
 
@@ -283,23 +315,40 @@ def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, spec, cache: Any,
       host-mirrored scalars (free pages / prefix registry stay host-side and
       therefore trivially replicated).
     """
+    specs = serve_state_pspecs(mesh, cfg, spec, cache, pstate, n_slots,
+                               paged, rules)
+    ns = lambda ps: NamedSharding(mesh, ps)
+    pstate_sh = None
+    if specs["pstate"] is not None:
+        pstate_sh = type(pstate)(ref=ns(specs["pstate"].ref),
+                                 block_tables=ns(specs["pstate"].block_tables))
+    return {"cache": jax.tree_util.tree_map(ns, specs["cache"],
+                                            is_leaf=lambda x: isinstance(x, P)),
+            "slots": ns(specs["slots"]), "pstate": pstate_sh,
+            "repl": ns(specs["repl"]), "rules": specs["rules"]}
+
+
+def serve_state_pspecs(mesh, cfg: ModelConfig, spec, cache: Any,
+                       pstate: Any, n_slots: int, paged: bool,
+                       rules: Optional[Dict] = None) -> Dict[str, Any]:
+    """PartitionSpec-level core of :func:`serve_state_shardings` — accepts
+    an :class:`AxisMesh`, so the contract checker can verify the serve-state
+    placement rules for any mesh geometry without devices."""
     if rules is None:
         rules = serve_rules(mesh, cfg, n_slots)
     logical = spec.cache_logical(paged)
     cache_sh = jax.tree_util.tree_map(
-        lambda leaf, lg: NamedSharding(
-            mesh, _spec_for(leaf.shape, lg, rules, mesh)),
+        lambda leaf, lg: _spec_for(leaf.shape, lg, rules, mesh),
         cache, logical)
-    slot_sh = NamedSharding(mesh, _spec_for((n_slots,), ("batch",), rules, mesh))
-    repl = NamedSharding(mesh, P())
+    slot_sh = _spec_for((n_slots,), ("batch",), rules, mesh)
     pstate_sh = None
     if pstate is not None:
         pstate_sh = type(pstate)(
-            ref=repl,
-            block_tables=NamedSharding(mesh, _spec_for(
-                pstate.block_tables.shape, ("batch", None), rules, mesh)))
+            ref=P(),
+            block_tables=_spec_for(
+                pstate.block_tables.shape, ("batch", None), rules, mesh))
     return {"cache": cache_sh, "slots": slot_sh, "pstate": pstate_sh,
-            "repl": repl, "rules": rules}
+            "repl": P(), "rules": rules}
 
 
 def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any, kind: str = "decode",

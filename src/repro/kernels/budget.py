@@ -1,0 +1,72 @@
+"""Static VMEM budget accounting for the Pallas kernels.
+
+Every kernel module exposes a ``vmem_plan(...)`` hook returning a
+:class:`KernelVmemPlan`: the per-grid-step VMEM working set implied by its
+block shapes, scratch declarations, and accumulator dtypes, plus any
+block-shape divisibility constraints the kernel asserts at call time. The
+plan is PURE ARITHMETIC — no tracing, no devices — so the analysis CLI
+(``python -m repro.analysis``) and the dryrun sweep (``launch/dryrun.py
+--check-vmem``) can reject configurations that cannot compile on real TPUs
+from this CPU-only container, where the kernels only ever run through the
+Pallas interpreter and would never hit Mosaic's VMEM allocator.
+
+Accounting model (see /opt/skills/guides/pallas_guide.md):
+
+* pallas_call's automatic pipelining DOUBLE-BUFFERS every in/out block
+  (the next grid step's HBM->VMEM DMA overlaps this step's compute), so
+  block bytes count twice.
+* scratch_shapes persist across the grid — single-buffered.
+* ``temp_bytes`` covers in-kernel materialized temporaries that Mosaic
+  must also place in VMEM (e.g. sparse_matmul24's decompressed dense
+  tile); the estimate is documented at each hook.
+
+The total is checked against the kernel's declared ``vmem_limit_bytes``
+(each module's ``VMEM_LIMIT_BYTES`` — the same constant passed to
+``TPUCompilerParams``, so the check cannot drift from the declaration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+def block_bytes(shape: Tuple[int, ...], itemsize: int) -> int:
+    n = itemsize
+    for d in shape:
+        n *= d
+    return n
+
+
+@dataclass
+class KernelVmemPlan:
+    """Static VMEM working set of one kernel invocation config."""
+    kernel: str
+    config: Dict[str, int]  # the block/shape parameters the plan was built for
+    blocks: Dict[str, int]  # in/out block name -> bytes (single copy)
+    scratch: Dict[str, int]  # scratch name -> bytes
+    temp_bytes: int  # in-kernel materialized temporaries (estimate)
+    limit_bytes: int  # the kernel's declared vmem_limit_bytes
+    violations: List[str] = field(default_factory=list)  # constraint failures
+
+    @property
+    def total_bytes(self) -> int:
+        # double-buffered pipeline blocks + resident scratch + temporaries
+        return (2 * sum(self.blocks.values()) + sum(self.scratch.values())
+                + self.temp_bytes)
+
+    @property
+    def feasible(self) -> bool:
+        return not self.violations and self.total_bytes <= self.limit_bytes
+
+    def why_infeasible(self) -> List[str]:
+        out = list(self.violations)
+        if self.total_bytes > self.limit_bytes:
+            out.append(
+                f"VMEM {self.total_bytes / 2**20:.1f}MiB > limit "
+                f"{self.limit_bytes / 2**20:.0f}MiB")
+        return out
+
+
+def require(plan: KernelVmemPlan, ok: bool, msg: str) -> None:
+    if not ok:
+        plan.violations.append(msg)

@@ -13,6 +13,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.budget import KernelVmemPlan, block_bytes, require
+
+VMEM_LIMIT_BYTES = 64 * 1024 * 1024
 
 
 def _kernel(x_ref, w_ref, m_ref, o_ref):
@@ -51,5 +56,32 @@ def masked_matmul_pallas(x, w, mask, *, block_m: int = 128, block_n: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            # M/N tiles are independent; the K axis revisits the output block
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            vmem_limit_bytes=VMEM_LIMIT_BYTES,
+        ),
         interpret=interpret,
     )(x, w, mask.astype(jnp.int8))
+
+
+def vmem_plan(M: int, K: int, N: int, *, block_m: int = 128,
+              block_n: int = 128, block_k: int = 512, x_itemsize: int = 4,
+              w_itemsize: int = 4) -> KernelVmemPlan:
+    """Static VMEM working set of one ``masked_matmul_pallas`` call (see
+    kernels/budget.py). The f32 output block revisits across the K axis and
+    the masked weight tile materializes once in VMEM per step."""
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    blocks = {"x": block_bytes((bm, bk), x_itemsize),
+              "w": block_bytes((bk, bn), w_itemsize),
+              "mask": block_bytes((bk, bn), 1),
+              "out": block_bytes((bm, bn), 4)}
+    # the w * mask product tile (w dtype) before the MXU dot
+    temp = block_bytes((bk, bn), w_itemsize)
+    plan = KernelVmemPlan("masked_matmul", dict(M=M, K=K, N=N, block_m=bm,
+                                                block_n=bn, block_k=bk),
+                          blocks, {}, temp, VMEM_LIMIT_BYTES)
+    require(plan, M % bm == 0, f"M={M} % block_m={bm} != 0")
+    require(plan, N % bn == 0, f"N={N} % block_n={bn} != 0")
+    require(plan, K % bk == 0, f"K={K} % block_k={bk} != 0")
+    return plan

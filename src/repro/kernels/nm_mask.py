@@ -20,6 +20,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.budget import KernelVmemPlan, block_bytes, require
+
+VMEM_LIMIT_BYTES = 64 * 1024 * 1024
 
 
 def _nm_rank_mask(s, n: int, m: int):
@@ -76,6 +81,11 @@ def nm_mask_pallas(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0,
     x_spec = pl.BlockSpec((1, bi), lambda i, j: (0, j))
     out_spec = pl.BlockSpec((bo, bi), lambda i, j: (i, j))
 
+    # every (i, j) tile is written exactly once — no revisiting axis
+    compiler_params = pltpu.TPUCompilerParams(
+        dimension_semantics=("parallel", "parallel"),
+        vmem_limit_bytes=VMEM_LIMIT_BYTES,
+    )
     if g_oi is not None:
         fn = functools.partial(_kernel, alpha=alpha, n=n, m=m, use_grad=True)
         return pl.pallas_call(
@@ -83,6 +93,7 @@ def nm_mask_pallas(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0,
             in_specs=[w_spec, x_spec, w_spec],
             out_specs=out_spec,
             out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.int8),
+            compiler_params=compiler_params,
             interpret=interpret,
         )(w_oi, xnorm2, g_oi)
     fn = functools.partial(_kernel_nograd, alpha=alpha, n=n, m=m)
@@ -91,5 +102,30 @@ def nm_mask_pallas(w_oi, xnorm, g_oi=None, *, alpha: float = 100.0,
         in_specs=[w_spec, x_spec],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.int8),
+        compiler_params=compiler_params,
         interpret=interpret,
     )(w_oi, xnorm2)
+
+
+def vmem_plan(d_out: int, d_in: int, *, block_out: int = 256,
+              block_in: int = 512, itemsize: int = 4, use_grad: bool = True,
+              m: int = 4) -> KernelVmemPlan:
+    """Static VMEM working set of one ``nm_mask_pallas`` call (see
+    kernels/budget.py for the accounting model). ``itemsize`` is the W/G
+    dtype width; the score math always runs in f32, so the pairwise
+    (bo, bi/m, m, m) rank compare dominates the temporaries."""
+    bo, bi = min(block_out, d_out), min(block_in, d_in)
+    blocks = {"w": block_bytes((bo, bi), itemsize),
+              "xnorm": block_bytes((1, bi), itemsize),
+              "mask_out": block_bytes((bo, bi), 1)}
+    if use_grad:
+        blocks["g"] = block_bytes((bo, bi), itemsize)
+    # f32 score tile + the (bo, bi/m, m, m) broadcast-compare rank tensor
+    temp = block_bytes((bo, bi), 4) + block_bytes((bo, bi // m, m, m), 4)
+    plan = KernelVmemPlan("nm_mask", dict(d_out=d_out, d_in=d_in,
+                                          block_out=bo, block_in=bi),
+                          blocks, {}, temp, VMEM_LIMIT_BYTES)
+    require(plan, d_out % bo == 0, f"d_out={d_out} % block_out={bo} != 0")
+    require(plan, d_in % bi == 0, f"d_in={d_in} % block_in={bi} != 0")
+    require(plan, bi % m == 0, f"block_in={bi} % m={m} != 0")
+    return plan

@@ -56,6 +56,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.budget import KernelVmemPlan, block_bytes, require
+
+VMEM_LIMIT_BYTES = 64 * 1024 * 1024
+
 NEG_INF = -1e30
 
 
@@ -156,8 +160,37 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
         compiler_params=pltpu.TPUCompilerParams(
             # slots are independent; the page axis revisits the m/l/acc carry
             dimension_semantics=("parallel", "arbitrary"),
-            vmem_limit_bytes=64 * 1024 * 1024,
+            vmem_limit_bytes=VMEM_LIMIT_BYTES,
         ),
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+def vmem_plan(B: int, KV: int, G: int, hd: int, *, page_size: int = 16,
+              max_blocks: int = 8, q_itemsize: int = 2,
+              kv_itemsize: int = 2) -> KernelVmemPlan:
+    """Static VMEM working set of one ``paged_attention_pallas`` call (see
+    kernels/budget.py). The grid walks (B, max_blocks) with one page of K
+    and V resident per step plus the f32 m/l/acc online-softmax carry; the
+    scalar-prefetched block table and lengths live in SMEM and are counted
+    against the VMEM budget conservatively."""
+    blocks = {"q": block_bytes((1, KV, G, hd), q_itemsize),
+              "k_page": block_bytes((1, page_size, KV, hd), kv_itemsize),
+              "v_page": block_bytes((1, page_size, KV, hd), kv_itemsize),
+              "out": block_bytes((1, KV, G, hd), q_itemsize),
+              "block_table": block_bytes((B, max_blocks), 4),
+              "lengths": block_bytes((B,), 4)}
+    scratch = {"m": block_bytes((KV, G), 4),
+               "l": block_bytes((KV, G), 4),
+               "acc": block_bytes((KV, G, hd), 4)}
+    # f32 copies of q/k/v for the einsums + the (KV, G, page_size) logits
+    temp = (block_bytes((KV, G, hd), 4) + 2 * block_bytes((page_size, KV, hd), 4)
+            + 2 * block_bytes((KV, G, page_size), 4))
+    plan = KernelVmemPlan("paged_attention",
+                          dict(B=B, KV=KV, G=G, hd=hd, page_size=page_size,
+                               max_blocks=max_blocks),
+                          blocks, scratch, temp, VMEM_LIMIT_BYTES)
+    require(plan, page_size >= 1, f"page_size={page_size} < 1")
+    require(plan, G >= 1 and KV >= 1, f"bad GQA grouping KV={KV} G={G}")
+    return plan

@@ -32,6 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.budget import KernelVmemPlan, block_bytes, require
+
+VMEM_LIMIT_BYTES = 64 * 1024 * 1024
+
 
 def _body(x_ref, vals_ref, idx_ref, bias_ref, o_ref, acc_ref, *, w_qscale):
     k_step = pl.program_id(2)
@@ -126,8 +130,37 @@ def sparse_matmul24_pallas(x, vals, idx, *, bias=None, w_qscale=None,
         compiler_params=pltpu.TPUCompilerParams(
             # M/N tiles are independent; the K axis revisits the accumulator
             dimension_semantics=("parallel", "parallel", "arbitrary"),
-            vmem_limit_bytes=64 * 1024 * 1024,
+            vmem_limit_bytes=VMEM_LIMIT_BYTES,
         ),
         interpret=interpret,
     )(*operands)
     return out[:M] if pad else out
+
+
+def vmem_plan(M: int, K: int, N: int, *, block_m: int = 128,
+              block_n: int = 128, block_k: int = 512, x_itemsize: int = 2,
+              vals_itemsize: int = 2, bias: bool = False,
+              w_qscale: bool = False) -> KernelVmemPlan:
+    """Static VMEM working set of one ``sparse_matmul24_pallas`` call (see
+    kernels/budget.py). Besides the compacted input blocks and the f32
+    scratch accumulator, the in-tile decompression materializes the dense
+    (bk, bn) f32 expansion plus the unpacked int32 index plane."""
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    blocks = {"x": block_bytes((bm, bk), x_itemsize),
+              "vals": block_bytes((bk // 2, bn), vals_itemsize),
+              "idx": block_bytes((bk // 8, bn), 1),
+              "out": block_bytes((bm, bn), x_itemsize)}
+    if bias:
+        blocks["bias"] = block_bytes((1, bn), x_itemsize)
+    scratch = {"acc": block_bytes((bm, bn), 4)}
+    # dense f32 expansion + unpacked idx2 (int32) + repeated byte plane
+    temp = (block_bytes((bk, bn), 4) + 2 * block_bytes((bk // 2, bn), 4)
+            + (block_bytes((bk // 2, bn), 4) if w_qscale else 0))
+    plan = KernelVmemPlan("sparse_matmul24", dict(M=M, K=K, N=N, block_m=bm,
+                                                  block_n=bn, block_k=bk),
+                          blocks, scratch, temp, VMEM_LIMIT_BYTES)
+    require(plan, K % 8 == 0, f"K={K} % 8 != 0 (packed 2-bit idx)")
+    require(plan, N % bn == 0, f"N={N} % block_n={bn} != 0")
+    require(plan, K % bk == 0, f"K={K} % block_k={bk} != 0")
+    require(plan, bk % 8 == 0, f"block_k={bk} % 8 != 0")
+    return plan

@@ -351,11 +351,32 @@ def main():
     ap.add_argument("--opt", action="store_true",
                     help="apply the OPT_CONFIGS hillclimb variant if defined")
     ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--check-vmem", action="store_true",
+                    help="run the static Pallas VMEM budget estimator "
+                    "(repro.analysis.vmem) over the sweep grid instead of "
+                    "lowering — reports infeasible block shapes Mosaic "
+                    "would reject, without burning TPU time")
     args = ap.parse_args()
 
     rules = json.loads(args.rules) if args.rules else None
-    cells = []
     archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    if args.check_vmem:
+        from repro.analysis import vmem as VMEM
+        bad = 0
+        for a in archs:
+            plans, findings = VMEM.sweep(a)
+            bad += len(findings)
+            rec = {"arch": a, "check": "vmem", "cells": len(plans),
+                   "infeasible": sorted({f.scope for f in findings})}
+            print(json.dumps(rec))
+            for f in findings:
+                print(f"  {f.render()}")
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        raise SystemExit(1 if bad else 0)
+    cells = []
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     for a in archs:

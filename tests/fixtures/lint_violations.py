@@ -1,0 +1,42 @@
+"""Deliberate jitlint violations — exactly one construct per rule.
+
+This file is LINTED by tests/test_analysis.py (golden report) and never
+imported; the code below is intentionally wrong. The module directive opts
+it into the path-scoped rule sets (bf16 compute, mesh-aware) that real
+modules get from their location/imports.
+"""
+# lint: module(bf16-compute, mesh-aware)
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@jax.jit
+def host_sync_in_jit(x):
+    return x.item()  # host-sync: device round-trip inside a trace
+
+
+def _copy_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def hard_interpret(x):
+    # pallas-interpret: hard-coded interpret (the PR 6 bug class), and
+    # pallas-params: no compiler_params declaration
+    return pl.pallas_call(
+        _copy_body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True)(x)
+
+
+def jit_without_shardings(fn):
+    # jit-shardings: mesh-aware module, no in/out shardings
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def f32_in_bf16_path(x):
+    return x.astype(jnp.float32)  # f32-cast in a bf16 compute path
+
+
+def suppressed_jit(fn):
+    # single-device helper: the inline allow must suppress this one
+    return jax.jit(fn)  # lint: allow(jit-shardings)

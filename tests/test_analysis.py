@@ -1,0 +1,216 @@
+"""Static-analysis subsystem: rule coverage (golden fixture report),
+baseline round-trip/staleness, the two historical-bug regression probes
+(hard interpret default, mid-head sharding split), and the VMEM budget
+model's accept/reject behavior."""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (apply_baseline, load_baseline, render_findings,
+                            write_baseline)
+from repro.analysis import jitlint
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "lint_violations.py")
+
+GOLDEN_REPORT = """\
+== fixture: 5 finding(s) ==
+  host-sync          tests/fixtures/lint_violations.py:16 [host_sync_in_jit] .item() in jitted region forces a device round-trip
+  pallas-interpret   tests/fixtures/lint_violations.py:26 [hard_interpret] pallas_call with hard-coded interpret=True (PR 6 bug class: must resolve via ops._interpret_default)
+  pallas-params      tests/fixtures/lint_violations.py:26 [hard_interpret] pallas_call without compiler_params (dimension_semantics + vmem_limit_bytes)
+  jit-shardings      tests/fixtures/lint_violations.py:33 [jit_without_shardings] jax.jit in a mesh-aware module without explicit in_shardings/out_shardings (state may silently migrate through one device)
+  f32-cast           tests/fixtures/lint_violations.py:37 [f32_in_bf16_path] astype(float32) in a bf16 compute path"""
+
+
+def _fixture_findings():
+    return jitlint.lint_file(
+        FIXTURE, relpath="tests/fixtures/lint_violations.py")
+
+
+# ---------------------------------------------------------------------------
+# jitlint: rule coverage + golden report + suppression mechanics
+# ---------------------------------------------------------------------------
+
+def test_fixture_covers_every_rule_golden():
+    findings = _fixture_findings()
+    assert sorted({f.rule for f in findings}) == sorted(jitlint.RULES)
+    assert render_findings("fixture", findings) == GOLDEN_REPORT
+
+
+def test_inline_allow_suppresses():
+    # the fixture's suppressed_jit carries `# lint: allow(jit-shardings)`
+    # on an otherwise-violating jax.jit — it must produce no finding
+    findings = _fixture_findings()
+    assert not any(f.scope == "suppressed_jit" for f in findings)
+
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    findings = _fixture_findings()
+    bl = tmp_path / "baseline.txt"
+    write_baseline(str(bl), findings, header="test")
+    entries = load_baseline(str(bl))
+    # round-trip: everything suppressed, nothing stale
+    res = apply_baseline(findings, entries)
+    assert not res.unsuppressed and not res.stale
+    assert len(res.suppressed) == len(findings)
+    # a fixed violation leaves a stale entry -> run must fail
+    res = apply_baseline([f for f in findings if f.rule != "f32-cast"],
+                         entries)
+    assert len(res.stale) == 1 and "f32-cast" in res.stale[0]
+    # a new violation is unsuppressed -> run must fail
+    extra = findings[0].__class__("host-sync", "x.py", 1, "f", "y.item()",
+                                  "new")
+    res = apply_baseline(findings + [extra], entries)
+    assert res.unsuppressed == [extra]
+
+
+def test_baseline_key_survives_line_drift():
+    f = _fixture_findings()[0]
+    moved = f.__class__(f.rule, f.path, f.line + 40, f.scope,
+                        "  " + f.snippet + "  ", f.message)
+    assert moved.key == f.key
+
+
+def test_repo_lint_is_clean_against_baseline():
+    """The shipped tree + shipped baseline == zero unsuppressed findings
+    and zero stale entries (what `make analyze` enforces)."""
+    from repro.analysis.__main__ import default_baseline_path
+    res = apply_baseline(jitlint.lint_tree(),
+                         load_baseline(default_baseline_path()))
+    assert not res.unsuppressed, "\n".join(
+        f.render() for f in res.unsuppressed)
+    assert not res.stale, res.stale
+
+
+# ---------------------------------------------------------------------------
+# regression probe 1: the PR 6 bug class — a pallas wrapper whose interpret
+# default is hard-coded (would run the Python interpreter on real TPUs)
+# ---------------------------------------------------------------------------
+
+def test_hard_interpret_default_is_caught(tmp_path):
+    src = textwrap.dedent("""\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _body(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def kernel(x, *, interpret: bool = True):
+            return pl.pallas_call(
+                _body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                interpret=interpret)(x)
+        """)
+    p = tmp_path / "bad_kernel.py"
+    p.write_text(src)
+    findings = jitlint.lint_file(str(p), relpath="bad_kernel.py")
+    assert any(f.rule == "pallas-interpret"
+               and "defaults to True" in f.message for f in findings)
+
+
+def test_resolved_interpret_contract_is_clean(tmp_path):
+    src = textwrap.dedent("""\
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _body(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def kernel(x, *, interpret=None):
+            if interpret is None:
+                from repro.kernels.ops import _interpret_default
+                interpret = _interpret_default()
+            return pl.pallas_call(
+                _body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                compiler_params=pltpu.TPUCompilerParams(
+                    dimension_semantics=("parallel",),
+                    vmem_limit_bytes=64 * 1024 * 1024),
+                interpret=interpret)(x)
+        """)
+    p = tmp_path / "good_kernel.py"
+    p.write_text(src)
+    assert jitlint.lint_file(str(p), relpath="good_kernel.py") == []
+
+
+# ---------------------------------------------------------------------------
+# regression probe 2: the PR 5 bug class — re-introducing a mid-head
+# sharding split past make_rules' head-count degradation
+# ---------------------------------------------------------------------------
+
+def test_midhead_split_is_caught():
+    from repro.analysis import contracts
+    from repro.configs import get_config
+    # kv_heads=2, head_dim=16 on a 4-way model axis: the flattened dim (32)
+    # divides 4, the head count (2) does not — exactly the case per-dim
+    # divisibility alone would wave through
+    cfg = get_config("qwen3-8b").reduced(num_kv_heads=2)
+    clean = contracts.check_param_contracts("qwen3-8b", "tp4", cfg=cfg)
+    assert clean == [], "shipped rule table must degrade kv_heads cleanly"
+    bad = contracts.check_param_contracts(
+        "qwen3-8b", "tp4", overrides={"kv_heads": "model"}, cfg=cfg)
+    assert any(f.rule == "mid-head-split" for f in bad)
+    assert any("wk" in f.scope or "wv" in f.scope for f in bad)
+
+
+def test_static_contract_matrix_clean_sample():
+    """A cross-family sample of the full `make analyze` matrix: params +
+    serve state over every geometry, plus the golden pins and the bf16
+    upcast check, must report nothing."""
+    from repro.analysis import contracts
+    fs = contracts.run_static(archs=["qwen3-8b", "mamba2-1.3b",
+                                     "deepseek-moe-16b", "zamba2-7b"])
+    fs += contracts.check_bf16_upcasts()
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+def test_golden_pins_catch_silent_degradation(monkeypatch):
+    """Dropping a TP rule-table entry degrades everything to replication —
+    still *valid*, so only the golden pins can catch it."""
+    from repro.analysis import contracts
+    from repro.distributed import sharding as SHARD
+    real = SHARD.make_rules
+
+    def dropped(cfg, mesh, kind, overrides=None):
+        rules = real(cfg, mesh, kind, overrides)
+        rules["heads"] = None  # silently un-TP the attention heads
+        return rules
+
+    monkeypatch.setattr(SHARD, "make_rules", dropped)
+    fs = contracts.check_golden_pins()
+    assert any(f.rule == "golden-pin" and "wq" in f.scope for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget model: accept real shapes, reject impossible ones
+# ---------------------------------------------------------------------------
+
+def test_vmem_default_lane_clean():
+    from repro.analysis import vmem
+    fs = vmem.run_default(archs=["qwen3-8b", "deepseek-moe-16b"])
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+def test_vmem_rejects_indivisible_and_oversized():
+    from repro.analysis import vmem
+    # deepseek's shared-expert K=2816 against the default 512 K-block
+    p = vmem.masked_matmul.vmem_plan(8, 2816, 2048, block_k=512)
+    assert not p.feasible and any("block_k" in v for v in p.violations)
+    # blocks that simply cannot fit in the declared 64MiB budget
+    p = vmem.masked_matmul.vmem_plan(2048, 8192, 8192, block_m=2048,
+                                     block_n=8192, block_k=8192)
+    assert not p.feasible
+    assert any("VMEM" in w for w in p.why_infeasible())
+    # and the resolver finds the largest legal divisor
+    assert vmem.resolve_block(2816, 512) == 352
+    assert vmem.resolve_block(2816, 512, multiple=8) == 352
+    assert vmem.resolve_block(7, 512, multiple=8) is None
+
+
+def test_vmem_sweep_reports_infeasible_cells():
+    from repro.analysis import vmem
+    plans, findings = vmem.sweep("deepseek-moe-16b")
+    assert plans and findings
+    assert all(f.rule == "vmem-budget" for f in findings)
+    # the default `make analyze` lane for the same arch resolves blocks
+    assert vmem.run_default(archs=["deepseek-moe-16b"]) == []

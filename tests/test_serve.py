@@ -322,32 +322,19 @@ def test_sampling_deterministic_under_fixed_key(dense):
 # the no-per-token-host-round-trip guarantee
 # ---------------------------------------------------------------------------
 
-def test_single_trace_single_sync_per_generation(dense, monkeypatch):
-    model, params = dense
-    cfg = model.cfg
-    B, P, G = 4, 8, 24
-    prompts = _prompts(cfg, B, P)
-    eng = Engine(model, params,
-                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
-                              prefill_buckets=(P,)))
-    blocks = {"n": 0}
-    real = jax.block_until_ready
-
-    def counting(x):
-        blocks["n"] += 1
-        return real(x)
-
-    monkeypatch.setattr(jax, "block_until_ready", counting)
-    out = eng.generate(prompts, G)
-    assert out.shape == (B, G)
-    assert eng.trace_counts["decode"] == 1, \
-        "decode hot loop must be ONE jitted program for the whole generation"
-    assert eng.trace_counts["prefill"] == 1
-    assert blocks["n"] == 1, \
-        f"expected exactly one block_until_ready per generation, saw {blocks['n']}"
-    # second generation: zero retraces
-    eng.generate(prompts, G)
-    assert eng.trace_counts["decode"] == 1
+@pytest.mark.parametrize("cell", ["dense-paged", "dense-pool",
+                                  "compressed24", "masked24"])
+def test_single_trace_single_sync_per_generation(cell):
+    """One prefill trace, ONE decode program, one block_until_ready per
+    generation, zero retraces on the second wave — for the paged, dense-pool
+    and both 2:4 serving paths. The pinned counts live in
+    repro.analysis.contracts (the single source of truth; `make analyze`
+    checks the same cells), this test just runs one cell each."""
+    from repro.analysis import contracts
+    measured, findings = contracts.run_trace_cell(cell)
+    assert not findings, "\n".join(f.render() for f in findings)
+    expected = contracts.EXPECTED_TRACES[cell]
+    assert {k: measured[k] for k in expected} == expected
 
 
 # ---------------------------------------------------------------------------
