@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-kernels test-serve-families test-serve-mesh \
-	test-sparse-serve analyze ci bench bench-serving serve
+	test-sparse-serve test-spec-decode analyze ci bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -33,6 +33,14 @@ test-serve-families:
 test-sparse-serve:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_sparse_serve.py
+
+# spec-decode lane: self-speculation with a 2:4-pruned drafter — greedy
+# bit-exactness vs target-only, exact rejection sampling (draft == target
+# accepts everything), draft-arena/admission headroom contracts (forced
+# CPU, like the family lane)
+test-spec-decode:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_spec_decode.py
 
 # mesh lane: sharded-vs-single-device serving parity (slow-marked subprocess
 # tests; each child forces an 8-device CPU host itself, so the parent env is

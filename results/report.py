@@ -59,8 +59,9 @@ def serving_table(path):
             "prefix tokens skipped | KV B/step kernel@25/50/100% vs gather | "
             "family matrix (tok/s @ state KB/slot) | "
             "mesh KV B/device (4x2) | "
-            "2:4 compressed tok/s (vs masked) |",
-            "|" + "---|" * 17]
+            "2:4 compressed tok/s (vs masked) | "
+            "spec decode tok/s (vs target-only, accepted/k) |",
+            "|" + "---|" * 18]
     for line in open(path):
         r = json.loads(line)
         if "paged_concurrent_slots" in r:
@@ -108,6 +109,17 @@ def serving_table(path):
                    f"{c['n_proj']} proj @ {c['packed_ratio_bf16']:.4f}x bf16)")
         else:
             c24 = "-"
+        if r.get("spec_serving"):
+            # self-speculation: the pruned artifact drafts, the target
+            # verifies; streaming tok/s at bit-exact greedy output, with
+            # the accept rate that carries the win
+            s = r["spec_serving"]
+            spec = (f"{s['spec_stream_tok_per_s']:.0f} vs "
+                    f"{s['target_stream_tok_per_s']:.0f} "
+                    f"({s['speedup']:.1f}x, "
+                    f"{s['mean_accepted']:.2f}/{s['best_k']} accepted)")
+        else:
+            spec = "-"
         rows.append(
             f"| {r['arch']} | {r['batch']} | {r['loop_tok_per_s']:.0f} | "
             f"{r['engine_tok_per_s']:.0f} | {r['engine_speedup']:.1f}x | "
@@ -116,7 +128,7 @@ def serving_table(path):
             f"{fmt_s(r['ttft_p50_s'])}/{fmt_s(r['ttft_p95_s'])} | "
             f"{fmt_s(r['tpot_p50_s'])}/{fmt_s(r['tpot_p95_s'])} | "
             f"{paged} | {bps} | {skipped} | {attn} | {fam} | {mesh} | "
-            f"{c24} |")
+            f"{c24} | {spec} |")
     return "\n".join(rows)
 
 

@@ -88,11 +88,17 @@ def _positions(cfg: ModelConfig, x):
 # ---------------------------------------------------------------------------
 
 def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
-                prunable: Dict[str, tuple]):
-    """Score every prunable weight and zero the pruned entries (destructive,
-    as in the reference implementation — RO may regrow them, the final
-    re-prune restores exact sparsity)."""
+                prunable: Dict[str, tuple], with_mask: bool = False):
+    """Score every prunable weight and zero the pruned entries (destructive).
+    RO's masked RMSprop steps keep them zero mid-round and ``ro_fit``
+    re-applies the prune after the final round, so exact sparsity survives.
+
+    ``with_mask=True`` additionally returns the 0/1 keep-mask tree (same
+    structure as ``bp``, all-ones at non-prunable leaves) — the contract
+    ``ro.ro_fit`` expects from its ``prune_fn``."""
     method = pcfg.method
+    keep = jax.tree_util.tree_map(
+        lambda p: jnp.ones(p.shape, jnp.bool_), bp) if with_mask else None
     for name, path in prunable.items():
         w = tree_get(bp, path)
         if w is None:
@@ -109,7 +115,9 @@ def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
             raise ValueError(f"unknown method {method}")
         mask = M.make_mask(s, pcfg.pattern, pcfg.sparsity)
         bp = tree_set(bp, path, SC.from_oi(jnp.where(mask, w_oi, 0)))
-    return bp
+        if with_mask:
+            keep = tree_set(keep, path, SC.from_oi(mask))
+    return (bp, keep) if with_mask else bp
 
 
 # ---------------------------------------------------------------------------
@@ -140,13 +148,16 @@ def prune_block(block_fn, bp, xs, pcfg: PruneConfig, prunable, key,
         return bp, report
 
     # K x [prune -> RO] (steps 3-9)
+    prune_mask_j = jax.jit(
+        lambda b, xn, g: apply_prune(b, xn, g, pcfg, prunable, with_mask=True))
+
     def prune_fn(bp_):
         _, xn = stats_j(bp_, xs)  # fresh layer inputs; G reused (paper Sec 4.1)
-        return prune_j(bp_, xn, G)
+        return prune_mask_j(bp_, xn, G)  # (bp, keep-mask) for masked RO steps
 
     bp, ro_losses = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg, key, prune_fn)
 
-    # steps 10-11: recompute gradient, final prune restores exact sparsity
+    # steps 10-11: recompute gradient, final prune with fresh statistics
     if needs_grad:
         G = grad_j(bp, xs)
     _, xnorm = stats_j(bp, xs)

@@ -6,6 +6,15 @@ decoder block, with per-sample RMSprop updates at lr=3e-7 (paper defaults).
 The paper performs one forward+backward+update per RO sample (M=32 samples
 per round, K=5 rounds). We run that loop as a ``lax.scan`` so a whole RO round
 is a single compiled program.
+
+Sparsity discipline: RMSprop steps are masked so pruned entries can never
+regrow mid-round, the second-moment state is zeroed wherever a re-prune
+lands (a later resurrection starts from fresh variance, not pre-prune
+gradients), and ``ro_fit`` re-applies the prune after the *final* round —
+so its output satisfies the mask pattern exactly for every ``ro_iters``
+(``kernels.ops.sparsity_check24`` passes and the serving engine's
+``compressed24=auto`` packing engages instead of silently falling back
+to dense).
 """
 from __future__ import annotations
 
@@ -21,7 +30,27 @@ def rmsprop_init(params):
     return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def rmsprop_update(params, grads, state, lr, decay=0.99, eps=1e-8):
+def mask_grads(grads, mask):
+    """Zero gradients at pruned (mask == 0) positions."""
+    return jax.tree_util.tree_map(
+        lambda g, m: g * m.astype(g.dtype), grads, mask)
+
+
+def zero_masked_state(state, mask):
+    """Drop second-moment accumulators at pruned (mask == 0) positions, so a
+    weight that is re-pruned between rounds carries no stale f32 variance
+    into a later resurrection."""
+    return jax.tree_util.tree_map(
+        lambda v, m: v * m.astype(v.dtype), state, mask)
+
+
+def rmsprop_update(params, grads, state, lr, decay=0.99, eps=1e-8, mask=None):
+    """Per-sample RMSprop step. ``mask`` (same tree as params, 1 = keep,
+    0 = pruned) zeroes the gradient at pruned entries before BOTH the
+    second-moment accumulation and the parameter step: a pruned weight
+    neither moves nor accumulates variance, so RO cannot regrow it."""
+    if mask is not None:
+        grads = mask_grads(grads, mask)
     new_state = jax.tree_util.tree_map(
         lambda v, g: decay * v + (1 - decay) * jnp.square(g.astype(jnp.float32)),
         state, grads)
@@ -41,11 +70,14 @@ def select_ro_inputs(key, xs: jnp.ndarray, dense_out: jnp.ndarray, m: int):
 
 
 def ro_round(block_fn: Callable, bp, opt_state, xs_ro: jnp.ndarray,
-             dense_ro: jnp.ndarray, lr: float):
+             dense_ro: jnp.ndarray, lr: float, mask=None):
     """One RO round: per-sample MSE step against the dense block output.
 
-    xs_ro: (M, S, D) inputs; dense_ro: (M, S, D) frozen dense outputs.
-    Returns (bp, opt_state, mean_loss_before_updates).
+    xs_ro: (M, S, D) inputs; dense_ro: (M, S, D) frozen dense outputs;
+    mask: optional 0/1 keep-mask tree threaded into every RMSprop step.
+    Returns (bp, opt_state, losses, mean_loss): ``losses`` is the (M,)
+    per-sample loss array, each entry evaluated *before* that sample's
+    update; ``mean_loss`` is its scalar mean.
     """
 
     def ro_loss(bp_, x1, y1):
@@ -59,29 +91,55 @@ def ro_round(block_fn: Callable, bp, opt_state, xs_ro: jnp.ndarray,
         bp_, st = carry
         x1, y1 = xy
         loss, g = vg(bp_, x1, y1)
-        bp_, st = rmsprop_update(bp_, g, st, lr)
+        bp_, st = rmsprop_update(bp_, g, st, lr, mask=mask)
         return (bp_, st), loss
 
     (bp, opt_state), losses = jax.lax.scan(body, (bp, opt_state), (xs_ro, dense_ro))
-    return bp, opt_state, losses
+    return bp, opt_state, losses, losses.mean()
+
+
+def _call_prune_fn(prune_fn: Callable, bp):
+    """prune_fn(bp) -> (bp, keep_mask) under the current contract; a legacy
+    prune_fn returning a bare block is accepted (no keep-mask, so update
+    masking / state zeroing are skipped for it)."""
+    out = prune_fn(bp)
+    if isinstance(out, tuple):
+        return out
+    return out, None
 
 
 def ro_fit(block_fn: Callable, bp, xs: jnp.ndarray, dense_out: jnp.ndarray,
            pcfg: PruneConfig, key, prune_fn: Callable = None):
-    """Full K-round RO loop for one block, with optional per-round re-pruning
-    (Alg. 1 steps 3-9: prune -> RO -> prune -> RO ...).
+    """Full K-round RO loop for one block, with per-round re-pruning AND a
+    final re-prune (Alg. 1 steps 3-9: prune -> RO -> prune -> RO -> prune),
+    so the returned block satisfies the mask pattern exactly for every
+    ``ro_iters`` value — including 1.
 
-    prune_fn(bp) -> bp applies the current RGS mask destructively.
-    Returns (bp, per-round mean losses).
+    prune_fn(bp) -> (bp, keep_mask) applies the current RGS mask
+    destructively and returns the 0/1 keep-mask tree (ones at non-prunable
+    leaves). The mask gates every RMSprop step of the following round, and
+    the optimizer's second-moment state is zeroed at pruned positions on
+    each re-prune.
+
+    Returns (bp, round_losses): ``round_losses[k]`` is round k's mean
+    per-sample pre-update loss (the scalar ``ro_round`` now returns).
     """
     opt_state = rmsprop_init(bp)
     round_losses = []
+    mask = None
     for k in range(pcfg.ro_iters):
         if prune_fn is not None:
-            bp = prune_fn(bp)
+            bp, mask = _call_prune_fn(prune_fn, bp)
+            if mask is not None:
+                opt_state = zero_masked_state(opt_state, mask)
         key, sub = jax.random.split(key)
         xs_ro, dense_ro = select_ro_inputs(sub, xs, dense_out, pcfg.ro_samples)
-        bp, opt_state, losses = ro_round(block_fn, bp, opt_state, xs_ro,
-                                         dense_ro, pcfg.ro_lr)
-        round_losses.append(losses.mean())
+        bp, opt_state, _, mean_loss = ro_round(block_fn, bp, opt_state, xs_ro,
+                                               dense_ro, pcfg.ro_lr, mask=mask)
+        round_losses.append(mean_loss)
+    if prune_fn is not None:
+        # the fix: without this, the final round's updates (dense under the
+        # legacy contract) would land after the last mask application and
+        # the returned block would violate the sparsity pattern.
+        bp, _ = _call_prune_fn(prune_fn, bp)
     return bp, jnp.stack(round_losses)

@@ -231,6 +231,18 @@ def param_shardings(mesh: Mesh, cfg: ModelConfig, params: Any, kind: str,
         is_leaf=lambda x: isinstance(x, P))
 
 
+def wave_param_shardings(mesh: Mesh, cfg: ModelConfig, wparams: tuple,
+                         kind: str = "decode") -> tuple:
+    """Shardings for the serving engine's weight tuple ``(target,)`` or
+    ``(target, drafter)``. The self-speculation drafter is a pruned copy of
+    the target, so its tree paths hit the same ``_PATH_RULES`` rows —
+    including the ``w24_vals``/``w24_idx``/``mask24`` aliases when either
+    model serves compressed. Each element is still sharded independently:
+    a dense f32 target and a 2:4-compressed drafter get the right specs
+    for their own leaf shapes."""
+    return tuple(param_shardings(mesh, cfg, p, kind) for p in wparams)
+
+
 # ---------------------------------------------------------------------------
 # input / cache shardings per shape kind
 # ---------------------------------------------------------------------------

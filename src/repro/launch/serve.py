@@ -45,38 +45,58 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  chunk: int = None, n_slots: int = None, paged: bool = True,
                  page_size: int = 16, n_pages: int = None,
                  paged_kernel: bool = None, extra_len: int = 0, mesh=None,
-                 compressed24: str = None, compressed24_kernel: bool = None):
+                 compressed24: str = None, compressed24_kernel: bool = None,
+                 self_spec: bool = False, draft_k: int = 4):
     """Returns (engine, cfg). Prunes the weights first when requested.
+
+    ``self_spec`` builds the self-speculation drafter: a Wanda++ 2:4-pruned
+    copy of the target's weights (core/pruner.py regional-gradient recipe),
+    registered with the engine to propose ``draft_k`` tokens per verify
+    step. The target itself stays whatever ``pruned`` made it.
 
     The default max_len covers prompt + generation plus the arch's vision
     prefix (VLM requests cache their patch embeddings ahead of the text)
-    plus ``extra_len`` (e.g. a shared system-prompt prefix)."""
+    plus ``extra_len`` (e.g. a shared system-prompt prefix) plus the
+    drafter's ``draft_k`` run-ahead headroom."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(method="wanda++", pattern=pruned or "2:4", n_calib=8,
+                       calib_len=prompt_len, ro_iters=1, ro_samples=4)
     if pruned:
         from repro.core.pruner import prune_model
-        pcfg = PruneConfig(method="wanda++", pattern=pruned, n_calib=8,
-                           calib_len=prompt_len, ro_iters=1, ro_samples=4)
         calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
         params, _ = prune_model(model, params, calib, pcfg)
         print(f"[serve] pruned with wanda++ {pruned}")
+    draft_params = None
+    if self_spec:
+        from repro.core.pruner import prune_model
+        calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
+        draft_params, _ = prune_model(model, params, calib, pcfg)
+        print(f"[serve] self-speculation drafter: wanda++ "
+              f"{pcfg.pattern}-pruned copy, draft_k={draft_k}")
     vis_len = cfg.vision_patches if cfg.frontend == "vision" else 0
+    draft_pad = draft_k if self_spec else 0
     ecfg = EngineConfig(
         n_slots=n_slots or batch,
-        max_len=max_len or (vis_len + extra_len + prompt_len + gen),
+        max_len=max_len or (vis_len + extra_len + prompt_len + gen
+                            + draft_pad),
         chunk=chunk or max(gen - 1, 1),
         prefill_buckets=tuple(sorted({prompt_len, max(prompt_len // 2, 1)})),
         paged=paged, page_size=page_size, n_pages=n_pages,
         paged_kernel=paged_kernel, mesh=mesh,
         compressed24=compressed24, compressed24_kernel=compressed24_kernel,
+        draft_k=draft_pad,
     )
-    engine = Engine(model, params, ecfg, sampling)
+    engine = Engine(model, params, ecfg, sampling, draft_params=draft_params)
     if engine.compressed24:
         print(f"[serve] compressed 2:4 weights: {engine.compressed24} "
               f"projections packed (vals + 2-bit idx)")
+    if engine.compressed24_draft:
+        print(f"[serve] drafter serves compressed 2:4: "
+              f"{engine.compressed24_draft} projections packed")
     return engine, cfg
 
 
@@ -94,7 +114,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           sampling: SamplingConfig = SamplingConfig(), paged: bool = True,
           page_size: int = 16, n_pages: int = None,
           paged_kernel: bool = None, mesh=None, compressed24: str = None,
-          compressed24_kernel: bool = None):
+          compressed24_kernel: bool = None, self_spec: bool = False,
+          draft_k: int = 4):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
     engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
@@ -102,7 +123,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
                                page_size=page_size, n_pages=n_pages,
                                paged_kernel=paged_kernel, mesh=mesh,
                                compressed24=compressed24,
-                               compressed24_kernel=compressed24_kernel)
+                               compressed24_kernel=compressed24_kernel,
+                               self_spec=self_spec, draft_k=draft_k)
     rng = np.random.default_rng(7)
     prompts = np.asarray(
         calibration_batch(cfg.vocab_size, batch, prompt_len, seed=7))
@@ -115,7 +137,13 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     ttft = time.perf_counter() - t0
     out = first[:, None]
     tpot = 0.0
-    if gen > 1:
+    if gen > 1 and engine.spec_decode:
+        # spec chunks emit variable tokens/slot; let the engine's wave
+        # driver loop chunks until every slot finishes, then compact
+        t1 = time.perf_counter()
+        out = engine._generate_spec(first, batch, gen)
+        tpot = (time.perf_counter() - t1) / (gen - 1)
+    elif gen > 1:
         t1 = time.perf_counter()
         toks, valid = engine.decode_chunk(gen - 1)
         t, _, _, _ = engine.harvest(toks, valid)
@@ -136,7 +164,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    n_pages: int = None, shared_prefix: int = 0,
                    paged_kernel: bool = None, mesh=None,
                    compressed24: str = None,
-                   compressed24_kernel: bool = None):
+                   compressed24_kernel: bool = None,
+                   self_spec: bool = False, draft_k: int = 4):
     """Mixed-length request stream through the continuous-batching scheduler.
 
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
@@ -149,7 +178,8 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                                paged=paged, page_size=page_size,
                                n_pages=n_pages, paged_kernel=paged_kernel,
                                mesh=mesh, compressed24=compressed24,
-                               compressed24_kernel=compressed24_kernel)
+                               compressed24_kernel=compressed24_kernel,
+                               self_spec=self_spec, draft_k=draft_k)
     rng = np.random.default_rng(7)
     prefix = None
     if shared_prefix > 0:
@@ -233,6 +263,14 @@ def main():
                          "even off-TPU (interpret mode — slow, correctness "
                          "only); default picks it on TPU, the XLA "
                          "decompress-once path elsewhere")
+    ap.add_argument("--self-spec", action="store_true",
+                    help="self-speculative decoding: draft with a wanda++ "
+                         "2:4-pruned copy of the target's own weights, "
+                         "verify with the target (greedy output is "
+                         "bit-exact vs target-only decode)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="with --self-spec: drafter tokens proposed per "
+                         "verify step (accepted prefix + 1 emitted)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="shard the engine over a (data, model) device mesh "
                          "(e.g. 4,2): params by the sharding rule table, "
@@ -255,14 +293,16 @@ def main():
                        shared_prefix=args.shared_prefix,
                        paged_kernel=paged_kernel, mesh=mesh,
                        compressed24=args.compressed_24,
-                       compressed24_kernel=sparse_kernel)
+                       compressed24_kernel=sparse_kernel,
+                       self_spec=args.self_spec, draft_k=args.draft_k)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,
               paged=not args.dense_pool, page_size=args.page_size,
               n_pages=args.n_pages, paged_kernel=paged_kernel, mesh=mesh,
               compressed24=args.compressed_24,
-              compressed24_kernel=sparse_kernel)
+              compressed24_kernel=sparse_kernel,
+              self_spec=args.self_spec, draft_k=args.draft_k)
 
 
 if __name__ == "__main__":

@@ -291,6 +291,52 @@ class Model:
         logits = self.unembed(params, x)[:, 0, :]
         return logits, new_cache
 
+    def decode_multi(self, params, inputs, cache, *, lin=None, elin=None,
+                     paged_kernel=True):
+        """Multi-token decode through the cache — the speculative-decoding
+        verify forward. inputs: {"tokens": (B, S) int32, "pos": (B,) int32
+        cache write index of tokens[:, 0], optional "rope_pos": (B,) int32
+        rotary position of tokens[:, 0] (defaults to pos), optional
+        "block_table": (B, max_blocks) int32}.
+
+        Writes every position's KV at cache positions pos[b] + [0, S) (the
+        same scatter/clamp semantics as ``decode_step``) and returns the
+        FULL logits (B, S, V) — row i is the next-token distribution after
+        tokens[:, i] — plus the cache. The paged read is the materialising
+        gather for S > 1 (the Pallas kernel is single-query). Pure-KV specs
+        only: a recurrent state cannot be rolled back to an accepted prefix,
+        so speculative verification is undefined for it.
+        """
+        cfg = self.cfg
+        if self.cache_spec.mixed or self.cache_spec.has_recurrent:
+            raise NotImplementedError(
+                f"{cfg.name}: multi-token verify needs a pure KV cache spec")
+        tokens, pos = inputs["tokens"], jnp.asarray(inputs["pos"], jnp.int32)
+        block_table = inputs.get("block_table")
+        Bsz, S = tokens.shape
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, (Bsz,))
+        x = self.embed(params, tokens)
+        rope = jnp.asarray(inputs.get("rope_pos", pos), jnp.int32)
+        pos2d = rope[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos2d[None], (3, Bsz, S))
+        else:
+            positions = pos2d
+        apply = self.block_apply
+
+        def body(h, xs):
+            bp, cache_l = xs
+            h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
+                                cache_index=pos, block_table=block_table,
+                                paged_kernel=paged_kernel,
+                                lin=lin, elin=elin)
+            return h, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.unembed(params, x), new_cache
+
     def prefill_paged(self, params, inputs, cache, *, lin=None, elin=None,
                       paged_kernel=True):
         """Prefill straight through the paged KV pool (shared-prefix path).

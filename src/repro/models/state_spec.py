@@ -191,6 +191,31 @@ class CacheSpec:
         return total
 
 
+def with_draft_group(spec: CacheSpec, name: str = "draft") -> CacheSpec:
+    """Self-speculative serving: extend a pure single-KV-group spec with a
+    clone of that group for the drafter's KV. The cloned group shares the
+    target group's per-leaf shapes/dtypes/pspecs, so the drafter's arena
+    pages, admits, releases, and mesh-shards through exactly the same
+    machinery — the cache pytree just becomes ``{"kv": (k, v), "draft":
+    (k, v)}`` and the engine routes each forward at the right group.
+
+    Only specs of one pageable KV group qualify: a recurrent group cannot
+    re-run the drafter's state transition from the target's snapshots, and
+    mixed (hybrid) specs would need per-site duplication the engine does
+    not route. Raises ValueError otherwise.
+    """
+    if len(spec.groups) != 1 or spec.groups[0].kind != KV:
+        kinds = ", ".join(f"{g.name}:{g.kind}" for g in spec.groups)
+        raise ValueError(
+            "self-speculation needs a spec of exactly one KV group "
+            f"(got [{kinds}]); SSM/hybrid drafters are not supported")
+    g = spec.groups[0]
+    if g.name == name:
+        raise ValueError(f"target KV group already named {name!r}")
+    return CacheSpec(groups=(g, StateGroup(
+        name=name, kind=KV, apps=g.apps, leaves=g.leaves)))
+
+
 def _quantize_kv_like(leaf, new, qscale: float):
     """Match the engine's int8 KV-cache quantization (layers.KV_QSCALE)."""
     if leaf.dtype == jnp.int8:

@@ -87,7 +87,8 @@ from repro.models.model import Model, mrope_text_start
 from repro.serve import paging as PAGE
 from repro.serve import slots as SLOT
 from repro.serve.paging import PageState
-from repro.serve.sampling import SamplingConfig, sample_tokens
+from repro.serve.sampling import (SamplingConfig, process_logits,
+                                  sample_tokens, slot_keys)
 from repro.serve.slots import SlotState, init_slots
 
 
@@ -155,6 +156,16 @@ class EngineConfig:
     # sharding.py's per-dim rule) instead of failing inside jit.
     # None == the exactly-single-device engine, byte-for-byte unchanged.
     mesh: Optional[Mesh] = None
+    # Self-speculative decoding: the drafter (a Wanda++ 2:4-pruned copy of
+    # the target, passed as Engine(draft_params=...)) proposes draft_k
+    # tokens per macro step; the target verifies all draft_k + 1 positions
+    # in ONE batched forward and the accepted prefix is emitted with an
+    # exact-rejection-sampling correction (greedy output is bit-exact vs
+    # target-only decode). 0 == spec decode off. The drafter's KV lives in
+    # the shared arena as a second CacheSpec group sharing the target's
+    # block tables, so admission allocates draft_k extra positions of
+    # headroom per slot (the drafter runs ahead of the accepted length).
+    draft_k: int = 0
 
     @property
     def max_blocks(self) -> int:
@@ -209,7 +220,8 @@ class Engine:
     """
 
     def __init__(self, model: Model, params, cfg: EngineConfig = EngineConfig(),
-                 sampling: SamplingConfig = SamplingConfig()):
+                 sampling: SamplingConfig = SamplingConfig(),
+                 draft_params=None):
         mcfg = model.cfg
         if mcfg.is_encoder_only:
             raise ValueError(
@@ -219,10 +231,21 @@ class Engine:
             raise ValueError(
                 f"{mcfg.name}: family {mcfg.family!r} declares no decode "
                 "state (see models/state_spec.py)")
+        if cfg.draft_k < 0:
+            raise ValueError(f"draft_k={cfg.draft_k} must be >= 0")
+        self.spec_decode = cfg.draft_k > 0
+        if self.spec_decode and draft_params is None:
+            raise ValueError(
+                "draft_k > 0 needs draft_params (the self-speculation "
+                "drafter — a pruned copy of the target's params)")
+        if draft_params is not None and not self.spec_decode:
+            raise ValueError("draft_params given but draft_k == 0")
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.spec = spec
+        # self-speculation extends the cache spec with a cloned "draft" KV
+        # group (raises for recurrent/hybrid specs, which cannot draft)
+        self.spec = SSPEC.with_draft_group(spec) if self.spec_decode else spec
         self.needs_vision = mcfg.frontend == "vision"
         # a spec with no KV group (pure SSM) has nothing to page: its
         # recurrent state is per-slot either way, so the paged machinery
@@ -259,6 +282,35 @@ class Engine:
                 self.compressed24 = n24
                 self._lin = masked24_lin if mode == "masked" \
                     else sparse24_lin(self.compressed24_kernel)
+        # drafter weights go through the same compression pass with their
+        # own lin dispatch: a 2:4-pruned drafter serves compressed (the
+        # whole point of drafting with the Wanda++ artifact) even when the
+        # dense target does not, and vice versa. No "on"-style raise here:
+        # mode "on" polices the target; an accidentally-dense drafter still
+        # serves, it just buys no weight-traffic win.
+        self.compressed24_draft = 0
+        self._draft_lin = None
+        if self.spec_decode and mode != "off":
+            from repro.models.blocks import compress_params24
+            from repro.models.layers import masked24_lin, sparse24_lin
+            dp, dn24 = compress_params24(
+                mcfg, draft_params, keep_dense=not self.compressed24_kernel,
+                masked=(mode == "masked"))
+            if dn24:
+                draft_params = dp
+                self.compressed24_draft = dn24
+                self._draft_lin = masked24_lin if mode == "masked" \
+                    else sparse24_lin(self.compressed24_kernel)
+        self.draft_params = draft_params
+        # the weight tuple every jitted program takes as argument 0:
+        # (target,) or (target, drafter). A tuple (not two args) keeps the
+        # donate_argnums positions of cache/state/pstate/key identical
+        # across both modes.
+        self._wp = (self.params,) if not self.spec_decode \
+            else (self.params, self.draft_params)
+        # cache-length headroom the drafter needs to run ahead of the
+        # accepted sequence: admission budgets draft_k extra positions
+        self._draft_pad = cfg.draft_k if self.spec_decode else 0
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.pstate: Optional[PageState] = None
@@ -290,12 +342,15 @@ class Engine:
         if self.mesh is not None:
             from repro.distributed import sharding as SHARD
             self._sh = SHARD.serve_state_shardings(
-                self.mesh, mcfg, spec, jax.eval_shape(self._mk_cache),
+                self.mesh, mcfg, self.spec, jax.eval_shape(self._mk_cache),
                 jax.eval_shape(self._mk_pstate) if self.paged else None,
                 cfg.n_slots, self.paged)
-            self._sh["params"] = SHARD.param_shardings(
-                self.mesh, mcfg, params, "decode")
-            self.params = jax.device_put(self.params, self._sh["params"])
+            self._sh["params"] = SHARD.wave_param_shardings(
+                self.mesh, mcfg, self._wp, "decode")
+            self._wp = jax.device_put(self._wp, self._sh["params"])
+            self.params = self._wp[0]
+            if self.spec_decode:
+                self.draft_params = self._wp[1]
             n_slots = cfg.n_slots
             self._alloc_jits = (
                 jax.jit(lambda: init_slots(n_slots),
@@ -330,11 +385,14 @@ class Engine:
     # mesh plumbing
     # ------------------------------------------------------------------
     def _mk_cache(self):
+        # built from self.spec (not model.init_*): under self-speculation
+        # the engine's spec carries the extra "draft" KV group, so the pool
+        # holds both arenas; without it this is exactly the model's cache
         cfg = self.cfg
         if self.paged:
-            return self.model.init_paged_cache(cfg.pool_pages, cfg.page_size,
-                                               n_slots=cfg.n_slots)
-        return self.model.init_cache(cfg.n_slots, cfg.max_len)
+            return self.spec.init_paged(cfg.pool_pages, cfg.page_size,
+                                        n_slots=cfg.n_slots)
+        return self.spec.init_dense(cfg.n_slots, cfg.max_len)
 
     def _mk_pstate(self):
         cfg = self.cfg
@@ -394,8 +452,9 @@ class Engine:
     # ------------------------------------------------------------------
     # jitted programs
     # ------------------------------------------------------------------
-    def _decode_impl(self, params, cache, state, key, block_tables, *, T):
+    def _decode_impl(self, wp, cache, state, key, block_tables, *, T):
         self.trace_counts["decode"] += 1
+        params = wp[0]
         sc, eos = self.sampling, self.cfg.eos_id
 
         def step(carry, _):
@@ -427,6 +486,180 @@ class Engine:
             step, (cache, state, key), None, length=T)
         return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
 
+    # -- self-speculative decode -----------------------------------------
+    # PRNG tags for the spec-decode draws; each (tag, position) pair folds
+    # into the macro step's key before the per-slot fold, so a slot's draw
+    # depends only on (seed, step, tag, position, slot) — the same layout
+    # invariance sample_tokens gets from slot_keys.
+    _TAG_DRAFT, _TAG_ACCEPT, _TAG_RESAMPLE, _TAG_BONUS = 1, 2, 3, 4
+
+    def _spec_keys(self, sub, tag: int, i: int):
+        return slot_keys(
+            jax.random.fold_in(jax.random.fold_in(sub, tag), i),
+            self.cfg.n_slots)
+
+    def _decode_spec_impl(self, wp, cache, state, key, block_tables, *, T):
+        """T speculative macro steps. Each: the drafter proposes draft_k
+        tokens autoregressively through its own KV group, the target
+        verifies all draft_k + 1 positions in ONE batched ``decode_multi``
+        forward, and the accepted prefix plus one corrected token is
+        emitted (exact rejection sampling — greedy emission is the target's
+        own argmax chain, bit-exact vs target-only decode).
+
+        Cache-position invariant (both arenas): ``last_token`` sits at
+        position ``pos`` with its KV *not yet written*; a macro step writes
+        positions [pos, pos+k] in BOTH arenas (the drafter's k proposal
+        steps write [pos, pos+k-1], plus one discarded-logits KV-fill step
+        for d_k at pos+k — without it an all-accept step would advance past
+        a draft-arena gap that is never rewritten) and
+        advances pos by the emitted count, so every position < pos always
+        holds accepted-sequence KV and the garbage a rejection leaves
+        behind is overwritten by the next macro step before any read could
+        reach it (attention masks by cache position).
+
+        Emits (T*(k+1), n_slots) token/valid rows — position-major within
+        each macro step, so harvest/scheduler consume them unchanged; a
+        rejected proposal is simply an invalid row.
+        """
+        self.trace_counts["decode"] += 1
+        params, draft_params = wp
+        sc, eos = self.sampling, self.cfg.eos_id
+        k = self.cfg.draft_k
+        S = k + 1
+
+        def step(carry, _):
+            cache, state, key = carry
+            key, sub = jax.random.split(key)
+            run = state.active & ~state.finished
+            caches = dict(self.spec.unpack(cache))
+            pos0 = state.pos
+            if not self.paged:
+                # the dense pool's dynamic_update_slice CLAMPS its start
+                # index: keep the whole S-token write in-bounds. Admission
+                # headroom (max_total + k <= max_len) means this never
+                # binds for a running slot — only frozen ones, whose
+                # outputs are discarded and whose slot is rewritten from
+                # scratch on re-admission.
+                pos0 = jnp.minimum(pos0, self.cfg.max_len - S)
+            rope0 = pos0 + state.rope_delta
+
+            # 1) drafter proposes k tokens through its own arena
+            cur = state.last_token
+            d_toks, d_probs = [], []
+            for i in range(k):
+                inputs = {"token": cur, "pos": pos0 + i, "rope_pos": rope0 + i}
+                if block_tables is not None:
+                    inputs["block_table"] = block_tables
+                lg, caches["draft"] = self.model.decode_step(
+                    draft_params, inputs, caches["draft"],
+                    paged_kernel=self.paged_kernel, lin=self._draft_lin)
+                if sc.greedy:
+                    cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    plg = process_logits(self._for_sampling(lg), sc)
+                    cur = jax.vmap(jax.random.categorical)(
+                        self._spec_keys(sub, self._TAG_DRAFT, i), plg
+                    ).astype(jnp.int32)
+                    d_probs.append(jax.nn.softmax(plg, axis=-1))
+                d_toks.append(cur)
+            d_toks = jnp.stack(d_toks, axis=1)  # (n_slots, k)
+            # KV-fill for d_k at pos0+k (logits discarded): when all k
+            # proposals are accepted, the next macro step resumes at
+            # pos0+k+1 and the drafter attends position pos0+k — which no
+            # later write ever covers. Greedy output would stay exact (the
+            # emission is the target's chain), but the drafter would draft
+            # against garbage from then on and acceptance would collapse.
+            inputs = {"token": cur, "pos": pos0 + k, "rope_pos": rope0 + k}
+            if block_tables is not None:
+                inputs["block_table"] = block_tables
+            _, caches["draft"] = self.model.decode_step(
+                draft_params, inputs, caches["draft"],
+                paged_kernel=self.paged_kernel, lin=self._draft_lin)
+
+            # 2) target verifies [last, d_1..d_k] in one batched forward
+            ver = jnp.concatenate([state.last_token[:, None], d_toks], axis=1)
+            inputs = {"tokens": ver, "pos": pos0, "rope_pos": rope0}
+            if block_tables is not None:
+                inputs["block_table"] = block_tables
+            t_logits, caches["kv"] = self.model.decode_multi(
+                params, inputs, caches["kv"],
+                paged_kernel=self.paged_kernel, lin=self._lin)  # (n, S, V)
+
+            # 3) accept-prefix + corrected resample
+            if sc.greedy:
+                # row i of t_logits conditions on [.., last, d_1..d_i]: the
+                # target's own greedy chain IS the emission — an accepted
+                # d_j equals chain[j-1] by construction, and chain[acc] is
+                # the bonus/correction token. Bit-exact vs target-only.
+                emit = jnp.argmax(t_logits, axis=-1).astype(jnp.int32)
+                ok = (d_toks == emit[:, :k]).astype(jnp.int32)
+                acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
+            else:
+                nB, _, V = t_logits.shape
+                p_all = jax.nn.softmax(process_logits(
+                    self._for_sampling(t_logits.reshape(nB * S, V)), sc
+                ), axis=-1).reshape(nB, S, V)
+                q_all = jnp.stack(d_probs, axis=1)  # (n, k, V)
+                p_d = jnp.take_along_axis(
+                    p_all[:, :k], d_toks[..., None], axis=-1)[..., 0]
+                q_d = jnp.take_along_axis(
+                    q_all, d_toks[..., None], axis=-1)[..., 0]
+                u = jnp.stack([
+                    jax.vmap(jax.random.uniform)(
+                        self._spec_keys(sub, self._TAG_ACCEPT, i))
+                    for i in range(k)], axis=1)  # (n, k)
+                # u in [0, 1): draft == target gives the ratio exactly 1,
+                # so every proposal is accepted (the satellite test's pin)
+                ok = (u < p_d / jnp.maximum(q_d, 1e-30)).astype(jnp.int32)
+                acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
+                # corrected distribution at the first rejection: residual
+                # max(p - q, 0) renormalized; all-zero residual implies
+                # p == q, where rejection has probability 0 — the p_j
+                # fallback only guards the unselected lanes' categorical
+                res = jnp.maximum(p_all[:, :k] - q_all, 0.0)
+                dist = jnp.where(
+                    jnp.sum(res, axis=-1, keepdims=True) > 0,
+                    res, p_all[:, :k])
+                corr = [jax.vmap(jax.random.categorical)(
+                    self._spec_keys(sub, self._TAG_RESAMPLE, j),
+                    jnp.log(dist[:, j])) for j in range(k)]
+                corr.append(jax.vmap(jax.random.categorical)(
+                    self._spec_keys(sub, self._TAG_BONUS, 0),
+                    jnp.log(p_all[:, k])))
+                corr = jnp.stack(corr, axis=1).astype(jnp.int32)  # (n, S)
+                base = jnp.concatenate(
+                    [d_toks, jnp.zeros_like(d_toks[:, :1])], axis=1)
+                sel = jnp.arange(S, dtype=jnp.int32)[None, :] == acc[:, None]
+                emit = jnp.where(sel, corr, base)
+
+            # 4) emission masks + slot bookkeeping (budget, EOS, freeze)
+            remaining = jnp.maximum(state.max_total - state.pos, 0)
+            n_emit = jnp.where(run, jnp.minimum(acc + 1, remaining), 0)
+            val = jnp.arange(S, dtype=jnp.int32)[None, :] < n_emit[:, None]
+            if eos is not None:
+                is_eos = val & (emit == eos)
+                hit = is_eos.astype(jnp.int32)
+                val = val & ((jnp.cumsum(hit, axis=1) - hit) == 0)
+                n_emit = jnp.sum(val.astype(jnp.int32), axis=1)
+            new_pos = state.pos + n_emit
+            done = new_pos >= state.max_total
+            if eos is not None:
+                done = done | jnp.any(val & (emit == eos), axis=1)
+            last = jnp.take_along_axis(
+                emit, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+            state = state._replace(
+                last_token=jnp.where(n_emit > 0, last, state.last_token),
+                pos=new_pos,
+                finished=state.finished | (run & done))
+            cache = self.spec.pack(caches)
+            return (cache, state, key), (emit.T, val.T)
+
+        (cache, state, key), (toks, valid) = jax.lax.scan(
+            step, (cache, state, key), None, length=T)
+        n = toks.shape[-1]
+        return (cache, state, key,
+                toks.reshape(T * S, n), valid.reshape(T * S, n))
+
     def _sample_first(self, logits, lasts, key):
         """Per-row logits at index ``lasts`` -> each request's first token."""
         last = jnp.take_along_axis(
@@ -446,7 +679,7 @@ class Engine:
             finished=state.finished.at[slots].set(done0, mode="drop"))
         return state, max_total
 
-    def _forward_wave(self, params, tokens, plens, vis):
+    def _forward_wave(self, params, tokens, plens, vis, lin):
         """The admission forward: full-sequence pass over the (padded) wave,
         vision prefix prepended for VLM waves, seq_lens pinning recurrent
         snapshots to each row's last valid token. Returns (logits, states,
@@ -459,38 +692,53 @@ class Engine:
         logits, _, states = self.model.forward(params, inputs,
                                                return_cache=True,
                                                seq_lens=plens,
-                                               lin=self._lin)
+                                               lin=lin)
         eff = plens + n_patches
         delta = jnp.full_like(plens, _rope_delta(n_patches))
         return logits, states, eff, delta
 
-    def _prefill_pool_impl(self, params, cache, state, key, tokens, plens,
+    def _wave_states(self, wp, tokens, plens, vis):
+        """Admission forward(s): the target's wave pass, plus — under
+        self-speculation — the drafter's pass over the SAME wave inside the
+        same jitted program (one prefill trace either way), its KV packed
+        as the spec's "draft" group. First-token logits always come from
+        the target, so admission semantics match target-only serving."""
+        logits, states, eff, delta = self._forward_wave(
+            wp[0], tokens, plens, vis, self._lin)
+        if self.spec_decode:
+            _, d_states, _, _ = self._forward_wave(
+                wp[1], tokens, plens, vis, self._draft_lin)
+            states = self.spec.pack({"kv": states, "draft": d_states})
+        return logits, states, eff, delta
+
+    def _prefill_pool_impl(self, wp, cache, state, key, tokens, plens,
                            slots, max_news, vis):
         """One admission wave into the per-slot pool (dense KV rows and/or
         recurrent leaves): forward the (padded) prompts, sample first
         tokens, scatter every spec group + slot metadata."""
         self.trace_counts["prefill"] += 1
-        logits, states, eff, delta = self._forward_wave(
-            params, tokens, plens, vis)
+        logits, states, eff, delta = self._wave_states(
+            wp, tokens, plens, vis)
         first, key = self._sample_first(logits, eff - 1, key)
         cache = SSPEC.admit_dense(self.spec, cache, states, slots, KV_QSCALE)
         state, _ = self._admit_state(state, slots, first, eff, max_news,
                                      delta)
         return cache, state, key, first
 
-    def _prefill_paged_impl(self, params, cache, state, pstate, key, tokens,
+    def _prefill_paged_impl(self, wp, cache, state, pstate, key, tokens,
                             plens, slots, max_news, vis):
         """Fresh-request admission into the paged pool. Same forward as the
         per-slot path (bit-exact parity); KV groups scatter through the
         freshly-allocated block tables, recurrent groups slot-scatter."""
         self.trace_counts["prefill"] += 1
         cfg = self.cfg
-        logits, states, eff, delta = self._forward_wave(
-            params, tokens, plens, vis)
+        logits, states, eff, delta = self._wave_states(
+            wp, tokens, plens, vis)
         first, key = self._sample_first(logits, eff - 1, key)
 
         max_total = eff + jnp.maximum(max_news, 1) - 1
-        n_blocks = (max_total + cfg.page_size - 1) // cfg.page_size
+        n_blocks = (max_total + self._draft_pad
+                    + cfg.page_size - 1) // cfg.page_size
         pstate, ok = PAGE.alloc(pstate, slots, n_blocks)
         bt = pstate.block_tables.at[slots].get(
             mode="fill", fill_value=cfg.pool_pages)  # (K, MB)
@@ -515,27 +763,37 @@ class Engine:
             lambda a, b: jnp.where(ok, a, b), new_state, state)
         return cache, state, pstate, key, first, ok
 
-    def _prefill_shared_impl(self, params, cache, state, pstate, key, tokens,
+    def _prefill_shared_impl(self, wp, cache, state, pstate, key, tokens,
                              suff_lens, shared_lens, slots, max_news,
                              shared_pages):
         """Shared-prefix admission (pure token-KV specs only): map the
         registered prefix pages (refcounted) into each slot's block table,
         then prefill ONLY the suffix through the paged pool — the shared
-        pages' prefill is skipped entirely."""
+        pages' prefill is skipped entirely. Under self-speculation the
+        suffix prefills BOTH arenas (the drafter attends the same shared
+        pages — its arena got its copy at register_prefix time)."""
         self.trace_counts["prefill"] += 1
         cfg = self.cfg
         plens = shared_lens + suff_lens
         max_total = plens + jnp.maximum(max_news, 1) - 1
-        n_blocks = (max_total + cfg.page_size - 1) // cfg.page_size
+        n_blocks = (max_total + self._draft_pad
+                    + cfg.page_size - 1) // cfg.page_size
         n_shared = shared_lens // cfg.page_size
         pstate, ok = PAGE.alloc(pstate, slots, n_blocks, n_shared, shared_pages)
         bt = pstate.block_tables.at[slots].get(
             mode="fill", fill_value=cfg.pool_pages)
 
-        last, cache = self.model.prefill_paged(
-            params, {"tokens": tokens, "pos": shared_lens,
-                     "last": suff_lens - 1, "block_table": bt}, cache,
+        inp = {"tokens": tokens, "pos": shared_lens,
+               "last": suff_lens - 1, "block_table": bt}
+        caches = dict(self.spec.unpack(cache))
+        last, caches["kv"] = self.model.prefill_paged(
+            wp[0], inp, caches["kv"],
             paged_kernel=self.paged_kernel, lin=self._lin)
+        if self.spec_decode:
+            _, caches["draft"] = self.model.prefill_paged(
+                wp[1], inp, caches["draft"],
+                paged_kernel=self.paged_kernel, lin=self._draft_lin)
+        cache = self.spec.pack(caches)
         key, sub = jax.random.split(key)
         first = sample_tokens(self._for_sampling(last), sub, self.sampling)
 
@@ -545,20 +803,27 @@ class Engine:
             lambda a, b: jnp.where(ok, a, b), new_state, state)
         return cache, state, pstate, key, first, ok
 
-    def _register_impl(self, params, cache, pstate, tokens):
+    def _register_impl(self, wp, cache, pstate, tokens):
         """Prefetch a shared prefix: reserve pages off the free list with a
-        permanent hold and prefill the prefix KV into them once."""
+        permanent hold and prefill the prefix KV into them once — into both
+        arenas under self-speculation (one set of pages, two KV groups)."""
         cfg = self.cfg
         n_full = tokens.shape[1] // cfg.page_size
         pstate, pages, ok = PAGE.reserve(pstate, n_full)
         bt = jnp.full((1, cfg.max_blocks), cfg.pool_pages,
                       jnp.int32).at[0, :n_full].set(pages)
-        _, cache = self.model.prefill_paged(
-            params, {"tokens": tokens, "pos": jnp.zeros((1,), jnp.int32),
-                     "last": jnp.asarray([tokens.shape[1] - 1], jnp.int32),
-                     "block_table": bt}, cache,
+        inp = {"tokens": tokens, "pos": jnp.zeros((1,), jnp.int32),
+               "last": jnp.asarray([tokens.shape[1] - 1], jnp.int32),
+               "block_table": bt}
+        caches = dict(self.spec.unpack(cache))
+        _, caches["kv"] = self.model.prefill_paged(
+            wp[0], inp, caches["kv"],
             paged_kernel=self.paged_kernel, lin=self._lin)
-        return cache, pstate, pages, ok
+        if self.spec_decode:
+            _, caches["draft"] = self.model.prefill_paged(
+                wp[1], inp, caches["draft"],
+                paged_kernel=self.paged_kernel, lin=self._draft_lin)
+        return self.spec.pack(caches), pstate, pages, ok
 
     def _release_impl(self, cache, state, pstate, slots):
         """Free harvested slots in ONE program: clear the slot scalars, zero
@@ -572,13 +837,21 @@ class Engine:
         return cache, state, pstate
 
     def _decode_fn(self, T: int):
+        """Compiled decode program for a T-row chunk. Target-only: T scan
+        steps, one token row each. Self-speculation: ceil(T / (k+1)) macro
+        steps, each emitting k+1 rows (so the returned row count is T
+        rounded up to a macro-step multiple)."""
         if T not in self._decode_jit:
             W, C, S, PS, R = self._prog_shardings()
             bt = PS.block_tables if (self._sh is not None and self.paged) \
                 else R
+            if self.spec_decode:
+                m = -(-T // (self.cfg.draft_k + 1))
+                impl = functools.partial(self._decode_spec_impl, T=m)
+            else:
+                impl = functools.partial(self._decode_impl, T=T)
             self._decode_jit[T] = self._jit(
-                functools.partial(self._decode_impl, T=T), (1, 2, 3),
-                (W, C, S, R, bt), (C, S, R, R, R))
+                impl, (1, 2, 3), (W, C, S, R, bt), (C, S, R, R, R))
         return self._decode_jit[T]
 
     # ------------------------------------------------------------------
@@ -659,7 +932,7 @@ class Engine:
         if not self.paged:
             return 0
         prompt = np.asarray(prompt)
-        mt = n_vis + len(prompt) + max(max_new, 1) - 1
+        mt = n_vis + len(prompt) + max(max_new, 1) - 1 + self._draft_pad
         n_blocks = -(-mt // self.cfg.page_size)
         if match is Engine._UNMATCHED:
             match = self.prefix_match(prompt)
@@ -729,7 +1002,7 @@ class Engine:
             raise PagesExhausted(
                 f"prefix needs {n_full} pages, {self._free_pages} free")
         self.cache, self.pstate, pages, ok = self._register_jit(
-            self.params, self.cache, self.pstate,
+            self._wp, self.cache, self.pstate,
             jnp.asarray(tokens[:shared_len][None]))
         assert bool(ok), "host free-page mirror out of sync with device"
         self._free_pages -= n_full
@@ -784,11 +1057,14 @@ class Engine:
                 f"{self.model.cfg.family!r} has no vision frontend; "
                 "requests must not carry vision_embeds")
         for p, mn, v in zip(prompts, max_news, vision):
-            total = _vis_patches(v) + len(p) + max(mn, 1) - 1
+            total = _vis_patches(v) + len(p) + max(mn, 1) - 1 \
+                + self._draft_pad
             if total > self.cfg.max_len:
+                pad = (f" (draft_k={self.cfg.draft_k} headroom included)"
+                       if self._draft_pad else "")
                 raise ValueError(
                     f"request needs {total} cache slots > "
-                    f"max_len={self.cfg.max_len}")
+                    f"max_len={self.cfg.max_len}{pad}")
         if not self.paged:
             first = np.zeros(len(prompts), np.int32)
             for idxs, vis_p in self._split_by_patches(vision):
@@ -876,7 +1152,7 @@ class Engine:
             prompts, slot_ids, max_news,
             n_vis=0 if vis is None else vis.shape[1])
         self.cache, self.state, self.key, first = self._prefill_jit(
-            self.params, self.cache, self.state, self.key,
+            self._wp, self.cache, self.state, self.key,
             jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
             jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
         return np.asarray(first)[:K]
@@ -887,7 +1163,7 @@ class Engine:
             n_vis=0 if vis is None else vis.shape[1])
         self.cache, self.state, self.pstate, self.key, first, ok = \
             self._prefill_jit(
-                self.params, self.cache, self.state, self.pstate, self.key,
+                self._wp, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
                 jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
         assert bool(ok), "host free-page mirror out of sync with device"
@@ -903,7 +1179,7 @@ class Engine:
         sh_v = np.asarray([entry.length] * K + [0] * (Kp - K), np.int32)
         self.cache, self.state, self.pstate, self.key, first, ok = \
             self._prefill_shared_jit(
-                self.params, self.cache, self.state, self.pstate, self.key,
+                self._wp, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(slen_v), jnp.asarray(sh_v),
                 jnp.asarray(slot_v), jnp.asarray(mn_v),
                 jnp.asarray(entry.pages))
@@ -922,7 +1198,7 @@ class Engine:
         T = T or self.cfg.chunk
         bt = self.pstate.block_tables if self.paged else None
         self.cache, self.state, self.key, toks, valid = self._decode_fn(T)(
-            self.params, self.cache, self.state, self.key, bt)
+            self._wp, self.cache, self.state, self.key, bt)
         return toks, valid
 
     def harvest(self, toks, valid):
@@ -967,16 +1243,46 @@ class Engine:
                                 [max_new] * B,
                                 vision=None if vision is None
                                 else list(np.asarray(vision)))
-        if max_new > 1:
-            toks, valid = self.decode_chunk(max_new - 1)
-            t, v, _, _ = self.harvest(toks, valid)
-            t, v = t[:, :B].T, v[:, :B].T  # (B, max_new-1)
+        if max_new <= 1:
+            return first[:, None]
+        if self.spec_decode:
+            return self._generate_spec(first, B, max_new)
+        toks, valid = self.decode_chunk(max_new - 1)
+        t, v, _, _ = self.harvest(toks, valid)
+        t, v = t[:, :B].T, v[:, :B].T  # (B, max_new-1)
+        if self.cfg.eos_id is None:
+            assert v.all(), "same-shape wave must stay active to the end"
+        else:
+            t = np.where(v, t, self.cfg.eos_id)
+        return np.concatenate([first[:, None], t], axis=1)
+
+    def _generate_spec(self, first, B: int, max_new: int):
+        """Speculative one-wave drive: a macro step emits 1..k+1 tokens per
+        slot, so slots finish at different chunk counts — loop decode
+        chunks until every slot is done, then compact each slot's valid
+        rows in stream order (harvest's contract). Without eos_id every
+        slot yields exactly max_new - 1 decode tokens; with it, rows past a
+        slot's EOS are padded with eos_id like the target-only path."""
+        need = max_new - 1
+        rows_t, rows_v = [], []
+        while True:
+            toks, valid = self.decode_chunk(min(self.cfg.chunk, need))
+            t, v, fin, _ = self.harvest(toks, valid)
+            rows_t.append(t[:, :B])
+            rows_v.append(v[:, :B])
+            if fin[:B].all():
+                break
+        t = np.concatenate(rows_t, axis=0)
+        v = np.concatenate(rows_v, axis=0)
+        pad = self.cfg.eos_id if self.cfg.eos_id is not None else 0
+        out = np.full((B, need), pad, np.int32)
+        for b in range(B):
+            seq = t[v[:, b], b][:need]
             if self.cfg.eos_id is None:
-                assert v.all(), "same-shape wave must stay active to the end"
-            else:
-                t = np.where(v, t, self.cfg.eos_id)
-            return np.concatenate([first[:, None], t], axis=1)
-        return first[:, None]
+                assert len(seq) == need, \
+                    "spec wave must emit every budgeted token"
+            out[b, : len(seq)] = seq
+        return np.concatenate([first[:, None], out], axis=1)
 
 
 def generate(model: Model, params, prompts, max_new: int,

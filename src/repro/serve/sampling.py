@@ -66,13 +66,18 @@ def slot_keys(key, n: int):
         key, jnp.arange(n, dtype=jnp.uint32))
 
 
-def sample_tokens(logits, key, sc: SamplingConfig):
-    """logits (B, V) -> sampled token ids (B,) int32. Pure and jit-safe;
-    ``sc`` must be static at trace time. top-k truncation applies first,
-    then top-p renormalizes over the survivors (the usual composition).
-    Each row draws from its own :func:`slot_keys` key (see there for why)."""
+def process_logits(logits, sc: SamplingConfig):
+    """The sampling transform minus the draw: (B, V) raw logits ->
+    temperature-scaled f32 logits with the top-k, then top-p survivors kept
+    and everything else at -inf. ``sample_tokens`` draws categorically from
+    this; speculative decoding's exact rejection sampling computes both the
+    target and drafter *processed* distributions (``processed_probs``)
+    through the SAME transform — that identity is what makes acceptance
+    probability p_t/p_d exact, so spec decode with draft == target accepts
+    every proposal. Non-greedy configs only."""
     if sc.greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        raise ValueError("process_logits is the stochastic path; greedy "
+                         "sampling is argmax and has no distribution")
     logits = logits.astype(jnp.float32) / sc.temperature
     if sc.top_k > 0:
         # keep EXACTLY top_k candidates: comparing against the k-th value
@@ -85,6 +90,23 @@ def sample_tokens(logits, key, sc: SamplingConfig):
         logits = jnp.where(keep, logits, -jnp.inf)
     if sc.top_p < 1.0:  # __post_init__ guarantees top_p > 0
         logits = jnp.where(_nucleus_mask(logits, sc.top_p), logits, -jnp.inf)
+    return logits
+
+
+def processed_probs(logits, sc: SamplingConfig):
+    """(B, V) raw logits -> the exact probability distribution
+    ``sample_tokens`` draws from (f32, masked tokens at exactly 0)."""
+    return jax.nn.softmax(process_logits(logits, sc), axis=-1)
+
+
+def sample_tokens(logits, key, sc: SamplingConfig):
+    """logits (B, V) -> sampled token ids (B,) int32. Pure and jit-safe;
+    ``sc`` must be static at trace time. top-k truncation applies first,
+    then top-p renormalizes over the survivors (the usual composition).
+    Each row draws from its own :func:`slot_keys` key (see there for why)."""
+    if sc.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = process_logits(logits, sc)
     return jax.vmap(
         lambda k, l: jax.random.categorical(k, l, axis=-1)
     )(slot_keys(key, logits.shape[0]), logits).astype(jnp.int32)

@@ -103,7 +103,14 @@ class Scheduler:
                         continue
                     new = t_np[v_np[:, s], s]
                     partial[rid].extend(int(t) for t in new)
-                    tpot[rid].extend([chunk_dt / T] * len(new))
+                    if eng.spec_decode:
+                        # a spec chunk's row count is inflated by rejected
+                        # proposals; per-token latency is the chunk time
+                        # over the tokens this slot actually got
+                        tpot[rid].extend([chunk_dt / max(len(new), 1)]
+                                         * len(new))
+                    else:
+                        tpot[rid].extend([chunk_dt / T] * len(new))
                     if fin[s]:
                         done.append(Completion(
                             rid, len(req_of[rid].tokens),

@@ -121,6 +121,149 @@ class TestRO:
         assert l_full <= l_rgs + 0.02, (l_full, l_rgs)
 
 
+class TestROSparsityContract:
+    """Regression: ro_fit used to order each round prune->RO, so the FINAL
+    round's RMSprop updates landed after the last mask application and the
+    returned block violated 2:4 (sparsity_check24 failed, compressed24=auto
+    silently fell back to dense). ro_fit now masks updates, zeroes stale
+    second-moment state on re-prune, and re-applies the prune after the
+    final round."""
+
+    def _block_setup(self, tiny_lm, ro_iters, ro_samples=4):
+        model, params, calib = tiny_lm
+        cfg = model.cfg
+        block_fn = make_block_fn(cfg)
+        bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        xs = jnp.take(params["embed"], calib[:8], axis=0)
+        pcfg = PruneConfig(method="wanda++", pattern="2:4", ro_iters=ro_iters,
+                           ro_samples=ro_samples, n_calib=8, ro_lr=1e-3)
+        prunable = B.prunable_table(cfg)
+        G = regional_grad_rms(block_fn, bp, xs, chunk=4)
+        dense_out, _ = block_io_stats(block_fn, bp, xs)
+
+        def prune_fn(bp_):
+            _, xn = block_io_stats(block_fn, bp_, xs)
+            from repro.core.pruner import apply_prune
+            return apply_prune(bp_, xn, G, pcfg, prunable, with_mask=True)
+
+        return block_fn, bp, xs, dense_out, pcfg, prunable, prune_fn
+
+    @pytest.mark.parametrize("ro_iters", [1, 2, 3])
+    def test_ro_fit_output_is_exactly_24(self, tiny_lm, ro_iters):
+        """ro_fit's returned block passes sparsity_check24 for every
+        ro_iters value — including 1 (the old code's worst case: its only
+        prune ran before its only round of dense updates)."""
+        from repro.core import ro as RO
+        from repro.kernels.ops import sparsity_check24
+        block_fn, bp, xs, dense_out, pcfg, prunable, prune_fn = \
+            self._block_setup(tiny_lm, ro_iters)
+        fitted, losses = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg,
+                                   jax.random.PRNGKey(3), prune_fn)
+        assert losses.shape == (ro_iters,)
+        for name, path in prunable.items():
+            w = tree_get(fitted, path)
+            if w is None:
+                continue
+            assert sparsity_check24(w), f"{name} violates 2:4 after ro_fit"
+            assert abs(float((w == 0).mean()) - 0.5) < 1e-6, name
+
+    def test_legacy_bare_prune_fn_still_24(self, tiny_lm):
+        """A legacy prune_fn returning a bare block (no keep-mask) must
+        also yield an exactly-sparse result — the final re-prune alone
+        guarantees it."""
+        from repro.core import ro as RO
+        from repro.core.pruner import apply_prune
+        from repro.kernels.ops import sparsity_check24
+        block_fn, bp, xs, dense_out, pcfg, prunable, _ = \
+            self._block_setup(tiny_lm, ro_iters=1)
+        G = regional_grad_rms(block_fn, bp, xs, chunk=4)
+
+        def bare_prune_fn(bp_):
+            _, xn = block_io_stats(block_fn, bp_, xs)
+            return apply_prune(bp_, xn, G, pcfg, prunable)
+
+        fitted, _ = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg,
+                              jax.random.PRNGKey(3), bare_prune_fn)
+        w = tree_get(fitted, prunable["attn.wq"])
+        assert sparsity_check24(w)
+
+    def test_two_round_determinism_vs_manual(self, tiny_lm):
+        """Bit-exact pin of the full two-round contract: masked RMSprop
+        updates, second-moment zeroing at re-pruned positions, and the
+        final re-prune — against an independent per-sample loop."""
+        from repro.core import ro as RO
+        block_fn, bp, xs, dense_out, pcfg, prunable, prune_fn = \
+            self._block_setup(tiny_lm, ro_iters=2)
+        key = jax.random.PRNGKey(7)
+        fitted, losses = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg, key,
+                                   prune_fn)
+
+        # --- manual simulation (no lax.scan, explicit rmsprop math) ---
+        tm = jax.tree_util.tree_map
+
+        def loss_one(bp_, x1, y1):
+            out = block_fn(bp_, x1[None])[0]
+            d = out.astype(jnp.float32) - y1.astype(jnp.float32)
+            return jnp.mean(d * d)
+
+        vg = jax.value_and_grad(loss_one)
+        m_bp = bp
+        opt = tm(lambda p: jnp.zeros(p.shape, jnp.float32), bp)
+        k = key
+        m_losses = []
+        for _ in range(pcfg.ro_iters):
+            m_bp, keep = prune_fn(m_bp)
+            opt = tm(lambda v, m: v * m.astype(v.dtype), opt, keep)
+            k, sub = jax.random.split(k)
+            xs_ro, dense_ro = RO.select_ro_inputs(sub, xs, dense_out,
+                                                  pcfg.ro_samples)
+            per_sample = []
+            for i in range(pcfg.ro_samples):
+                loss, g = vg(m_bp, xs_ro[i], dense_ro[i])
+                per_sample.append(loss)
+                g = tm(lambda gg, m: gg * m.astype(gg.dtype), g, keep)
+                opt = tm(lambda v, gg: 0.99 * v
+                         + 0.01 * jnp.square(gg.astype(jnp.float32)), opt, g)
+                m_bp = tm(lambda p, gg, v: (p.astype(jnp.float32)
+                                            - pcfg.ro_lr * gg.astype(jnp.float32)
+                                            / (jnp.sqrt(v) + 1e-8)
+                                            ).astype(p.dtype), m_bp, g, opt)
+            m_losses.append(jnp.stack(per_sample).mean())
+        m_bp, _ = prune_fn(m_bp)
+
+        np.testing.assert_allclose(np.asarray(losses),
+                                   np.asarray(jnp.stack(m_losses)),
+                                   rtol=1e-6)
+        for name, path in prunable.items():
+            a, b = tree_get(fitted, path), tree_get(m_bp, path)
+            if a is None:
+                continue
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6, err_msg=name)
+
+    def test_state_zeroed_on_reprune(self):
+        """zero_masked_state drops variance exactly at mask==0."""
+        from repro.core import ro as RO
+        st = {"w": jnp.arange(8, dtype=jnp.float32)}
+        keep = {"w": jnp.array([1, 0, 1, 0, 1, 0, 1, 0], jnp.bool_)}
+        out = RO.zero_masked_state(st, keep)["w"]
+        np.testing.assert_array_equal(np.asarray(out),
+                                      [0., 0., 2., 0., 4., 0., 6., 0.])
+
+    def test_masked_update_freezes_pruned_entries(self):
+        """rmsprop_update with a keep-mask moves neither the weight nor the
+        second-moment state at pruned positions."""
+        from repro.core import ro as RO
+        p = {"w": jnp.ones(4, jnp.float32)}
+        g = {"w": jnp.full((4,), 2.0, jnp.float32)}
+        v = {"w": jnp.zeros(4, jnp.float32)}
+        keep = {"w": jnp.array([1, 0, 1, 0], jnp.bool_)}
+        np_, nv = RO.rmsprop_update(p, g, v, lr=0.1, mask=keep)
+        assert float(np_["w"][1]) == 1.0 and float(np_["w"][3]) == 1.0
+        assert float(nv["w"][1]) == 0.0 and float(nv["w"][3]) == 0.0
+        assert float(np_["w"][0]) != 1.0 and float(nv["w"][0]) > 0.0
+
+
 class TestMethodOrdering:
     def test_wanda_beats_magnitude_on_scaled_inputs(self):
         """Wanda's premise: with wildly-scaled input channels, |W|*||X||

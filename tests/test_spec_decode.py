@@ -1,0 +1,193 @@
+"""Self-speculative decoding: a 2:4-pruned drafter proposes draft_k tokens
+per macro step, the target verifies them in one batched forward.
+
+The contract under test: greedy spec decode is BIT-EXACT against target-only
+decode (the emission is always the target's own argmax chain — the drafter
+only decides how many of those tokens land per device step), and sampled
+spec decode with drafter == target accepts every proposal (exact rejection
+sampling: acceptance probability p_t/p_d == 1 when the distributions match).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import magnitude_prune24
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.models.state_spec import with_draft_group
+from repro.serve import Engine, EngineConfig, Request, SamplingConfig
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # the cheap 2:4 drafter: exact magnitude pruning passes sparsity_check24
+    # so the engine serves it through the compressed24 path, same as a full
+    # Wanda++ prune (whose output the RO regression tests pin to 2:4)
+    draft = magnitude_prune24(cfg, params)
+    return model, params, draft
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+def _engine(model, params, *, B, P, G, draft=None, k=0, paged=True,
+            sampling=SamplingConfig(), eos=None, chunk=None):
+    cfg = EngineConfig(n_slots=B, max_len=P + G + k, chunk=chunk or G - 1,
+                       prefill_buckets=(P,), paged=paged, draft_k=k,
+                       eos_id=eos)
+    return Engine(model, params, cfg, sampling, draft_params=draft)
+
+
+# ---------------------------------------------------------------------------
+# greedy spec decode == target-only, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "dense-pool"])
+@pytest.mark.parametrize("k", [1, 3])
+def test_greedy_spec_bit_exact(dense, paged, k):
+    model, params, draft = dense
+    B, P, G = 4, 8, 10
+    prompts = _prompts(model.cfg, B, P)
+    ref = _engine(model, params, B=B, P=P, G=G, paged=paged
+                  ).generate(prompts, G)
+    eng = _engine(model, params, B=B, P=P, G=G, draft=draft, k=k, paged=paged)
+    assert eng.compressed24_draft > 0  # drafter really serves compacted 2:4
+    out = eng.generate(prompts, G)
+    np.testing.assert_array_equal(out, ref)
+    # the whole spec wave still runs as ONE traced decode program
+    assert eng.trace_counts["decode"] == 1
+
+
+def test_greedy_spec_bit_exact_chunked(dense):
+    """Chunk boundaries fall mid-wave (chunk < need): the accepted-length
+    bookkeeping must carry pos/last_token across chunks exactly."""
+    model, params, draft = dense
+    B, P, G = 3, 8, 13
+    prompts = _prompts(model.cfg, B, P)
+    ref = _engine(model, params, B=B, P=P, G=G).generate(prompts, G)
+    eng = _engine(model, params, B=B, P=P, G=G, draft=draft, k=2, chunk=4)
+    np.testing.assert_array_equal(eng.generate(prompts, G), ref)
+
+
+def test_greedy_spec_eos_parity(dense):
+    """EOS truncation: spec decode must stop each row where target-only
+    does, and pad identically."""
+    model, params, draft = dense
+    B, P, G = 4, 8, 12
+    prompts = _prompts(model.cfg, B, P, seed=3)
+    # pick an eos that actually fires mid-stream for at least one row
+    probe = _engine(model, params, B=B, P=P, G=G).generate(prompts, G)
+    eos = int(probe[0, G // 2])
+    ref = _engine(model, params, B=B, P=P, G=G, eos=eos).generate(prompts, G)
+    eng = _engine(model, params, B=B, P=P, G=G, draft=draft, k=3, eos=eos)
+    np.testing.assert_array_equal(eng.generate(prompts, G), ref)
+
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "dense-pool"])
+def test_scheduler_stream_greedy_parity(dense, paged):
+    """Mixed-length requests through the continuous-batching scheduler:
+    every completion's token stream matches the target-only engine's."""
+    model, params, draft = dense
+    cfg = model.cfg
+    B, P, G = 3, 8, 9
+    rng = np.random.default_rng(11)
+    reqs = [Request(i,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(P // 2, P + 1))
+                                 ).astype(np.int32),
+                    int(rng.integers(G // 2, G + 1)))
+            for i in range(7)]
+    outs = {}
+    for k in (0, 2):
+        eng = _engine(model, params, B=B, P=P, G=G, paged=paged,
+                      draft=draft if k else None, k=k, chunk=4)
+        comps = Scheduler(eng).run(
+            [Request(r.rid, r.tokens.copy(), r.max_new) for r in reqs])
+        outs[k] = {c.rid: c.tokens for c in comps}
+    assert set(outs[0]) == set(outs[2]) == {r.rid for r in reqs}
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[2][rid], outs[0][rid])
+
+
+# ---------------------------------------------------------------------------
+# sampled spec decode: exact rejection sampling
+# ---------------------------------------------------------------------------
+
+def test_sampled_draft_equals_target_accepts_all(dense):
+    """With draft_params == target params the processed distributions are
+    identical, so acceptance p_t/p_d == 1 for every proposal: the wave must
+    finish in the MINIMAL number of macro steps, every emitted row valid
+    (mean accepted length == draft_k)."""
+    model, params, _ = dense
+    k = 3
+    B, P = 4, 8
+    need = 2 * (k + 1)  # decode tokens; exactly 2 macro steps if all accept
+    G = need + 1
+    sc = SamplingConfig(temperature=0.8, top_k=20, seed=5)
+    eng = _engine(model, params, B=B, P=P, G=G, draft=params, k=k,
+                  sampling=sc, chunk=need)
+    prompts = _prompts(model.cfg, B, P, seed=7)
+    eng.reset()
+    eng.admit_wave(list(prompts), list(range(B)), [G] * B)
+    toks, valid = eng.decode_chunk(need)
+    t, v, fin, _ = eng.harvest(toks, valid)
+    assert fin[:B].all(), "all-accept wave must finish in minimal steps"
+    assert v[:, :B].all(), (
+        "draft == target must accept every proposal (no rejected rows)")
+    assert t.shape[0] == need
+
+
+def test_sampled_spec_rows_are_valid_samples(dense):
+    """With a real (pruned) drafter, sampled spec decode still emits
+    exactly the budgeted number of tokens per slot — rejections cost device
+    steps, never tokens."""
+    model, params, draft = dense
+    B, P, G = 4, 8, 10
+    sc = SamplingConfig(temperature=1.0, top_k=30, seed=9)
+    eng = _engine(model, params, B=B, P=P, G=G, draft=draft, k=2, sampling=sc)
+    out = eng.generate(_prompts(model.cfg, B, P, seed=2), G)
+    assert out.shape == (B, G)
+    assert (out >= 0).all() and (out < model.cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing contracts
+# ---------------------------------------------------------------------------
+
+def test_draft_group_spec_rejects_recurrent():
+    cfg = get_config("mamba2-1.3b").reduced()
+    with pytest.raises(ValueError, match="KV group"):
+        with_draft_group(Model(cfg).cache_spec)
+
+
+def test_engine_arg_validation(dense):
+    model, params, draft = dense
+    with pytest.raises(ValueError, match="draft_params"):
+        _engine(model, params, B=2, P=8, G=4, k=2)
+    with pytest.raises(ValueError, match="draft_k"):
+        Engine(model, params,
+               EngineConfig(n_slots=2, max_len=16, chunk=3,
+                            prefill_buckets=(8,)),
+               SamplingConfig(), draft_params=draft)
+
+
+def test_admission_headroom_includes_draft_k(dense):
+    """A request whose accepted sequence fits but whose drafter run-ahead
+    does not must be refused at admission, naming the draft_k padding."""
+    model, params, draft = dense
+    B, P, G, k = 2, 8, 8, 3
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=B, max_len=P + G, chunk=G - 1,
+                              prefill_buckets=(P,), draft_k=k),
+                 SamplingConfig(), draft_params=draft)
+    prompts = _prompts(model.cfg, B, P)
+    with pytest.raises(ValueError, match="draft_k"):
+        eng.admit_wave(list(prompts), list(range(B)), [G] * B)
