@@ -1,7 +1,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-kernels test-serve-families test-serve-mesh \
-	test-sparse-serve test-spec-decode analyze ci bench bench-serving serve
+	test-sparse-serve test-spec-decode test-chunked-prefill analyze ci \
+	bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -41,6 +42,14 @@ test-sparse-serve:
 test-spec-decode:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_spec_decode.py
+
+# chunked-prefill lane: the unified step program — Sq>1 kernel-mode
+# parity, chunked-vs-waved greedy bit-exactness (engine + scheduler +
+# spec-decode), TTFT/TPOT attribution, eligibility pins, and the
+# zero-retrace trace cells (forced CPU, like the family lane)
+test-chunked-prefill:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_chunked_prefill.py
 
 # mesh lane: sharded-vs-single-device serving parity (slow-marked subprocess
 # tests; each child forces an 8-device CPU host itself, so the parent env is

@@ -123,6 +123,26 @@ def main() -> None:
             print(f"claim,table9_spec_decode_speedup,{s['speedup']:.2f}x")
             print(f"claim,table9_spec_decode_mean_accepted,"
                   f"{s['mean_accepted']:.2f}_of_{s['best_k']}")
+        if "chunked" in r:
+            # chunked prefill's whole point is the TTFT tail: streaming
+            # the prompt through the decode scan's chunk lane must halve
+            # waved admission-to-first-token p95 in executed forward
+            # rows at equal-or-better rows-per-token, at bit-exact
+            # greedy output (asserted inside the benchmark). Rows, not
+            # CPU wall: on serving hardware decode is weight-bound and
+            # rows are time; XLA-CPU's per-step fixed cost inverts that
+            # regime, so wall numbers are reported but do not gate.
+            ck = r["chunked"]
+            print(f"claim,table9_chunked_prefill_ttft,"
+                  f"{ck['beats_waved_ttft']}")
+            print(f"claim,table9_chunked_ttft_p95_ratio,"
+                  f"{ck['ttft_p95_ratio']:.2f}")
+            print(f"claim,table9_chunked_rows_per_tok,"
+                  f"{ck['chunked_rows_per_tok']:.1f}_vs_waved_"
+                  f"{ck['waved_rows_per_tok']:.1f}")
+            print(f"claim,table9_chunked_stream_tok_per_s,"
+                  f"{ck['chunked_stream_tok_per_s']:.0f}_vs_waved_"
+                  f"{ck['waved_stream_tok_per_s']:.0f}")
 
 
 if __name__ == "__main__":

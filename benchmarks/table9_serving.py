@@ -55,6 +55,22 @@ measures:
      token-for-token), with the mean accepted length reported per
      draft_k — the accept rate IS the paper's quality story, restated
      as serving throughput.
+ 11. chunked prefill vs waved admission: the same mixed request list
+     through the unified chunked step program (prompts stream through
+     the decode scan's chunk lane; no prefill program exists) vs the
+     waved fallback (every admission pauses decode for a bucket-padded
+     prefill forward). TTFT on both paths is admission of the request's
+     first chunk to its first emitted token (the scheduler's per-chunk
+     attribution; slot queueing is capacity, which chunking does not
+     change), measured in the deterministic unit both paths share:
+     forward rows the engine computed in between (Completion.ttft_rows,
+     from the executed schedules). Greedy tokens must match per
+     request, and the claim gate requires chunked TTFT p95 < 0.5x waved
+     in rows at equal-or-better rows-per-emitted-token — head-of-line
+     blocking restated as tail latency. CPU wall clocks are reported
+     alongside but do not gate (section 8's precedent: XLA-CPU's
+     per-step fixed cost inverts the weight-bound regime the rows
+     model the claim targets).
 
 Rows land in the usual CSV; a JSONL record for results/report.py
 --serving is written next to the other results.
@@ -273,34 +289,54 @@ def compressed_section():
         dense_bytes += w.size * w.dtype.itemsize
     params = dict(params, blocks=blocks)
 
-    B9, P9, G9, CH9 = 8, 16, 33, 2  # first token + 32 decode = 16 chunks of 2
+    # Measurement discipline: off-TPU the compressed engine serves a
+    # build-time dense copy of the packed weights, so its per-step compute
+    # graph is IDENTICAL to compressed24="off" — the gate below is purely a
+    # timing measurement of the masked engine's per-call ``w * mask``
+    # re-materialisation. At a short decode span, best-of-2 CPU wall times
+    # sit inside scheduler jitter and the gate flips sign run-to-run (a
+    # recorded beats_masked=false at 352-vs-377 tok/s was exactly that);
+    # 64 decode tokens + best-of-5 lifts the re-masking overhead above
+    # per-run jitter, and the rounds INTERLEAVE the three modes so a slow
+    # machine phase (the full benchmark suite drifts over minutes) lands
+    # on all of them equally instead of biasing whichever mode's block
+    # it overlaps.
+    B9, P9, G9, CH9 = 8, 16, 65, 2  # first token + 64 decode = 32 chunks of 2
     prompts = list(np.asarray(
         calibration_batch(cfg9.vocab_size, B9, P9, seed=29)))
     n_chunks = (G9 - 1) // CH9
 
-    def run_mode(mode):
+    def mk(mode):
         eng = Engine(model, params, EngineConfig(
             n_slots=B9, max_len=P9 + G9, chunk=CH9, prefill_buckets=(P9,),
             paged=True, page_size=8, compressed24=mode))
         eng.admit_wave(prompts, list(range(B9)), [G9] * B9)
         _ = eng.harvest(*eng.decode_chunk(CH9))  # warm the decode trace
-        dt = float("inf")
-        for _ in range(2):  # best-of-2 shields the claim gate from noise
-            eng.reset()
-            first = eng.admit_wave(prompts, list(range(B9)), [G9] * B9)
-            chunks = []
-            t0 = time.perf_counter()
-            for _ in range(n_chunks):
-                toks, valid = eng.decode_chunk(CH9)
-                t, _, _, _ = eng.harvest(toks, valid)
-                chunks.append(t[:, :B9].T)
-            dt = min(dt, time.perf_counter() - t0)
-        tokens = np.concatenate([first[:, None]] + chunks, axis=1)
-        return eng, tokens, B9 * n_chunks * CH9 / dt
+        return eng
 
-    eng_c, toks_c, tps_c = run_mode("auto")
-    eng_m, toks_m, tps_m = run_mode("masked")
-    eng_d, toks_d, tps_d = run_mode("off")
+    def one_run(eng):
+        eng.reset()
+        first = eng.admit_wave(prompts, list(range(B9)), [G9] * B9)
+        chunks = []
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            toks, valid = eng.decode_chunk(CH9)
+            t, _, _, _ = eng.harvest(toks, valid)
+            chunks.append(t[:, :B9].T)
+        dt = time.perf_counter() - t0
+        return np.concatenate([first[:, None]] + chunks, axis=1), dt
+
+    engines = {m: mk(m) for m in ("auto", "masked", "off")}
+    best = {m: float("inf") for m in engines}
+    toks = {}
+    for _ in range(5):
+        for m, eng in engines.items():
+            toks[m], dt = one_run(eng)
+            best[m] = min(best[m], dt)
+    tps = {m: B9 * n_chunks * CH9 / best[m] for m in engines}
+    eng_c, toks_c, tps_c = engines["auto"], toks["auto"], tps["auto"]
+    eng_m, toks_m, tps_m = engines["masked"], toks["masked"], tps["masked"]
+    toks_d, tps_d = toks["off"], tps["off"]
     assert eng_c.compressed24 == eng_m.compressed24 > 0, \
         "auto-detect missed 2:4 projections"
     assert (toks_c == toks_m).all() and (toks_c == toks_d).all(), \
@@ -390,6 +426,110 @@ def spec_section(model, params, drafter):
             "speedup": by_k[best]["tok_per_s"] / tps_t,
             "greedy_match": True,
             "beats_target_only": bool(by_k[best]["tok_per_s"] > tps_t)}
+
+
+def chunked_section():
+    """Section 11: chunked prefill vs waved admission — tail TTFT.
+
+    Both engines get the identical EngineConfig apart from
+    ``chunked_prefill``, including ONE prefill bucket — a small
+    compiled-program surface is the operating point this PR targets (a
+    finer ladder is exactly the per-shape prefill zoo the unified step
+    program deletes), and it is what the waved fallback pads to. The
+    workload is mixed long-tail prompts (13%..98% of the bucket) at 16x
+    more requests than slots with an equal decode budget.
+
+    TTFT is the ISSUE's definition on BOTH paths: admission of the
+    request's first chunk to its first emitted token (wave formation
+    counts as first-chunk admission on the waved path) — slot-capacity
+    queueing is identical by construction and factored out. The gate
+    measures it in the deterministic unit both engines share: FORWARD
+    ROWS the engine computed between a request's admission and its first
+    token (``Completion.ttft_rows``, counted from the executed schedules
+    — the waved path charges every wave member its wave's full
+    bucket-padded prefill; the chunked path charges the unified steps
+    through the first-token row at their traced width). The throughput
+    leg gates on rows per emitted token (``Scheduler.rows_computed`` /
+    tokens — padding waste restated), chunked <= waved. Same precedent
+    as sections 3/6/8: on serving hardware decode steps are
+    weight-bound, so lane rows ride the step's weight pass ~free and
+    rows ARE time; XLA-CPU inverts that regime (its per-step fixed cost
+    makes every lane row ~linear wall cost while the batched padded
+    prefill is its most efficient program), so CPU wall clocks — also
+    measured and reported below, best of N_RUNS post-warm runs — show
+    the plumbing, not the claim. Greedy tokens must still match
+    bit-exactly per request on this host: chunking is a pure scheduling
+    change, and that assert is wall-clock-independent.
+    """
+    from repro.configs import get_config
+    from repro.models.model import Model
+
+    cfg11 = get_config("llama1-7b").reduced(
+        d_model=256, d_ff=1024, num_layers=2, num_heads=4, num_kv_heads=4,
+        head_dim=64, vocab_size=512)
+    model = Model(cfg11)
+    params = model.init(jax.random.PRNGKey(11))
+
+    n_slots, n_req, gen = 4, 64, 14
+    bucket = 256  # every waved prefill pads to this; chunks never pad
+    rng = np.random.default_rng(23)
+    reqs = [Request(i,
+                    rng.integers(0, cfg11.vocab_size,
+                                 int(rng.integers(33, bucket - 5)),
+                                 ).astype(np.int32),
+                    gen)
+            for i in range(n_req)]
+    N_RUNS = 2
+
+    def drive(chunked):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=n_slots, max_len=bucket + gen, chunk=4,
+            prefill_buckets=(bucket,), paged=True, page_size=8,
+            chunked_prefill=chunked, chunk_size=48))
+        assert eng.chunked_prefill == chunked
+        best = {"ttft_p95_s": float("inf"), "ttft_p50_s": float("inf"),
+                "tok_per_s": 0.0}
+        stats = toks = None
+        for it in range(N_RUNS + 1):  # run 0 compiles; stats from the rest
+            sched = Scheduler(eng)
+            t0 = time.perf_counter()
+            comps = sched.run(
+                [Request(r.rid, r.tokens.copy(), r.max_new) for r in reqs])
+            wall = time.perf_counter() - t0
+            toks = {c.rid: c.tokens.tolist() for c in comps}
+            n_tok = sum(len(c.tokens) for c in comps)
+            # row accounting is schedule-determined — identical every run
+            stats = {"ttft_p95_rows": _pct([c.ttft_rows for c in comps], .95),
+                     "rows_per_tok": sched.rows_computed / n_tok}
+            if it == 0:
+                continue
+            ttfts = [c.ttft_s - c.admit_s for c in comps]
+            best["ttft_p95_s"] = min(best["ttft_p95_s"], _pct(ttfts, .95))
+            best["ttft_p50_s"] = min(best["ttft_p50_s"], _pct(ttfts, .5))
+            best["tok_per_s"] = max(best["tok_per_s"], n_tok / wall)
+        return toks, dict(best, **stats)
+
+    toks_w, w = drive(False)
+    toks_c, c = drive(True)
+    assert toks_w.keys() == toks_c.keys() == set(range(n_req))
+    assert toks_w == toks_c, \
+        "chunked prefill diverged from the waved baseline"
+    ratio = c["ttft_p95_rows"] / w["ttft_p95_rows"]
+    return {"waved_ttft_p95_rows": w["ttft_p95_rows"],
+            "chunked_ttft_p95_rows": c["ttft_p95_rows"],
+            "ttft_p95_ratio": ratio,
+            "waved_rows_per_tok": w["rows_per_tok"],
+            "chunked_rows_per_tok": c["rows_per_tok"],
+            "waved_ttft_p50_s": w["ttft_p50_s"],
+            "waved_ttft_p95_s": w["ttft_p95_s"],
+            "chunked_ttft_p50_s": c["ttft_p50_s"],
+            "chunked_ttft_p95_s": c["ttft_p95_s"],
+            "waved_stream_tok_per_s": w["tok_per_s"],
+            "chunked_stream_tok_per_s": c["tok_per_s"],
+            "greedy_match": True,
+            "beats_waved_ttft": bool(
+                ratio < 0.5 and
+                c["rows_per_tok"] <= w["rows_per_tok"])}
 
 
 def mesh_section():
@@ -657,6 +797,28 @@ def run(model=None, params=None):
                  str(s10["beats_target_only"])))
     rec["spec_serving"] = s10
 
+    # 11: chunked prefill vs waved admission — tail TTFT ------------------
+    c11 = chunked_section()
+    assert c11["greedy_match"]
+    rows.append(("table9/chunked_ttft_p95_rows", 0,
+                 f"{c11['chunked_ttft_p95_rows']:.0f} (waved "
+                 f"{c11['waved_ttft_p95_rows']:.0f}, "
+                 f"{c11['ttft_p95_ratio']:.2f}x)"))
+    rows.append(("table9/chunked_rows_per_tok", 0,
+                 f"{c11['chunked_rows_per_tok']:.1f} (waved "
+                 f"{c11['waved_rows_per_tok']:.1f})"))
+    rows.append(("table9/chunked_ttft_p95_ms", 0,
+                 f"{c11['chunked_ttft_p95_s'] * 1e3:.0f} (waved "
+                 f"{c11['waved_ttft_p95_s'] * 1e3:.0f}; CPU wall, "
+                 "reported not gated)"))
+    rows.append(("table9/chunked_stream_tok_per_s", 0,
+                 f"{c11['chunked_stream_tok_per_s']:.0f} (waved "
+                 f"{c11['waved_stream_tok_per_s']:.0f}; CPU wall, "
+                 "reported not gated)"))
+    rows.append(("table9/chunked_prefill_ttft", 0,
+                 str(c11["beats_waved_ttft"])))
+    rec["chunked_serving"] = c11
+
     emit(rows)
     try:
         os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)), exist_ok=True)
@@ -667,7 +829,7 @@ def run(model=None, params=None):
     return {"speedup": speedup, "paged_slots_ratio": slots_ratio,
             "paged_attn_bytes": occ_bytes, "gather_bytes": gather_bytes,
             "mesh_kv_ratio": kv_ratio, "compressed24": c9, "spec": s10,
-            "rows": rows, "record": rec}
+            "chunked": c11, "rows": rows, "record": rec}
 
 
 if __name__ == "__main__":

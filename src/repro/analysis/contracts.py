@@ -349,6 +349,22 @@ EXPECTED_TRACES: Dict[str, Dict[str, int]] = {
     for name in TRACE_CELLS
 }
 
+# chunked-prefill cells: the unified step program replaces the prefill
+# bucket zoo entirely — ZERO prefill traces, ONE decode trace, and the
+# count stays flat across prompt lengths / fill loads (ragged and idle
+# chunk lanes run the same traced shape; the schedule is data, not shape).
+CHUNKED_TRACE_CELLS: Dict[str, Dict[str, Any]] = {
+    "chunked-paged": dict(arch="qwen3-8b",
+                          engine=dict(paged=True, compressed24="off")),
+    "chunked-pool": dict(arch="qwen3-8b",
+                         engine=dict(paged=False, compressed24="off")),
+}
+
+EXPECTED_CHUNKED_TRACES: Dict[str, Dict[str, int]] = {
+    name: {"prefill": 0, "decode": 1, "retraces": 0}
+    for name in CHUNKED_TRACE_CELLS
+}
+
 
 def magnitude_prune24(cfg, params):
     """Exact magnitude 2:4 pruning of every prunable projection (top-2 |w|
@@ -435,11 +451,61 @@ def run_trace_cell(name: str) -> Tuple[Dict[str, int], List[Finding]]:
     return measured, findings
 
 
+def run_chunked_trace_cell(name: str) -> Tuple[Dict[str, int], List[Finding]]:
+    """Drive the chunked-prefill scheduler twice with DIFFERENT prompt
+    lengths and fill loads; pin zero prefill traces, one decode trace, and
+    zero retraces across the change (the unified step program's whole
+    point: varying chunk counts never change the traced shape)."""
+    from repro.models.model import Model
+    from repro.serve import Engine, EngineConfig, Request
+    from repro.serve.scheduler import Scheduler
+
+    cell = CHUNKED_TRACE_CELLS[name]
+    cfg = get_config(cell["arch"]).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(n_slots=2, max_len=24, chunk=4, chunk_size=4,
+                              prefill_buckets=(8,), **cell["engine"]))
+    sched = Scheduler(eng)
+    where = f"contracts/trace/{name}"
+    findings: List[Finding] = []
+    if not eng.chunked_prefill:
+        findings.append(Finding(
+            "trace-pin", where, 0, "chunked_prefill", "False",
+            "cell's engine did not auto-enable chunked prefill"))
+        return {}, findings
+
+    def stream(lens, seed):
+        rng = np.random.default_rng(seed)
+        return [Request(i, rng.integers(0, cfg.vocab_size, n)
+                        .astype(np.int32), 4)
+                for i, n in enumerate(lens)]
+
+    sched.run(stream([3, 11, 7], 0))
+    first = dict(eng.trace_counts)
+    sched.run(stream([13, 2, 5, 9, 16], 1))  # different lengths + load
+    measured = {"prefill": first["prefill"], "decode": first["decode"],
+                "retraces": eng.trace_counts["decode"] - first["decode"]}
+    for k, want in EXPECTED_CHUNKED_TRACES[name].items():
+        if measured[k] != want:
+            findings.append(Finding(
+                "trace-pin", where, 0, k, f"{k}={measured[k]}",
+                f"expected {k}={want}, measured {measured[k]} (the unified "
+                "chunked step program retraced, or a prefill program ran "
+                "on the chunked path)"))
+    return measured, findings
+
+
 def check_trace_contracts(
-        cells: Optional[Iterable[str]] = None) -> List[Finding]:
+        cells: Optional[Iterable[str]] = None,
+        chunked_cells: Optional[Iterable[str]] = None) -> List[Finding]:
     findings: List[Finding] = []
     for name in (cells if cells is not None else TRACE_CELLS):
         findings.extend(run_trace_cell(name)[1])
+    for name in (chunked_cells if chunked_cells is not None
+                 else CHUNKED_TRACE_CELLS):
+        findings.extend(run_chunked_trace_cell(name)[1])
     return findings
 
 

@@ -46,6 +46,9 @@ from repro.kernels.budget import KernelVmemPlan
 DEFAULT_DECODE_M = 8
 DEFAULT_PAGE_SIZE = 16
 DEFAULT_MAX_BLOCKS = 8
+# chunk-lane query rows (EngineConfig.chunk_size default): the chunked
+# prefill engine issues one (1, sq) query block alongside the decode wave
+DEFAULT_CHUNK_SQ = 16
 
 
 def resolve_block(dim: int, default: int, multiple: int = 1) -> Optional[int]:
@@ -132,6 +135,11 @@ def kernel_plans(arch: str, cfg=None) -> List[KernelVmemPlan]:
         G = max(cfg.num_heads // max(KV, 1), 1)
         plans.append(paged_attention.vmem_plan(
             DEFAULT_DECODE_M, KV, G, hd, page_size=DEFAULT_PAGE_SIZE,
+            max_blocks=DEFAULT_MAX_BLOCKS))
+        # chunk-lane mode of the same kernel: the chunked-prefill engine
+        # runs one batch-1 query block of chunk_size rows per decode step
+        plans.append(paged_attention.vmem_plan(
+            1, KV, G, hd, sq=DEFAULT_CHUNK_SQ, page_size=DEFAULT_PAGE_SIZE,
             max_blocks=DEFAULT_MAX_BLOCKS))
     return plans
 

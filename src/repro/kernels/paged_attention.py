@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: single-query paged-attention decode over a KV page arena.
+"""Pallas TPU kernel: paged attention over a KV page arena (Sq=1 decode and
+Sq>1 chunked-prefill modes).
 
 The serve engine's paged pool (serve/paging.py) stores KV in a shared
 (n_pages, page_size, KV, hd) arena per layer, with per-slot block tables
@@ -25,12 +26,22 @@ Grid / layout contract
                    0                   otherwise (dead fetch, masked off)
 
   q:        (B, KV, G, hd)            one query token per slot, GQA-grouped
+            or (B, Sq, KV, G, hd)     Sq query positions per slot (chunked
+                                      prefill: the prefill-chunk lane of the
+                                      unified step program)
   k/v:      (n_pages, page_size, KV, hd)  the shared arena (fp32/bf16/int8)
   block_table: (B, MB) int32          ``n_pages`` == unmapped block
   lengths:  (B,) int32                valid cache tokens per slot, i.e.
-                                      cache_index + 1 with this step's KV
+                                      cache_index + Sq with this call's KV
                                       already scattered into the arena
-  out:      (B, KV, G, hd)            q.dtype
+  out:      same shape as q           q.dtype
+
+Sq>1 causal contract: query row i of slot b sits at absolute cache position
+``lengths[b] - Sq + i`` and attends every kv position <= its own — both the
+already-paged prefix AND the in-chunk positions this call just scattered.
+Rows must satisfy ``lengths[b] == 0`` (zero output) or ``lengths[b] >= Sq``
+(every query position real); a ragged final chunk is handled by the caller
+re-overlapping the previous chunk's tail, not by partial-length rows.
 
 Semantics match the retained gather path bit-for-bit in structure: positions
 ``>= lengths[b]`` are masked with -inf BEFORE the softmax, while an
@@ -112,18 +123,78 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _kernel_sq(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+               acc_ref, *, page_size, n_pages, sq, scale, kv_qscale):
+    """Sq>1 mode: the chunk lane's causal multi-query read. Query row i of
+    slot b is at absolute position lengths[b] - sq + i; each page's logits
+    are masked per query row, so in-chunk positions (this call's own
+    scatter) and the already-paged prefix fold through one online softmax."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * page_size < length)
+    def _fold_page():
+        q = q_ref[0].astype(jnp.float32)          # (sq, KV, G, hd)
+        k = k_ref[0]                              # (page_size, KV, hd)
+        v = v_ref[0]
+        if kv_qscale is not None:
+            k = k.astype(jnp.float32) / kv_qscale
+            v = v.astype(jnp.float32) / kv_qscale
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        mapped = (bt_ref[b, j] < n_pages).astype(jnp.float32)
+        k = k * mapped
+        v = v * mapped
+        s = jnp.einsum("qkgh,skh->qkgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        # causal: kv position p visible to query row i iff p <= q_start + i
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, 1, page_size), 3)
+        qpos = (length - sq) + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, 1, 1, 1), 0)
+        s = jnp.where(pos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                        # (sq, KV, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "qkgs,skh->qkgh", p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)        # length-0 rows -> zeros
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
 def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
                            scale: float, kv_qscale=None,
                            interpret: Optional[bool] = None):
-    """q: (B, KV, G, hd); k/v_pages: (n_pages, page_size, KV, hd);
-    block_table: (B, MB) int32; lengths: (B,) int32. Returns (B, KV, G, hd)
-    in q.dtype. ``kv_qscale``: int8 arena dequant scale (None == float KV).
+    """q: (B, KV, G, hd) decode or (B, Sq, KV, G, hd) chunked prefill;
+    k/v_pages: (n_pages, page_size, KV, hd); block_table: (B, MB) int32;
+    lengths: (B,) int32. Returns q's shape in q.dtype. ``kv_qscale``: int8
+    arena dequant scale (None == float KV). Sq>1 rows need lengths[b] == 0
+    or lengths[b] >= Sq (see the module docstring's causal contract).
     ``interpret=None`` resolves via ops._interpret_default (True off-TPU —
     a hard-coded True would silently run the Python interpreter on TPU).
     """
     if interpret is None:
         from repro.kernels.ops import _interpret_default
         interpret = _interpret_default()
+    if q.ndim == 5:
+        return _paged_attention_sq(q, k_pages, v_pages, block_table, lengths,
+                                   scale=scale, kv_qscale=kv_qscale,
+                                   interpret=interpret)
     B, KV, G, hd = q.shape
     n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
     assert k_pages.shape == v_pages.shape == (n_pages, page_size, KV, hd)
@@ -167,30 +238,84 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
       q, k_pages, v_pages)
 
 
-def vmem_plan(B: int, KV: int, G: int, hd: int, *, page_size: int = 16,
-              max_blocks: int = 8, q_itemsize: int = 2,
+def _paged_attention_sq(q, k_pages, v_pages, block_table, lengths, *,
+                        scale: float, kv_qscale,
+                        interpret: Optional[bool] = None):
+    """Sq>1 lowering: same grid walk as the decode mode, with the query
+    block, scratch carry, and causal mask grown a leading Sq axis.
+    ``interpret`` arrives resolved from the public wrapper; None resolves
+    via ops._interpret_default for direct callers."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
+    B, Sq, KV, G, hd = q.shape
+    n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    assert k_pages.shape == v_pages.shape == (n_pages, page_size, KV, hd)
+    assert block_table.shape[0] == B and lengths.shape == (B,)
+
+    def kv_map(b, j, bt, ln):
+        page = jnp.where(j * page_size < ln[b],
+                         jnp.minimum(bt[b, j], n_pages - 1), 0)
+        return page, 0, 0, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, block_table.shape[1]),
+        in_specs=[
+            pl.BlockSpec((1, Sq, KV, G, hd),
+                         lambda b, j, bt, ln: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd), kv_map),
+            pl.BlockSpec((1, page_size, KV, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, KV, G, hd),
+                               lambda b, j, bt, ln: (b, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq, KV, G), jnp.float32),      # m: running max
+            pltpu.VMEM((Sq, KV, G), jnp.float32),      # l: running denom
+            pltpu.VMEM((Sq, KV, G, hd), jnp.float32),  # acc: numerator
+        ],
+    )
+    kern = functools.partial(_kernel_sq, page_size=page_size, n_pages=n_pages,
+                             sq=Sq, scale=scale, kv_qscale=kv_qscale)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, KV, G, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+            vmem_limit_bytes=VMEM_LIMIT_BYTES,
+        ),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def vmem_plan(B: int, KV: int, G: int, hd: int, *, sq: int = 1,
+              page_size: int = 16, max_blocks: int = 8, q_itemsize: int = 2,
               kv_itemsize: int = 2) -> KernelVmemPlan:
     """Static VMEM working set of one ``paged_attention_pallas`` call (see
     kernels/budget.py). The grid walks (B, max_blocks) with one page of K
     and V resident per step plus the f32 m/l/acc online-softmax carry; the
     scalar-prefetched block table and lengths live in SMEM and are counted
-    against the VMEM budget conservatively."""
-    blocks = {"q": block_bytes((1, KV, G, hd), q_itemsize),
+    against the VMEM budget conservatively. ``sq > 1`` models the chunked-
+    prefill mode: query block, carry, and logits all grow the Sq axis."""
+    blocks = {"q": block_bytes((1, sq, KV, G, hd), q_itemsize),
               "k_page": block_bytes((1, page_size, KV, hd), kv_itemsize),
               "v_page": block_bytes((1, page_size, KV, hd), kv_itemsize),
-              "out": block_bytes((1, KV, G, hd), q_itemsize),
+              "out": block_bytes((1, sq, KV, G, hd), q_itemsize),
               "block_table": block_bytes((B, max_blocks), 4),
               "lengths": block_bytes((B,), 4)}
-    scratch = {"m": block_bytes((KV, G), 4),
-               "l": block_bytes((KV, G), 4),
-               "acc": block_bytes((KV, G, hd), 4)}
-    # f32 copies of q/k/v for the einsums + the (KV, G, page_size) logits
-    temp = (block_bytes((KV, G, hd), 4) + 2 * block_bytes((page_size, KV, hd), 4)
-            + 2 * block_bytes((KV, G, page_size), 4))
+    scratch = {"m": block_bytes((sq, KV, G), 4),
+               "l": block_bytes((sq, KV, G), 4),
+               "acc": block_bytes((sq, KV, G, hd), 4)}
+    # f32 copies of q/k/v for the einsums + the (sq, KV, G, page_size) logits
+    temp = (block_bytes((sq, KV, G, hd), 4)
+            + 2 * block_bytes((page_size, KV, hd), 4)
+            + 2 * block_bytes((sq, KV, G, page_size), 4))
     plan = KernelVmemPlan("paged_attention",
-                          dict(B=B, KV=KV, G=G, hd=hd, page_size=page_size,
-                               max_blocks=max_blocks),
+                          dict(B=B, sq=sq, KV=KV, G=G, hd=hd,
+                               page_size=page_size, max_blocks=max_blocks),
                           blocks, scratch, temp, VMEM_LIMIT_BYTES)
     require(plan, page_size >= 1, f"page_size={page_size} < 1")
+    require(plan, sq >= 1, f"sq={sq} < 1")
     require(plan, G >= 1 and KV >= 1, f"bad GQA grouping KV={KV} G={G}")
     return plan

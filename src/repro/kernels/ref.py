@@ -52,10 +52,16 @@ def masked_matmul_ref(x, w, mask):
 def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, *,
                         scale, kv_qscale=None):
     """The gather-path semantics of kernels/paged_attention.py, in plain jnp:
-    ``mode="fill"`` gather of the position-ordered KV view, -inf mask beyond
-    each row's length, full (non-online) softmax. Rows with length 0 are
-    defined as zero output."""
-    B, KV, G, hd = q.shape
+    ``mode="fill"`` gather of the position-ordered KV view, -inf causal mask,
+    full (non-online) softmax. Rows with length 0 are defined as zero
+    output. q may be (B, KV, G, hd) (decode: the single query sits at
+    position lengths-1) or (B, Sq, KV, G, hd) (chunked prefill: query row i
+    sits at position lengths - Sq + i and attends every kv position <= its
+    own — the Sq>1 kernel mode's causal contract)."""
+    sq1 = q.ndim == 4
+    if sq1:
+        q = q[:, None]
+    B, Sq, KV, G, hd = q.shape
     n_pages, ps = k_pages.shape[0], k_pages.shape[1]
     MB = block_table.shape[1]
     k_full = k_pages.at[block_table].get(mode="fill", fill_value=0)
@@ -65,10 +71,12 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, *,
     if kv_qscale is not None:
         k_full = k_full / kv_qscale
         v_full = v_full / kv_qscale
-    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32), k_full) * scale
-    valid = jnp.arange(MB * ps)[None, :] < lengths[:, None]  # (B, S_kv)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", q.astype(jnp.float32), k_full) * scale
+    qpos = lengths[:, None] - Sq + jnp.arange(Sq)[None, :]  # (B, Sq)
+    valid = jnp.arange(MB * ps)[None, None, :] <= qpos[:, :, None]
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskh->bkgh", w, v_full)
-    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
-    return out.astype(q.dtype)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", w, v_full)
+    out = jnp.where((lengths > 0)[:, None, None, None, None], out, 0.0)
+    out = out.astype(q.dtype)
+    return out[:, 0] if sq1 else out

@@ -8,8 +8,12 @@ Two modes:
   * default: one same-shape wave through ``Engine.generate`` — prefill once,
     then a single jitted scan over the decode steps (two device syncs total).
   * ``--requests N``: N mixed-length requests through the continuous-batching
-    ``Scheduler`` (admit-on-free, length-bucketed prefill), reporting TTFT /
-    TPOT percentiles.
+    ``Scheduler``, reporting TTFT / TPOT percentiles. Eligible engines
+    (pure token-KV, non-vision) serve with chunked prefill by default —
+    prompts stream through the decode steps' prefill-chunk lane
+    (``--chunk-size`` tokens per step) inside ONE unified jitted program;
+    ``--no-chunked-prefill`` forces the bucket-wave baseline (recurrent/
+    hybrid/VLM families always use it).
 
 Every decoder family serves — dense, MoE, SSM (``--arch mamba2-1.3b``),
 hybrid (``--arch zamba2-7b``), VLM (``--arch qwen2-vl-2b``; the CLI attaches
@@ -46,7 +50,8 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  page_size: int = 16, n_pages: int = None,
                  paged_kernel: bool = None, extra_len: int = 0, mesh=None,
                  compressed24: str = None, compressed24_kernel: bool = None,
-                 self_spec: bool = False, draft_k: int = 4):
+                 self_spec: bool = False, draft_k: int = 4,
+                 chunked_prefill: bool = None, chunk_size: int = 16):
     """Returns (engine, cfg). Prunes the weights first when requested.
 
     ``self_spec`` builds the self-speculation drafter: a Wanda++ 2:4-pruned
@@ -89,6 +94,7 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         paged_kernel=paged_kernel, mesh=mesh,
         compressed24=compressed24, compressed24_kernel=compressed24_kernel,
         draft_k=draft_pad,
+        chunked_prefill=chunked_prefill, chunk_size=chunk_size,
     )
     engine = Engine(model, params, ecfg, sampling, draft_params=draft_params)
     if engine.compressed24:
@@ -165,8 +171,15 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    paged_kernel: bool = None, mesh=None,
                    compressed24: str = None,
                    compressed24_kernel: bool = None,
-                   self_spec: bool = False, draft_k: int = 4):
+                   self_spec: bool = False, draft_k: int = 4,
+                   chunked_prefill: bool = None, chunk_size: int = 16):
     """Mixed-length request stream through the continuous-batching scheduler.
+
+    Eligible engines (pure token-KV, non-vision) default to chunked prefill:
+    prompts stream through the decode chunks' prefill-chunk lane
+    (``chunk_size`` tokens per step) instead of blocking bucket waves, so
+    TTFT stops paying for other prompts' prefill. ``chunked_prefill=False``
+    forces the waved baseline.
 
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
     tokens to every request and registers it with the engine: its KV pages
@@ -179,7 +192,12 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                                n_pages=n_pages, paged_kernel=paged_kernel,
                                mesh=mesh, compressed24=compressed24,
                                compressed24_kernel=compressed24_kernel,
-                               self_spec=self_spec, draft_k=draft_k)
+                               self_spec=self_spec, draft_k=draft_k,
+                               chunked_prefill=chunked_prefill,
+                               chunk_size=chunk_size)
+    if engine.chunked_prefill:
+        print(f"[serve] chunked prefill: {chunk_size} prompt tokens per "
+              "decode step through the unified step program")
     rng = np.random.default_rng(7)
     prefix = None
     if shared_prefix > 0:
@@ -271,6 +289,13 @@ def main():
     ap.add_argument("--draft-k", type=int, default=4,
                     help="with --self-spec: drafter tokens proposed per "
                          "verify step (accepted prefix + 1 emitted)")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="with --requests: prompt tokens the prefill-chunk "
+                         "lane processes per decode step (chunked prefill)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="with --requests: force bucket-wave prefill (the "
+                         "latency baseline) instead of chunked prefill "
+                         "interleaved with decode")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="shard the engine over a (data, model) device mesh "
                          "(e.g. 4,2): params by the sharding rule table, "
@@ -294,7 +319,10 @@ def main():
                        paged_kernel=paged_kernel, mesh=mesh,
                        compressed24=args.compressed_24,
                        compressed24_kernel=sparse_kernel,
-                       self_spec=args.self_spec, draft_k=args.draft_k)
+                       self_spec=args.self_spec, draft_k=args.draft_k,
+                       chunked_prefill=False if args.no_chunked_prefill
+                       else None,
+                       chunk_size=args.chunk_size)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,

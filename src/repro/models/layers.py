@@ -242,8 +242,9 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
     page indices per row (``n_pages`` == unmapped: such writes drop, reads are
     masked). x may be (B, S, D) for S >= 1 (chunked / shared-prefix prefill);
     each row's tokens land at cache positions ``cache_index[b] + [0, S)``.
-    The S == 1 decode read runs the Pallas paged-attention kernel (per-step
-    KV traffic O(tokens cached), see kernels/paged_attention.py);
+    The paged read runs the Pallas paged-attention kernel (per-step KV
+    traffic O(tokens cached), see kernels/paged_attention.py): the S == 1
+    decode mode, or the Sq>1 chunked-prefill mode (causal per query row);
     ``paged_kernel=False`` keeps the ``.at[block_table].get`` gather — the
     bit-exact relayout of the dense path, retained as the parity reference.
     """
@@ -298,15 +299,20 @@ def attention(p, x, cfg: ModelConfig, positions, *, kv_cache=None,
             k_new, v_new = k.astype(ck.dtype), v.astype(cv.dtype)
         ck = ck.at[page, off].set(k_new, mode="drop")
         cv = cv.at[page, off].set(v_new, mode="drop")
-        if S == 1 and paged_kernel:
-            # decode: online-softmax kernel walks the block table page-by-
-            # page; the (B, MB*page_size) KV view never materialises
+        if paged_kernel:
+            # online-softmax kernel walks the block table page-by-page; the
+            # (B, MB*page_size) KV view never materialises. S == 1 is the
+            # decode mode; S > 1 is the chunked-prefill mode (each query row
+            # causal against in-chunk + already-paged KV, lengths = idx + S
+            # since this call's scatter above already landed the chunk)
             from repro.kernels.ops import paged_attention
             qs = KV_QSCALE if ck.dtype == jnp.int8 else None
+            qk = q.reshape(B, KV, G, hd) if S == 1 \
+                else q.reshape(B, S, KV, G, hd)
             out = paged_attention(
-                q.reshape(B, KV, G, hd), ck, cv, block_table, idx + 1,
+                qk, ck, cv, block_table, idx + S,
                 scale=1.0 / math.sqrt(hd), kv_qscale=qs)
-            out = out.reshape(B, 1, H * hd)
+            out = out.reshape(B, S, H * hd)
             return lin("wo", p["wo"], out), (ck, cv)
         k_full = ck.at[block_table].get(mode="fill", fill_value=0)
         v_full = cv.at[block_table].get(mode="fill", fill_value=0)

@@ -302,10 +302,11 @@ class Model:
         Writes every position's KV at cache positions pos[b] + [0, S) (the
         same scatter/clamp semantics as ``decode_step``) and returns the
         FULL logits (B, S, V) — row i is the next-token distribution after
-        tokens[:, i] — plus the cache. The paged read is the materialising
-        gather for S > 1 (the Pallas kernel is single-query). Pure-KV specs
-        only: a recurrent state cannot be rolled back to an accepted prefix,
-        so speculative verification is undefined for it.
+        tokens[:, i] — plus the cache. The paged read runs the Pallas
+        kernel's Sq>1 mode when ``paged_kernel`` (the materialising gather
+        stays the parity reference). Pure-KV specs only: a recurrent state
+        cannot be rolled back to an accepted prefix, so speculative
+        verification is undefined for it.
         """
         cfg = self.cfg
         if self.cache_spec.mixed or self.cache_spec.has_recurrent:

@@ -166,6 +166,23 @@ class EngineConfig:
     # block tables, so admission allocates draft_k extra positions of
     # headroom per slot (the drafter runs ahead of the accepted length).
     draft_k: int = 0
+    # Chunked prefill (continuous batching v2): prompts stream into the
+    # DECODE program as fixed-size chunks — each scan step runs the decode
+    # slots plus one prefill-chunk lane writing chunk KV straight into the
+    # arena via the block tables — so a newly admitted request emits tokens
+    # without waiting for any other prompt's prefill (no bucket waves, no
+    # prefill/decode phase distinction on the scheduler path). None == auto:
+    # on for pure token-KV, non-vision specs (paged or dense pool); off for
+    # recurrent/hybrid/VLM families, whose admission needs the full-sequence
+    # forward (recurrent snapshot placement, vision prefixes) and keeps the
+    # waved path. generate() always serves waved — it is the parity
+    # baseline the chunked stream is pinned bit-exact against.
+    chunked_prefill: Optional[bool] = None
+    # prefill tokens the chunk lane processes per decode step; a prompt of
+    # P tokens streams in as ceil(P / chunk_size) steps' lanes, its final
+    # (ragged) chunk re-overlapping the previous chunk's tail so every lane
+    # is exactly chunk_size wide (one traced shape, any prompt length)
+    chunk_size: int = 16
 
     @property
     def max_blocks(self) -> int:
@@ -311,6 +328,32 @@ class Engine:
         # cache-length headroom the drafter needs to run ahead of the
         # accepted sequence: admission budgets draft_k extra positions
         self._draft_pad = cfg.draft_k if self.spec_decode else 0
+        # chunked prefill: the chunk lane IS decode_multi (pure token-KV
+        # specs only) and the first token samples off in-stream logits (no
+        # full-sequence admission forward), so recurrent/hybrid/VLM
+        # families keep the waved path. None == auto-enable when eligible.
+        # judged on the MODEL's spec: the self-speculation "draft" group is
+        # a second pure-KV arena, which the chunk lane fills just fine
+        eligible = (not spec.mixed and not spec.has_recurrent
+                    and not self.needs_vision)
+        if cfg.chunked_prefill and not eligible:
+            raise ValueError(
+                f"{mcfg.name}: chunked prefill needs a pure token-KV, "
+                "non-vision family (recurrent snapshot placement and "
+                "vision prefixes require the full-sequence admission "
+                "forward)")
+        # a chunk never exceeds max_len: the dense pool's window write
+        # would clamp-shift, and the overlap re-anchor assumes a chunk
+        # fits the prompt's cache extent. Auto mode falls back to waved
+        # when the configured chunk can't fit; forcing it is an error.
+        fits = 1 <= cfg.chunk_size <= cfg.max_len
+        self.chunked_prefill = (eligible and fits) \
+            if cfg.chunked_prefill is None else bool(cfg.chunked_prefill)
+        if self.chunked_prefill and not fits:
+            raise ValueError(
+                f"chunk_size={cfg.chunk_size} must be in "
+                f"[1, max_len={cfg.max_len}]")
+        self._fill: list = []  # chunked-prefill queue (see admit_chunked)
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
         self.pstate: Optional[PageState] = None
@@ -374,6 +417,13 @@ class Engine:
             self._register_jit = self._jit(
                 self._register_impl, (1, 2), (W, C, PS, R), (C, PS, R, R))
             self._unreserve_jit = self._jit(PAGE.unreserve, (0,), (PS, R), PS)
+            # chunked admission maps pages WITHOUT any prefill forward (the
+            # fill rides the decode chunks); the shared variant retraces
+            # once per distinct prefix page count, like the waved program
+            self._chunk_alloc_jit = self._jit(
+                PAGE.alloc, (0,), (PS, R, R), (PS, R))
+            self._chunk_alloc_shared_jit = self._jit(
+                PAGE.alloc, (0,), (PS, R, R, R, R), (PS, R))
         else:
             self._prefill_jit = self._jit(
                 self._prefill_pool_impl, (1, 2, 3),
@@ -522,140 +572,296 @@ class Engine:
         rejected proposal is simply an invalid row.
         """
         self.trace_counts["decode"] += 1
-        params, draft_params = wp
-        sc, eos = self.sampling, self.cfg.eos_id
-        k = self.cfg.draft_k
-        S = k + 1
+        S = self.cfg.draft_k + 1
 
         def step(carry, _):
             cache, state, key = carry
             key, sub = jax.random.split(key)
-            run = state.active & ~state.finished
-            caches = dict(self.spec.unpack(cache))
-            pos0 = state.pos
-            if not self.paged:
-                # the dense pool's dynamic_update_slice CLAMPS its start
-                # index: keep the whole S-token write in-bounds. Admission
-                # headroom (max_total + k <= max_len) means this never
-                # binds for a running slot — only frozen ones, whose
-                # outputs are discarded and whose slot is rewritten from
-                # scratch on re-admission.
-                pos0 = jnp.minimum(pos0, self.cfg.max_len - S)
-            rope0 = pos0 + state.rope_delta
-
-            # 1) drafter proposes k tokens through its own arena
-            cur = state.last_token
-            d_toks, d_probs = [], []
-            for i in range(k):
-                inputs = {"token": cur, "pos": pos0 + i, "rope_pos": rope0 + i}
-                if block_tables is not None:
-                    inputs["block_table"] = block_tables
-                lg, caches["draft"] = self.model.decode_step(
-                    draft_params, inputs, caches["draft"],
-                    paged_kernel=self.paged_kernel, lin=self._draft_lin)
-                if sc.greedy:
-                    cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                else:
-                    plg = process_logits(self._for_sampling(lg), sc)
-                    cur = jax.vmap(jax.random.categorical)(
-                        self._spec_keys(sub, self._TAG_DRAFT, i), plg
-                    ).astype(jnp.int32)
-                    d_probs.append(jax.nn.softmax(plg, axis=-1))
-                d_toks.append(cur)
-            d_toks = jnp.stack(d_toks, axis=1)  # (n_slots, k)
-            # KV-fill for d_k at pos0+k (logits discarded): when all k
-            # proposals are accepted, the next macro step resumes at
-            # pos0+k+1 and the drafter attends position pos0+k — which no
-            # later write ever covers. Greedy output would stay exact (the
-            # emission is the target's chain), but the drafter would draft
-            # against garbage from then on and acceptance would collapse.
-            inputs = {"token": cur, "pos": pos0 + k, "rope_pos": rope0 + k}
-            if block_tables is not None:
-                inputs["block_table"] = block_tables
-            _, caches["draft"] = self.model.decode_step(
-                draft_params, inputs, caches["draft"],
-                paged_kernel=self.paged_kernel, lin=self._draft_lin)
-
-            # 2) target verifies [last, d_1..d_k] in one batched forward
-            ver = jnp.concatenate([state.last_token[:, None], d_toks], axis=1)
-            inputs = {"tokens": ver, "pos": pos0, "rope_pos": rope0}
-            if block_tables is not None:
-                inputs["block_table"] = block_tables
-            t_logits, caches["kv"] = self.model.decode_multi(
-                params, inputs, caches["kv"],
-                paged_kernel=self.paged_kernel, lin=self._lin)  # (n, S, V)
-
-            # 3) accept-prefix + corrected resample
-            if sc.greedy:
-                # row i of t_logits conditions on [.., last, d_1..d_i]: the
-                # target's own greedy chain IS the emission — an accepted
-                # d_j equals chain[j-1] by construction, and chain[acc] is
-                # the bonus/correction token. Bit-exact vs target-only.
-                emit = jnp.argmax(t_logits, axis=-1).astype(jnp.int32)
-                ok = (d_toks == emit[:, :k]).astype(jnp.int32)
-                acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
-            else:
-                nB, _, V = t_logits.shape
-                p_all = jax.nn.softmax(process_logits(
-                    self._for_sampling(t_logits.reshape(nB * S, V)), sc
-                ), axis=-1).reshape(nB, S, V)
-                q_all = jnp.stack(d_probs, axis=1)  # (n, k, V)
-                p_d = jnp.take_along_axis(
-                    p_all[:, :k], d_toks[..., None], axis=-1)[..., 0]
-                q_d = jnp.take_along_axis(
-                    q_all, d_toks[..., None], axis=-1)[..., 0]
-                u = jnp.stack([
-                    jax.vmap(jax.random.uniform)(
-                        self._spec_keys(sub, self._TAG_ACCEPT, i))
-                    for i in range(k)], axis=1)  # (n, k)
-                # u in [0, 1): draft == target gives the ratio exactly 1,
-                # so every proposal is accepted (the satellite test's pin)
-                ok = (u < p_d / jnp.maximum(q_d, 1e-30)).astype(jnp.int32)
-                acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
-                # corrected distribution at the first rejection: residual
-                # max(p - q, 0) renormalized; all-zero residual implies
-                # p == q, where rejection has probability 0 — the p_j
-                # fallback only guards the unselected lanes' categorical
-                res = jnp.maximum(p_all[:, :k] - q_all, 0.0)
-                dist = jnp.where(
-                    jnp.sum(res, axis=-1, keepdims=True) > 0,
-                    res, p_all[:, :k])
-                corr = [jax.vmap(jax.random.categorical)(
-                    self._spec_keys(sub, self._TAG_RESAMPLE, j),
-                    jnp.log(dist[:, j])) for j in range(k)]
-                corr.append(jax.vmap(jax.random.categorical)(
-                    self._spec_keys(sub, self._TAG_BONUS, 0),
-                    jnp.log(p_all[:, k])))
-                corr = jnp.stack(corr, axis=1).astype(jnp.int32)  # (n, S)
-                base = jnp.concatenate(
-                    [d_toks, jnp.zeros_like(d_toks[:, :1])], axis=1)
-                sel = jnp.arange(S, dtype=jnp.int32)[None, :] == acc[:, None]
-                emit = jnp.where(sel, corr, base)
-
-            # 4) emission masks + slot bookkeeping (budget, EOS, freeze)
-            remaining = jnp.maximum(state.max_total - state.pos, 0)
-            n_emit = jnp.where(run, jnp.minimum(acc + 1, remaining), 0)
-            val = jnp.arange(S, dtype=jnp.int32)[None, :] < n_emit[:, None]
-            if eos is not None:
-                is_eos = val & (emit == eos)
-                hit = is_eos.astype(jnp.int32)
-                val = val & ((jnp.cumsum(hit, axis=1) - hit) == 0)
-                n_emit = jnp.sum(val.astype(jnp.int32), axis=1)
-            new_pos = state.pos + n_emit
-            done = new_pos >= state.max_total
-            if eos is not None:
-                done = done | jnp.any(val & (emit == eos), axis=1)
-            last = jnp.take_along_axis(
-                emit, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
-            state = state._replace(
-                last_token=jnp.where(n_emit > 0, last, state.last_token),
-                pos=new_pos,
-                finished=state.finished | (run & done))
-            cache = self.spec.pack(caches)
+            cache, state, emit, val = self._spec_macro_step(
+                wp, cache, state, sub, block_tables)
             return (cache, state, key), (emit.T, val.T)
 
         (cache, state, key), (toks, valid) = jax.lax.scan(
             step, (cache, state, key), None, length=T)
+        n = toks.shape[-1]
+        return (cache, state, key,
+                toks.reshape(T * S, n), valid.reshape(T * S, n))
+
+    def _spec_macro_step(self, wp, cache, state, sub, block_tables):
+        """One speculative macro step (draft k -> KV-fill -> batched verify
+        -> accept/correct -> bookkeeping); shared verbatim by the waved and
+        chunked decode programs. Returns (cache, state, emit, val) with
+        emit/val shaped (n_slots, k+1), position-major."""
+        params, draft_params = wp
+        sc, eos = self.sampling, self.cfg.eos_id
+        k = self.cfg.draft_k
+        S = k + 1
+        run = state.active & ~state.finished
+        caches = dict(self.spec.unpack(cache))
+        pos0 = state.pos
+        if not self.paged:
+            # the dense pool's dynamic_update_slice CLAMPS its start
+            # index: keep the whole S-token write in-bounds. Admission
+            # headroom (max_total + k <= max_len) means this never
+            # binds for a running slot — only frozen ones, whose
+            # outputs are discarded and whose slot is rewritten from
+            # scratch on re-admission.
+            pos0 = jnp.minimum(pos0, self.cfg.max_len - S)
+        rope0 = pos0 + state.rope_delta
+
+        # 1) drafter proposes k tokens through its own arena
+        cur = state.last_token
+        d_toks, d_probs = [], []
+        for i in range(k):
+            inputs = {"token": cur, "pos": pos0 + i, "rope_pos": rope0 + i}
+            if block_tables is not None:
+                inputs["block_table"] = block_tables
+            lg, caches["draft"] = self.model.decode_step(
+                draft_params, inputs, caches["draft"],
+                paged_kernel=self.paged_kernel, lin=self._draft_lin)
+            if sc.greedy:
+                cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                plg = process_logits(self._for_sampling(lg), sc)
+                cur = jax.vmap(jax.random.categorical)(
+                    self._spec_keys(sub, self._TAG_DRAFT, i), plg
+                ).astype(jnp.int32)
+                d_probs.append(jax.nn.softmax(plg, axis=-1))
+            d_toks.append(cur)
+        d_toks = jnp.stack(d_toks, axis=1)  # (n_slots, k)
+        # KV-fill for d_k at pos0+k (logits discarded): when all k
+        # proposals are accepted, the next macro step resumes at
+        # pos0+k+1 and the drafter attends position pos0+k — which no
+        # later write ever covers. Greedy output would stay exact (the
+        # emission is the target's chain), but the drafter would draft
+        # against garbage from then on and acceptance would collapse.
+        inputs = {"token": cur, "pos": pos0 + k, "rope_pos": rope0 + k}
+        if block_tables is not None:
+            inputs["block_table"] = block_tables
+        _, caches["draft"] = self.model.decode_step(
+            draft_params, inputs, caches["draft"],
+            paged_kernel=self.paged_kernel, lin=self._draft_lin)
+
+        # 2) target verifies [last, d_1..d_k] in one batched forward
+        ver = jnp.concatenate([state.last_token[:, None], d_toks], axis=1)
+        inputs = {"tokens": ver, "pos": pos0, "rope_pos": rope0}
+        if block_tables is not None:
+            inputs["block_table"] = block_tables
+        t_logits, caches["kv"] = self.model.decode_multi(
+            params, inputs, caches["kv"],
+            paged_kernel=self.paged_kernel, lin=self._lin)  # (n, S, V)
+
+        # 3) accept-prefix + corrected resample
+        if sc.greedy:
+            # row i of t_logits conditions on [.., last, d_1..d_i]: the
+            # target's own greedy chain IS the emission — an accepted
+            # d_j equals chain[j-1] by construction, and chain[acc] is
+            # the bonus/correction token. Bit-exact vs target-only.
+            emit = jnp.argmax(t_logits, axis=-1).astype(jnp.int32)
+            ok = (d_toks == emit[:, :k]).astype(jnp.int32)
+            acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
+        else:
+            nB, _, V = t_logits.shape
+            p_all = jax.nn.softmax(process_logits(
+                self._for_sampling(t_logits.reshape(nB * S, V)), sc
+            ), axis=-1).reshape(nB, S, V)
+            q_all = jnp.stack(d_probs, axis=1)  # (n, k, V)
+            p_d = jnp.take_along_axis(
+                p_all[:, :k], d_toks[..., None], axis=-1)[..., 0]
+            q_d = jnp.take_along_axis(
+                q_all, d_toks[..., None], axis=-1)[..., 0]
+            u = jnp.stack([
+                jax.vmap(jax.random.uniform)(
+                    self._spec_keys(sub, self._TAG_ACCEPT, i))
+                for i in range(k)], axis=1)  # (n, k)
+            # u in [0, 1): draft == target gives the ratio exactly 1,
+            # so every proposal is accepted (the satellite test's pin)
+            ok = (u < p_d / jnp.maximum(q_d, 1e-30)).astype(jnp.int32)
+            acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
+            # corrected distribution at the first rejection: residual
+            # max(p - q, 0) renormalized; all-zero residual implies
+            # p == q, where rejection has probability 0 — the p_j
+            # fallback only guards the unselected lanes' categorical
+            res = jnp.maximum(p_all[:, :k] - q_all, 0.0)
+            dist = jnp.where(
+                jnp.sum(res, axis=-1, keepdims=True) > 0,
+                res, p_all[:, :k])
+            corr = [jax.vmap(jax.random.categorical)(
+                self._spec_keys(sub, self._TAG_RESAMPLE, j),
+                jnp.log(dist[:, j])) for j in range(k)]
+            corr.append(jax.vmap(jax.random.categorical)(
+                self._spec_keys(sub, self._TAG_BONUS, 0),
+                jnp.log(p_all[:, k])))
+            corr = jnp.stack(corr, axis=1).astype(jnp.int32)  # (n, S)
+            base = jnp.concatenate(
+                [d_toks, jnp.zeros_like(d_toks[:, :1])], axis=1)
+            sel = jnp.arange(S, dtype=jnp.int32)[None, :] == acc[:, None]
+            emit = jnp.where(sel, corr, base)
+
+        # 4) emission masks + slot bookkeeping (budget, EOS, freeze)
+        remaining = jnp.maximum(state.max_total - state.pos, 0)
+        n_emit = jnp.where(run, jnp.minimum(acc + 1, remaining), 0)
+        val = jnp.arange(S, dtype=jnp.int32)[None, :] < n_emit[:, None]
+        if eos is not None:
+            is_eos = val & (emit == eos)
+            hit = is_eos.astype(jnp.int32)
+            val = val & ((jnp.cumsum(hit, axis=1) - hit) == 0)
+            n_emit = jnp.sum(val.astype(jnp.int32), axis=1)
+        new_pos = state.pos + n_emit
+        done = new_pos >= state.max_total
+        if eos is not None:
+            done = done | jnp.any(val & (emit == eos), axis=1)
+        last = jnp.take_along_axis(
+            emit, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+        state = state._replace(
+            last_token=jnp.where(n_emit > 0, last, state.last_token),
+            pos=new_pos,
+            finished=state.finished | (run & done))
+        cache = self.spec.pack(caches)
+        return cache, state, emit, val
+
+    # -- chunked prefill: the unified step program ------------------------
+    # PRNG tag for the chunk lane's first-token draw: a distinct fold of
+    # the step key, so the decode lane's sampling stream is untouched by
+    # whether a chunk rides the step (greedy is key-independent either way)
+    _TAG_CHUNK = 5
+
+    def _chunk_step(self, wp, cache, state, sub, s, block_tables):
+        """The prefill-chunk lane of the unified step program: run ONE
+        prompt chunk (schedule slice ``s``, see :meth:`build_schedule`)
+        through ``decode_multi`` at B=1, writing its KV straight into the
+        slot's pages (paged) or pool row (dense). On the prompt's final
+        chunk, sample the first token from the chunk's last valid position
+        — the same logits row the waved prefill reads — and activate the
+        slot; decode picks it up NEXT step, so the lanes never race on a
+        slot. Idle lanes (slot == n_slots) run the same compute against an
+        all-unmapped block-table row / a discarded pool-row copy, so
+        varying fill load never changes the traced program.
+
+        Returns (cache, state, first_token, admit_slot); admit_slot ==
+        n_slots when no request activates this step."""
+        cfg = self.cfg
+        lane_on = s["slot"] < cfg.n_slots
+        caches = dict(self.spec.unpack(cache))
+        groups = [("kv", wp[0], self._lin)]
+        if self.spec_decode:
+            # the drafter's arena fills from the SAME chunk stream: it
+            # shares the target's block tables (pages already mapped), so
+            # the draft fill is one more B=1 decode_multi, logits discarded
+            groups.append(("draft", wp[1], self._draft_lin))
+        logits = None
+        for name, params, lin in groups:
+            inp = {"tokens": s["toks"][None], "pos": s["pos"][None]}
+            if self.paged:
+                # an out-of-range slot (idle lane) gathers an all-unmapped
+                # row: every KV write drops, every read fills zero
+                inp["block_table"] = block_tables.at[s["slot"][None]].get(
+                    mode="fill", fill_value=cfg.pool_pages)
+                lg, caches[name] = self.model.decode_multi(
+                    params, inp, caches[name],
+                    paged_kernel=self.paged_kernel, lin=lin)
+            else:
+                # dense pool: slice the slot's cache row, run the lane at
+                # B=1 against the copy, write back only when the lane is
+                # live (the idle lane's garbage never lands)
+                sl = jnp.minimum(s["slot"], cfg.n_slots - 1)
+                row = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, sl, 1, axis=1),
+                    caches[name])
+                lg, new_row = self.model.decode_multi(
+                    params, inp, row, paged_kernel=self.paged_kernel,
+                    lin=lin)
+                new_row = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(lane_on, a, b), new_row, row)
+                caches[name] = jax.tree_util.tree_map(
+                    lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                        c, r, sl, axis=1),
+                    caches[name], new_row)
+            if logits is None:
+                logits = lg  # first tokens come from the TARGET's logits
+        cache = self.spec.pack(caches)
+
+        # the prompt's last token sits at lane index len-1; its logits row
+        # is the first-token distribution
+        li = jnp.clip(s["len"] - 1, 0, cfg.chunk_size - 1)
+        last = jax.lax.dynamic_index_in_dim(logits[0], li, 0,
+                                            keepdims=False)[None]  # (1, V)
+        first = sample_tokens(
+            self._for_sampling(last),
+            jax.random.fold_in(sub, self._TAG_CHUNK), self.sampling)
+        fire = s["first"] & lane_on
+        aslot = jnp.where(fire, s["slot"], cfg.n_slots)[None]  # (1,)
+        state, _ = self._admit_state(
+            state, aslot, first, s["plen"][None], s["max_new"][None],
+            jnp.zeros((1,), jnp.int32))
+        return cache, state, first[0], aslot[0]
+
+    def _decode_chunked_impl(self, wp, cache, state, key, block_tables,
+                             sched, *, T):
+        """The unified chunked-prefill step program: every scan step runs
+        the decode lane over all live slots (identical math — and identical
+        PRNG stream — to ``_decode_impl``) PLUS one prefill-chunk lane fed
+        by ``sched``. A request admitted mid-chunk emits its first token
+        the step its final chunk lands and decodes from the next step on —
+        no other prompt's prefill ever blocks a running slot's tokens."""
+        self.trace_counts["decode"] += 1
+        params = wp[0]
+        sc, eos = self.sampling, self.cfg.eos_id
+
+        def step(carry, s):
+            cache, state, key = carry
+            key, sub = jax.random.split(key)
+            run = state.active & ~state.finished
+            inputs = {"token": state.last_token, "pos": state.pos,
+                      "rope_pos": state.pos + state.rope_delta}
+            if block_tables is not None:
+                inputs["block_table"] = block_tables
+            logits, cache = self.model.decode_step(
+                params, inputs, cache, paged_kernel=self.paged_kernel,
+                lin=self._lin)
+            nxt = sample_tokens(self._for_sampling(logits), sub, sc)
+            nxt = jnp.where(run, nxt, state.last_token)
+            pos = state.pos + run.astype(jnp.int32)
+            done = pos >= state.max_total
+            if eos is not None:
+                done = done | (nxt == eos)
+            state = state._replace(last_token=nxt, pos=pos,
+                                   finished=state.finished | (run & done))
+            # chunk lane AFTER the decode lane: an activating slot was not
+            # in `run`, so the lanes never touch the same slot's row
+            cache, state, first, aslot = self._chunk_step(
+                wp, cache, state, sub, s, block_tables)
+            nxt = nxt.at[aslot].set(first, mode="drop")
+            valid = run.at[aslot].set(True, mode="drop")
+            return (cache, state, key), (nxt, valid)
+
+        (cache, state, key), (toks, valid) = jax.lax.scan(
+            step, (cache, state, key), sched)
+        return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
+
+    def _decode_chunked_spec_impl(self, wp, cache, state, key, block_tables,
+                                  sched, *, T):
+        """Chunked-prefill variant of the speculative program: each macro
+        step runs draft/verify exactly as ``_decode_spec_impl`` (shared
+        body) plus one prefill-chunk lane filling BOTH arenas; an
+        activating request's first token is emitted as position row 0 of
+        its macro step, and its draft stream starts the next macro step."""
+        self.trace_counts["decode"] += 1
+        S = self.cfg.draft_k + 1
+
+        def step(carry, s):
+            cache, state, key = carry
+            key, sub = jax.random.split(key)
+            cache, state, emit, val = self._spec_macro_step(
+                wp, cache, state, sub, block_tables)
+            cache, state, first, aslot = self._chunk_step(
+                wp, cache, state, sub, s, block_tables)
+            emit = emit.at[aslot, 0].set(first, mode="drop")
+            val = val.at[aslot, 0].set(True, mode="drop")
+            return (cache, state, key), (emit.T, val.T)
+
+        (cache, state, key), (toks, valid) = jax.lax.scan(
+            step, (cache, state, key), sched)
         n = toks.shape[-1]
         return (cache, state, key,
                 toks.reshape(T * S, n), valid.reshape(T * S, n))
@@ -836,23 +1042,35 @@ class Engine:
             pstate = PAGE.release(pstate, slots)
         return cache, state, pstate
 
-    def _decode_fn(self, T: int):
+    def _decode_fn(self, T: int, chunked: bool = False):
         """Compiled decode program for a T-row chunk. Target-only: T scan
         steps, one token row each. Self-speculation: ceil(T / (k+1)) macro
         steps, each emitting k+1 rows (so the returned row count is T
-        rounded up to a macro-step multiple)."""
-        if T not in self._decode_jit:
+        rounded up to a macro-step multiple). ``chunked`` selects the
+        unified chunked-prefill program (same decode lane + one
+        prefill-chunk lane per step, fed by a build_schedule pytree);
+        waved and chunked programs are cached independently, so driving
+        both never retraces either."""
+        if (T, chunked) not in self._decode_jit:
             W, C, S, PS, R = self._prog_shardings()
             bt = PS.block_tables if (self._sh is not None and self.paged) \
                 else R
-            if self.spec_decode:
-                m = -(-T // (self.cfg.draft_k + 1))
-                impl = functools.partial(self._decode_spec_impl, T=m)
+            m = -(-T // (self.cfg.draft_k + 1)) if self.spec_decode else T
+            if chunked:
+                impl = functools.partial(
+                    self._decode_chunked_spec_impl if self.spec_decode
+                    else self._decode_chunked_impl, T=m)
+                # the schedule arrays ride replicated (every device scans
+                # the same fill assignments)
+                self._decode_jit[(T, chunked)] = self._jit(
+                    impl, (1, 2, 3), (W, C, S, R, bt, R), (C, S, R, R, R))
             else:
-                impl = functools.partial(self._decode_impl, T=T)
-            self._decode_jit[T] = self._jit(
-                impl, (1, 2, 3), (W, C, S, R, bt), (C, S, R, R, R))
-        return self._decode_jit[T]
+                impl = functools.partial(
+                    self._decode_spec_impl if self.spec_decode
+                    else self._decode_impl, T=m)
+                self._decode_jit[(T, chunked)] = self._jit(
+                    impl, (1, 2, 3), (W, C, S, R, bt), (C, S, R, R, R))
+        return self._decode_jit[(T, chunked)]
 
     # ------------------------------------------------------------------
     # host-side driver ops (used by scheduler.Scheduler and generate())
@@ -868,6 +1086,7 @@ class Engine:
             self._prefixes = {}
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         self.key = jax.random.PRNGKey(self.sampling.seed)
+        self._fill = []
         self._alloc_pools()
         for toks in survivors:  # registered prefixes survive resets
             self.register_prefix(toks)
@@ -1103,6 +1322,129 @@ class Engine:
                 [max_news[i] for i in idxs], [need[i] for i in idxs], entry)
         return first
 
+    @property
+    def fill_pending(self) -> bool:
+        """Chunked-prefill work still queued (see :meth:`admit_chunked`)."""
+        return bool(self._fill)
+
+    def admit_chunked(self, prompt, slot_id: int, max_new: int,
+                      keep_pids=(), match=_UNMATCHED) -> None:
+        """Queue one request for chunked prefill into ``slot_id``: allocate
+        every page it will ever need NOW (all-or-nothing — raises
+        :class:`PagesExhausted` like admit_wave), map a matching registered
+        prefix's pages refcounted, and enqueue the prompt suffix on the
+        fill queue. No forward runs here: the prefill compute rides the
+        next decode chunks' unified step program (:meth:`build_schedule` +
+        ``decode_chunk(schedule=...)``), and the first token is sampled on
+        device the step the final chunk lands — there is no separate
+        prefill program, bucket zoo, or first-token sync on this path."""
+        if not self.chunked_prefill:
+            raise ValueError(
+                "engine built without chunked prefill "
+                "(cfg.chunked_prefill resolved False)")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        total = len(prompt) + max(max_new, 1) - 1 + self._draft_pad
+        if total > self.cfg.max_len:
+            pad = (f" (draft_k={self.cfg.draft_k} headroom included)"
+                   if self._draft_pad else "")
+            raise ValueError(
+                f"request needs {total} cache slots > "
+                f"max_len={self.cfg.max_len}{pad}")
+        start = 0
+        if self.paged:
+            if match is Engine._UNMATCHED:
+                match = self.prefix_match(prompt)
+            need = self.pages_needed(prompt, max_new, match=match)
+            if need > self._free_pages:
+                self._evict_lru(need, keep=(
+                    {match.pid} if match is not None else set())
+                    | set(keep_pids))
+            if need > self._free_pages:
+                raise PagesExhausted(
+                    f"request needs {need} pages, {self._free_pages} free")
+            slots = jnp.asarray([slot_id], jnp.int32)
+            n_blocks = jnp.asarray(
+                [-(-total // self.cfg.page_size)], jnp.int32)
+            if match is not None:
+                self.pstate, ok = self._chunk_alloc_shared_jit(
+                    self.pstate, slots, n_blocks,
+                    jnp.asarray([match.length // self.cfg.page_size],
+                                jnp.int32),
+                    jnp.asarray(match.pages, jnp.int32))
+                start = match.length
+            else:
+                self.pstate, ok = self._chunk_alloc_jit(
+                    self.pstate, slots, n_blocks)
+            assert bool(ok), "host free-page mirror out of sync with device"
+            self._book_pages([slot_id], [need])
+            if match is not None:
+                self._lru_clock += 1
+                match.last_used = self._lru_clock
+                match.live += 1
+                self._slot_prefix[slot_id] = match.pid
+                self.stats["shared_tokens_saved"] += match.length
+        self._fill.append({
+            "slot": int(slot_id), "toks": prompt[start:], "start": start,
+            "plen": len(prompt), "max_new": int(max_new), "next": 0})
+
+    def build_schedule(self, T: Optional[int] = None):
+        """Carve the next decode chunk's prefill-lane assignments off the
+        fill queue (host-side, FIFO — a request's chunks stay in order
+        because each chunk attends the previous one's cached KV). Returns
+        ``(schedule, first_rows)``: the device pytree
+        ``decode_chunk(T, schedule=...)`` scans over, and ``{slot: row}``
+        naming the emitted-token row where each completing request's first
+        token lands (the scheduler's per-chunk TTFT attribution). Idle
+        steps carry an out-of-range slot — same traced program, the lane's
+        writes drop.
+
+        Chunk boundaries: full ``chunk_size`` chunks, with the final
+        ragged chunk re-anchored to start ``chunk_size`` tokens before the
+        prompt's end — re-running the overlap recomputes bit-identical KV
+        (same tokens, positions, and visible prefix), so ONE traced lane
+        width covers every prompt length."""
+        cfg = self.cfg
+        T = T or cfg.chunk
+        CS = cfg.chunk_size
+        S = cfg.draft_k + 1 if self.spec_decode else 1
+        steps = -(-T // S)
+        toks = np.zeros((steps, CS), np.int32)
+        slot = np.full((steps,), cfg.n_slots, np.int32)
+        pos = np.zeros((steps,), np.int32)
+        ln = np.ones((steps,), np.int32)
+        first = np.zeros((steps,), bool)
+        plen = np.ones((steps,), np.int32)
+        max_new = np.ones((steps,), np.int32)
+        first_rows: dict = {}
+        t = 0
+        while t < steps and self._fill:
+            f = self._fill[0]
+            n = len(f["toks"])
+            b = min(f["next"] + CS, n)
+            a = f["next"] if b - f["next"] == CS else max(b - CS, 0)
+            toks[t, : b - a] = f["toks"][a:b]
+            slot[t] = f["slot"]
+            pos[t] = f["start"] + a
+            ln[t] = b - a
+            first[t] = b == n
+            plen[t] = f["plen"]
+            max_new[t] = f["max_new"]
+            if b == n:
+                first_rows[f["slot"]] = t * S
+                self._fill.pop(0)
+            else:
+                f["next"] = b
+            t += 1
+        sched = {"toks": jnp.asarray(toks), "slot": jnp.asarray(slot),
+                 "pos": jnp.asarray(pos), "len": jnp.asarray(ln),
+                 "first": jnp.asarray(first), "plen": jnp.asarray(plen),
+                 "max_new": jnp.asarray(max_new)}
+        if self._sh is not None:
+            sched = jax.device_put(
+                sched, jax.tree_util.tree_map(
+                    lambda _: self._sh["repl"], sched))
+        return sched, first_rows
+
     @staticmethod
     def _split_by_patches(vision, only=None):
         """Group request indices by vision patch count (0 == text) so every
@@ -1192,13 +1534,22 @@ class Engine:
         self.stats["shared_tokens_saved"] += entry.length * K
         return np.asarray(first)[:K]
 
-    def decode_chunk(self, T: Optional[int] = None):
+    def decode_chunk(self, T: Optional[int] = None, schedule=None):
         """Run T jitted decode steps; returns device (toks, valid) of shape
-        (T, n_slots). No host sync happens here — harvest() does that."""
+        (T, n_slots). Pass ``schedule`` (from :meth:`build_schedule`) to
+        run the unified chunked-prefill program instead — the same decode
+        lane plus the per-step prefill-chunk lane. No host sync happens
+        here — harvest() does that."""
         T = T or self.cfg.chunk
         bt = self.pstate.block_tables if self.paged else None
-        self.cache, self.state, self.key, toks, valid = self._decode_fn(T)(
-            self._wp, self.cache, self.state, self.key, bt)
+        if schedule is None:
+            self.cache, self.state, self.key, toks, valid = \
+                self._decode_fn(T)(
+                    self._wp, self.cache, self.state, self.key, bt)
+        else:
+            self.cache, self.state, self.key, toks, valid = \
+                self._decode_fn(T, chunked=True)(
+                    self._wp, self.cache, self.state, self.key, bt, schedule)
         return toks, valid
 
     def harvest(self, toks, valid):

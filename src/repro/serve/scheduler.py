@@ -64,6 +64,19 @@ class Completion:
     tokens: np.ndarray  # (n_generated,) int32, includes the prefill token
     ttft_s: float  # submit -> first token
     tpot_s: List[float] = field(default_factory=list)  # per decoded token
+    # submit -> admission (slot granted; first chunk queued / wave begun).
+    # ttft_s - admit_s is the prefill-path latency — admission of the
+    # request's first chunk to its first emitted token — the number
+    # chunked prefill attacks, with slot-capacity queueing factored out.
+    admit_s: float = 0.0
+    # forward rows the engine computed between this request's admission and
+    # its first token — the deterministic, host-independent counterpart of
+    # ttft_s - admit_s. Waved: the request's own wave charges every member
+    # its full bucket-padded prefill (wave_size * padded_len). Chunked: the
+    # unified steps from admission through the first-token step, each
+    # costing its traced shape (chunk_size lane rows + n_slots decode
+    # rows), whether lanes are live or not.
+    ttft_rows: int = 0
 
 
 class Scheduler:
@@ -74,16 +87,35 @@ class Scheduler:
         n = engine.cfg.n_slots
         self._slot_rid: List[Optional[int]] = [None] * n
         self.peak_live = 0  # max concurrently-live slots seen during run()
+        # total forward rows the run's traced programs computed (prefill
+        # waves at their padded shapes + every step's full decode/lane
+        # width) — tokens-emitted / rows_computed is the padding-waste
+        # metric benchmark section 11 gates on
+        self.rows_computed = 0
 
     def run(self, requests: List[Request], progress=None) -> List[Completion]:
+        if self.engine.chunked_prefill:
+            return self._run_chunked(requests, progress)
+        return self._run_waved(requests, progress)
+
+    def _run_waved(self, requests: List[Request],
+                   progress=None) -> List[Completion]:
+        """Bucket-wave admission: prefill runs as separate jitted waves
+        between decode chunks. The serving path for families the chunk
+        lane cannot fill (recurrent/hybrid snapshot placement, vision
+        prefixes) and the parity baseline chunked prefill is pinned
+        against."""
         eng = self.engine
         eng.reset()
         self.peak_live = 0  # per-run metric; a Scheduler may be reused
+        self.rows_computed = 0
         queue = deque(requests)
         t_submit = {r.rid: time.perf_counter() for r in requests}
         partial: Dict[int, List[int]] = {}
         ttft: Dict[int, float] = {}
         tpot: Dict[int, List[float]] = {}
+        admit: Dict[int, float] = {}
+        trows: Dict[int, int] = {}
         req_of = {r.rid: r for r in requests}
         done: List[Completion] = []
 
@@ -97,6 +129,9 @@ class Scheduler:
                 t_np, v_np, fin, _pos = eng.harvest(toks, valid)
                 chunk_dt = time.perf_counter() - t_launch  # dispatch+compute
                 T = t_np.shape[0]
+                # the decode program computes every slot lane each step,
+                # live or not (T emitted rows = steps * draft span)
+                self.rows_computed += T * eng.cfg.n_slots
                 freed = []
                 for s, rid in enumerate(self._slot_rid):
                     if rid is None:
@@ -115,7 +150,9 @@ class Scheduler:
                         done.append(Completion(
                             rid, len(req_of[rid].tokens),
                             np.asarray(partial.pop(rid), np.int32),
-                            ttft.pop(rid), tpot.pop(rid)))
+                            ttft.pop(rid), tpot.pop(rid),
+                            admit_s=admit.pop(rid),
+                            ttft_rows=trows.pop(rid)))
                         self._slot_rid[s] = None
                         freed.append(s)
                         if progress:
@@ -204,12 +241,17 @@ class Scheduler:
                     # wave's prefill; bucket order within a round is an
                     # engine artifact, so a later wave must not be charged
                     # for the earlier waves' prefill time
+                    wave_rows = len(wave) * (b[0] + b[1])
+                    self.rows_computed += wave_rows
                     for r, s, f in zip(wave, slots, first):
                         self._slot_rid[s] = r.rid
                         partial[r.rid] = [int(f)]
                         ttft[r.rid] = (t_round - t_submit[r.rid]) \
                             + (t_first - t_wave)
+                        admit[r.rid] = t_round - t_submit[r.rid]
                         tpot[r.rid] = []
+                        # every wave member waits out the whole padded wave
+                        trows[r.rid] = wave_rows
                 # instantly-finished requests (max_new==1 / prefill EOS) are
                 # swept up by the finished flags of the next harvest
             self.peak_live = max(
@@ -221,5 +263,141 @@ class Scheduler:
                 t0 = time.perf_counter()
                 toks, valid = eng.decode_chunk()
                 pending_chunk = (toks, valid, t0)
+
+        return done
+
+    def _run_chunked(self, requests: List[Request],
+                     progress=None) -> List[Completion]:
+        """Continuous batching v2: per-request chunk-budget admission into
+        the unified step program. Admission allocates a request's pages and
+        queues its prompt chunks — NO prefill program, bucket zoo, or
+        first-token sync exists on this path; the prompt streams through
+        the decode chunks' prefill-chunk lane while every live slot keeps
+        emitting a token per step. The first token arrives IN the decode
+        stream the step the final chunk lands, and TTFT is attributed to
+        that step's position within the chunk (admission of the request's
+        first chunk -> first emitted token), not to the chunk boundary.
+        TPOT covers decoded tokens only (the first token is TTFT's)."""
+        eng = self.engine
+        eng.reset()
+        self.peak_live = 0
+        self.rows_computed = 0
+        queue = deque(requests)
+        t_submit = {r.rid: time.perf_counter() for r in requests}
+        partial: Dict[int, List[int]] = {}
+        ttft: Dict[int, float] = {}
+        tpot: Dict[int, List[float]] = {}
+        admit: Dict[int, float] = {}
+        trows: Dict[int, int] = {}
+        admit_step: Dict[int, int] = {}
+        req_of = {r.rid: r for r in requests}
+        done: List[Completion] = []
+        # every unified step computes the full traced width: chunk_size
+        # lane rows + n_slots decode lanes (spec: draft span per lane),
+        # live or idle — the row cost of one scan step
+        S = eng.cfg.draft_k + 1 if eng.spec_decode else 1
+        step_rows = eng.cfg.chunk_size + eng.cfg.n_slots * S
+        steps_done = 0  # unified steps harvested so far this run
+
+        self._slot_rid = [None] * eng.cfg.n_slots
+        pending_chunk = None
+
+        while queue or any(r is not None for r in self._slot_rid):
+            # -- 1+2: harvest the in-flight chunk, free finished slots ------
+            if pending_chunk is not None:
+                toks, valid, t_launch, first_rows = pending_chunk
+                t_np, v_np, fin, _pos = eng.harvest(toks, valid)
+                chunk_dt = time.perf_counter() - t_launch
+                R = t_np.shape[0]
+                self.rows_computed += (R // S) * step_rows
+                freed = []
+                for s, rid in enumerate(self._slot_rid):
+                    if rid is None:
+                        continue
+                    new = t_np[v_np[:, s], s]
+                    partial[rid].extend(int(t) for t in new)
+                    n_dec = len(new)
+                    if rid not in ttft and len(new):
+                        # first token: TTFT ends at its row WITHIN the
+                        # chunk (the schedule knows which step sampled it)
+                        row = first_rows.get(s, int(np.argmax(v_np[:, s])))
+                        ttft[rid] = (t_launch - t_submit[rid]) \
+                            + chunk_dt * (row + 1) / R
+                        # unified steps from admission through the step
+                        # that sampled the first token, at the traced
+                        # per-step width — the deterministic TTFT
+                        trows[rid] = (steps_done - admit_step.pop(rid)
+                                      + -(-(row + 1) // S)) * step_rows
+                        n_dec -= 1
+                    if n_dec:
+                        # spec chunks inflate R with rejected proposals;
+                        # per-token latency is then the chunk time over the
+                        # tokens the slot actually got (same rule as waved)
+                        per = chunk_dt / n_dec if eng.spec_decode \
+                            else chunk_dt / R
+                        tpot[rid].extend([per] * n_dec)
+                    if fin[s]:
+                        done.append(Completion(
+                            rid, len(req_of[rid].tokens),
+                            np.asarray(partial.pop(rid), np.int32),
+                            ttft.pop(rid), tpot.pop(rid),
+                            admit_s=admit.pop(rid),
+                            ttft_rows=trows.pop(rid)))
+                        self._slot_rid[s] = None
+                        freed.append(s)
+                        if progress:
+                            progress(done[-1])
+                if freed:
+                    eng.release(freed)
+                steps_done += R // S
+                pending_chunk = None
+
+            # -- 3: admission, per request (chunk-budget, no waves) ---------
+            free = [s for s, r in enumerate(self._slot_rid) if r is None]
+            while queue and free:
+                r0 = queue[0]
+                if r0.vision_embeds is not None:
+                    raise ValueError(
+                        "chunked prefill serves text-only requests "
+                        "(vision-frontend engines keep the waved path)")
+                if eng.paged:
+                    ent = eng.prefix_match(np.asarray(r0.tokens))
+                    need = eng.pages_needed(r0.tokens, r0.max_new, match=ent)
+                    budget = eng.free_pages + eng.evictable_pages(
+                        exclude={ent.pid} if ent is not None else set())
+                    if need > budget:
+                        if all(r is None for r in self._slot_rid):
+                            raise ValueError(
+                                f"request {r0.rid} needs {need} KV pages > "
+                                f"pool capacity {budget}; it can never be "
+                                "admitted")
+                        break  # retry once decode releases live slots
+                    try:
+                        eng.admit_chunked(r0.tokens, free[0], r0.max_new,
+                                          match=ent)
+                    except PagesExhausted:
+                        break
+                else:
+                    eng.admit_chunked(r0.tokens, free[0], r0.max_new)
+                s = free.pop(0)
+                queue.popleft()
+                self._slot_rid[s] = r0.rid
+                partial[r0.rid] = []
+                tpot[r0.rid] = []
+                # admission of the request's FIRST chunk: its prompt is
+                # queued on the fill lane from this instant, so the
+                # prefill-path latency clock (ttft_s - admit_s) starts here
+                admit[r0.rid] = time.perf_counter() - t_submit[r0.rid]
+                admit_step[r0.rid] = steps_done
+            self.peak_live = max(
+                self.peak_live,
+                sum(r is not None for r in self._slot_rid))
+
+            # -- 4: next unified chunk: decode lanes + prefill-chunk lane ---
+            if any(rid is not None for rid in self._slot_rid):
+                sched, first_rows = eng.build_schedule()
+                t0 = time.perf_counter()
+                toks, valid = eng.decode_chunk(schedule=sched)
+                pending_chunk = (toks, valid, t0, first_rows)
 
         return done

@@ -18,6 +18,18 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 
+# Cache position of a slot that holds no request (fresh pool / released).
+# Far out of range on purpose: a frozen slot keeps re-feeding its last token
+# through the decode program, and parking its write index past any possible
+# cache extent makes that KV write DROP (paged: block index >= max_blocks ->
+# unmapped sentinel; dense: dynamic_update_slice clamps to the last row,
+# which decode rewrites before reading). Under chunked prefill this is a
+# correctness requirement, not hygiene: a freshly-mapped block table (and
+# any refcounted shared-prefix pages in it) must never take a stale-position
+# garbage write while the slot's prompt is still streaming in as chunks.
+FREE_POS = 1 << 30
+
+
 class SlotState(NamedTuple):
     last_token: jnp.ndarray  # (S,) int32 — token fed at the next decode step
     pos: jnp.ndarray  # (S,) int32 — cache write index == tokens cached so far
@@ -36,7 +48,7 @@ def init_slots(n_slots: int) -> SlotState:
     i32 = jnp.int32
     return SlotState(
         last_token=jnp.zeros((n_slots,), i32),
-        pos=jnp.zeros((n_slots,), i32),
+        pos=jnp.full((n_slots,), FREE_POS, i32),
         prompt_len=jnp.zeros((n_slots,), i32),
         max_total=jnp.zeros((n_slots,), i32),
         active=jnp.zeros((n_slots,), bool),
@@ -69,9 +81,13 @@ def admit(state: SlotState, slots, first_token, prompt_len,
 
 
 def release(state: SlotState, slots) -> SlotState:
-    """Free harvested slots (admit-on-free: the scheduler refills them)."""
+    """Free harvested slots (admit-on-free: the scheduler refills them).
+    The write position parks at FREE_POS so the freed slot's frozen decode
+    writes drop instead of landing in whatever pages the next admission
+    maps (see FREE_POS)."""
     kw = dict(mode="drop")
     return state._replace(
+        pos=state.pos.at[slots].set(FREE_POS, **kw),
         active=state.active.at[slots].set(False, **kw),
         finished=state.finished.at[slots].set(False, **kw),
     )

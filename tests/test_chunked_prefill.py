@@ -1,0 +1,386 @@
+"""Chunked prefill interleaved with decode: the unified step program.
+
+Layered evidence that the chunk lane can be THE prefill path for pure
+token-KV families:
+
+  1. kernel property parity (Sq>1 mode): kernel vs the gather-semantics
+     oracle vs dense ``_sdpa`` with the chunk lane's causal contract
+     (query row i sits at position lengths - Sq + i), sweeping chunk
+     sizes, page sizes {4, 8, 16}, GQA groups, ragged chunk boundaries
+     (length == Sq, == capacity, unaligned), fp32 and int8 arenas;
+  2. engine-level: the chunked drive (admit_chunked / build_schedule /
+     decode_chunk) is greedy BIT-EXACT vs the waved ``generate``
+     baseline — paged and dense pool, ragged final chunks, shared-prefix
+     admission, and the self-speculative drafter (both arenas filled by
+     the chunk lane);
+  3. scheduler stream: ``Scheduler.run`` on a chunked engine emits the
+     same tokens as the waved fallback across slot churn, with per-chunk
+     TTFT attribution and TPOT covering decoded tokens only;
+  4. eligibility: recurrent / hybrid / vision families resolve
+     ``chunked_prefill=False`` and still serve on the waved path;
+     forcing the flag raises;
+  5. trace pins: zero prefill traces, ONE decode trace, zero retraces
+     across changing prompt lengths and fill loads (the schedule is
+     data, not shape) — via the static-analysis contract cells.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.analysis import contracts
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models.layers import KV_QSCALE, _sdpa
+from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.scheduler import Scheduler
+
+SCALE = 0.25
+
+
+# ---------------------------------------------------------------------------
+# kernel: Sq>1 chunk-lane mode vs gather oracle vs dense _sdpa
+# ---------------------------------------------------------------------------
+
+def _case_sq(seed, ps, G, sq, *, KV=2, hd=8, MB=4, int8=False):
+    """Random chunk-lane instance honouring the Sq-mode length contract
+    (length == 0, or >= Sq so every query row has a real position): row 0
+    is empty, row 1 holds exactly one chunk (length == Sq, the first-chunk
+    boundary), row 2 is at full capacity, the rest land at random ragged
+    offsets; block tables map disjoint random pages, rest unmapped."""
+    rng = np.random.default_rng(seed)
+    B = 5
+    cap = MB * ps
+    assert sq <= cap
+    lengths = np.array(
+        [0, sq, cap] + list(rng.integers(sq, cap + 1, B - 3)), np.int64)
+    perm = rng.permutation(B * MB + 3)
+    bt = np.full((B, MB), B * MB + 3, np.int64)
+    k = 0
+    for b in range(B):
+        nb = -(-int(lengths[b]) // ps)
+        bt[b, :nb] = perm[k:k + nb]
+        k += nb
+    n_pages = B * MB + 3
+    if int8:
+        k_pages = jnp.asarray(
+            rng.integers(-127, 128, (n_pages, ps, KV, hd)), jnp.int8)
+        v_pages = jnp.asarray(
+            rng.integers(-127, 128, (n_pages, ps, KV, hd)), jnp.int8)
+    else:
+        k_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)),
+                              jnp.float32)
+        v_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)),
+                              jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, sq, KV, G, hd)), jnp.float32)
+    return (q, k_pages, v_pages, jnp.asarray(bt, jnp.int32),
+            jnp.asarray(lengths, jnp.int32))
+
+def _check_sq(q, k_pages, v_pages, bt, lengths, kv_qscale=None):
+    got = ops.paged_attention(q, k_pages, v_pages, bt, lengths,
+                              scale=SCALE, kv_qscale=kv_qscale)
+    want = ref.paged_attention_ref(q, k_pages, v_pages, bt, lengths,
+                                   scale=SCALE, kv_qscale=kv_qscale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # tie the oracle to the production _sdpa under the causal contract
+    B, Sq, KV, G, hd = q.shape
+    n_pages, ps = k_pages.shape[:2]
+    MB = bt.shape[1]
+    k_full = k_pages.at[bt].get(mode="fill", fill_value=0)
+    v_full = v_pages.at[bt].get(mode="fill", fill_value=0)
+    k_full = k_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    v_full = v_full.reshape(B, MB * ps, KV, hd).astype(jnp.float32)
+    if kv_qscale is not None:
+        k_full = k_full / kv_qscale
+        v_full = v_full / kv_qscale
+    qpos = lengths[:, None] - Sq + jnp.arange(Sq)[None, :]
+    mask = jnp.arange(MB * ps)[None, None, :] <= qpos[:, :, None]
+    sdpa = _sdpa(q, k_full, v_full, mask, SCALE)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(sdpa)[live],
+                               rtol=2e-5, atol=2e-5)
+    return got
+
+
+@given(st.sampled_from([4, 8, 16]), st.sampled_from([1, 2, 4]),
+       st.sampled_from([2, 4, 5, 8]), st.integers(0, 10_000))
+def test_sq_parity_fp32(ps, G, sq, seed):
+    _check_sq(*_case_sq(seed, ps, G, sq))
+
+
+@given(st.sampled_from([4, 8]), st.sampled_from([1, 4]),
+       st.sampled_from([4, 5]), st.integers(0, 10_000))
+def test_sq_parity_int8(ps, G, sq, seed):
+    q, k8, v8, bt, lengths = _case_sq(seed, ps, G, sq, int8=True)
+    _check_sq(q, k8, v8, bt, lengths, kv_qscale=KV_QSCALE)
+    kf = k8.astype(jnp.float32) / KV_QSCALE
+    vf = v8.astype(jnp.float32) / KV_QSCALE
+    got8 = ops.paged_attention(q, k8, v8, bt, lengths,
+                               scale=SCALE, kv_qscale=KV_QSCALE)
+    gotf = ops.paged_attention(q, kf, vf, bt, lengths, scale=SCALE)
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(gotf),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sq_last_row_matches_decode_mode():
+    """Positional coupling between the two kernel modes: the LAST query
+    row of an Sq block sits at position lengths - 1, i.e. exactly where
+    the decode (Sq=1) mode puts its single query — outputs must agree."""
+    q, kp, vp, bt, lengths = _case_sq(11, 8, 2, 4)
+    out_sq = ops.paged_attention(q, kp, vp, bt, lengths, scale=SCALE)
+    out_1 = ops.paged_attention(q[:, -1], kp, vp, bt, lengths, scale=SCALE)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(out_sq)[live, -1],
+                               np.asarray(out_1)[live],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sq_length_zero_rows_are_zero():
+    q, kp, vp, bt, lengths = _case_sq(0, 8, 2, 4)
+    got = np.asarray(ops.paged_attention(q, kp, vp, bt, lengths, scale=SCALE))
+    assert (got[np.asarray(lengths) == 0] == 0).all()
+    assert np.isfinite(got).all()
+
+
+def test_sq_unmapped_tail_matches_gather():
+    """Ragged chunk whose table tail is unmapped (the idle-lane / frozen
+    slot drop-write region): kernel must reproduce the fill-zeros gather."""
+    q, kp, vp, bt, lengths = _case_sq(7, 4, 1, 4)
+    n_pages = kp.shape[0]
+    bt = bt.at[:, 2:].set(n_pages)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, scale=SCALE)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lengths, scale=SCALE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: chunked drive is greedy bit-exact vs the waved baseline
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, B, P, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, P), 0, cfg.vocab_size), np.int32)
+
+
+def _chunked_generate(eng, prompts, max_new):
+    """Drive the unified step program to completion: admit every prompt
+    into the fill queue, then loop build_schedule/decode_chunk/harvest
+    until all slots finish and the queue drains."""
+    B = len(prompts)
+    for b in range(B):
+        eng.admit_chunked(np.asarray(prompts[b]), b, max_new)
+    rows = {b: [] for b in range(B)}
+    for _ in range(200):
+        sched, _ = eng.build_schedule()
+        toks, valid = eng.decode_chunk(schedule=sched)
+        t, v, fin, _pos = eng.harvest(toks, valid)
+        for b in range(B):
+            rows[b].extend(t[v[:, b], b].tolist())
+        if fin[:B].all() and not eng.fill_pending:
+            break
+    else:
+        raise AssertionError("chunked drive did not converge")
+    return np.asarray([rows[b][:max_new] for b in range(B)])
+
+
+@pytest.mark.parametrize("paged", [True, False],
+                         ids=["paged", "dense-pool"])
+def test_chunked_generate_bitexact(small, paged):
+    """P=11 over chunk_size=4 forces a ragged final chunk (the overlap
+    re-anchor path); tokens must equal the waved generate bit-for-bit."""
+    model, params = small
+    cfg = model.cfg
+    B, P, G = 4, 11, 6
+    prompts = _prompts(cfg, B, P)
+    eng_w = Engine(model, params, EngineConfig(
+        n_slots=B, max_len=P + G, chunk=G - 1, prefill_buckets=(P,),
+        paged=paged))
+    out_w = eng_w.generate(prompts, G)
+    eng_c = Engine(model, params, EngineConfig(
+        n_slots=B, max_len=P + G, chunk=4, prefill_buckets=(P,),
+        paged=paged, chunk_size=4))
+    assert eng_c.chunked_prefill  # auto-on for a pure token-KV family
+    out_c = _chunked_generate(eng_c, prompts, G)
+    np.testing.assert_array_equal(out_c, out_w)
+    assert eng_c.trace_counts["prefill"] == 0, \
+        "no prefill program may exist on the chunked path"
+
+
+def test_chunked_spec_decode_bitexact(small):
+    """Self-speculative drafter: the chunk lane fills BOTH arenas (target
+    + drafter) and the first token lands in row 0 of its macro step."""
+    model, params = small
+    cfg = model.cfg
+    B, P, G, k = 3, 10, 7, 2
+    prompts = _prompts(cfg, B, P)
+    draft = model.init(jax.random.PRNGKey(2))
+    mk = lambda ch: Engine(model, params, EngineConfig(
+        n_slots=B, max_len=P + G + k, chunk=ch, prefill_buckets=(P,),
+        draft_k=k, chunk_size=4), draft_params=draft)
+    out_w = mk(G - 1).generate(prompts, G)
+    out_c = _chunked_generate(mk(6), prompts, G)
+    np.testing.assert_array_equal(out_c, out_w)
+
+
+def test_chunked_shared_prefix_admission(small):
+    """admit_chunked maps refcounted prefix pages without a prefill pass:
+    page usage must reflect sharing and tokens must stay bit-exact."""
+    model, params = small
+    cfg = model.cfg
+    B, P, G, ps = 3, 11, 6, 16
+    pref = _prompts(cfg, 1, ps, seed=3)[0]
+    full = np.stack([np.concatenate([pref, p])
+                     for p in _prompts(cfg, B, P)])
+    mk = lambda **kw: Engine(model, params, EngineConfig(
+        n_slots=B, max_len=ps + P + G, prefill_buckets=(ps + P,),
+        page_size=ps, **kw))
+    eng_w = mk(chunk=G - 1)
+    eng_w.register_prefix(pref)
+    out_w = eng_w.generate(full, G)
+    eng_c = mk(chunk=5, chunk_size=4)
+    eng_c.register_prefix(pref)
+    fp0 = eng_c.free_pages
+    out_c = _chunked_generate(eng_c, full, G)
+    np.testing.assert_array_equal(out_c, out_w)
+    pages_per_req = -(-(P + G - 1) // ps)  # suffix only: prefix is shared
+    assert fp0 - eng_c.free_pages == B * pages_per_req
+    assert eng_c.stats["shared_tokens_saved"] == B * ps
+
+
+# ---------------------------------------------------------------------------
+# scheduler: chunked stream parity + TTFT / TPOT attribution
+# ---------------------------------------------------------------------------
+
+def _stream(cfg, n=9, seed=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(3, 20))).astype(np.int32),
+                    int(rng.integers(2, 8)))
+            for rid in range(n)]
+
+
+def _drive(model, params, reqs, *, chunked, paged, draft=None, k=0):
+    eng = Engine(model, params, EngineConfig(
+        n_slots=4, max_len=32, chunk=6, prefill_buckets=(8, 16, 32),
+        paged=paged, chunked_prefill=chunked, chunk_size=5, draft_k=k),
+        draft_params=draft)
+    comps = Scheduler(eng).run(
+        [Request(r.rid, r.tokens.copy(), r.max_new) for r in reqs])
+    return comps
+
+
+@pytest.mark.parametrize("paged", [True, False],
+                         ids=["paged", "dense-pool"])
+def test_scheduler_stream_bitexact(small, paged):
+    """9 mixed-length requests through 4 slots: slot churn, mid-stream
+    admission, frozen slots — same tokens chunked vs waved fallback."""
+    model, params = small
+    reqs = _stream(model.cfg)
+    w = {c.rid: c.tokens.tolist()
+         for c in _drive(model, params, reqs, chunked=False, paged=paged)}
+    c = {c.rid: c.tokens.tolist()
+         for c in _drive(model, params, reqs, chunked=True, paged=paged)}
+    assert set(w) == set(c) == set(range(9))
+    assert w == c
+
+
+def test_scheduler_stream_spec_bitexact(small):
+    model, params = small
+    reqs = _stream(model.cfg)
+    draft = model.init(jax.random.PRNGKey(2))
+    w = {c.rid: c.tokens.tolist()
+         for c in _drive(model, params, reqs, chunked=False, paged=True,
+                         draft=draft, k=2)}
+    c = {c.rid: c.tokens.tolist()
+         for c in _drive(model, params, reqs, chunked=True, paged=True,
+                         draft=draft, k=2)}
+    assert w == c
+
+
+def test_chunked_ttft_tpot_attribution(small):
+    """Every completion records a positive TTFT (attributed to the first
+    token's row within its chunk), an admission timestamp no later than
+    the first token (so ttft_s - admit_s is the admission-of-first-chunk
+    -> first-emitted-token latency), and TPOT entries for decoded tokens
+    ONLY — the first token belongs to TTFT, so len(tpot) == tokens - 1.
+    The deterministic counterpart ttft_rows charges whole unified steps
+    at their traced width (chunk_size lane rows + n_slots decode lanes),
+    so it is a positive multiple of that width; the waved fallback
+    charges the request's whole padded wave."""
+    model, params = small
+    reqs = _stream(model.cfg)
+    comps = _drive(model, params, reqs, chunked=True, paged=True)
+    assert sorted(c.rid for c in comps) == list(range(9))
+    step_rows = 5 + 4  # chunk_size + n_slots, the traced step width
+    for c in comps:
+        assert c.ttft_s > 0.0
+        assert 0.0 <= c.admit_s < c.ttft_s
+        assert c.ttft_rows > 0 and c.ttft_rows % step_rows == 0
+        assert len(c.tpot_s) == len(c.tokens) - 1
+        assert all(t > 0.0 for t in c.tpot_s)
+    for c in _drive(model, params, reqs, chunked=False, paged=True):
+        # a wave of B requests padded to bucket P charges >= B * P rows
+        assert c.ttft_rows >= 8  # smallest bucket, wave of one
+
+
+# ---------------------------------------------------------------------------
+# eligibility: non-token-KV families stay on the waved path
+# ---------------------------------------------------------------------------
+
+def test_oversized_chunk_pins_waved_fallback(small):
+    """A chunk that cannot fit the cache extent (chunk_size > max_len)
+    cannot stream any prompt: auto mode must resolve to the waved
+    fallback instead of erroring, and forcing chunked_prefill raises."""
+    model, params = small
+    mk = lambda **kw: Engine(model, params, EngineConfig(
+        n_slots=2, max_len=12, chunk=4, prefill_buckets=(8,),
+        chunk_size=16, **kw))
+    assert not mk().chunked_prefill
+    with pytest.raises(ValueError, match="chunk_size"):
+        mk(chunked_prefill=True)
+
+
+def test_hybrid_family_pins_waved_fallback():
+    """A hybrid (attention + recurrent) family cannot stream its prompt
+    through the chunk lane: chunked_prefill must auto-resolve False,
+    forcing it must raise, and the waved scheduler path must still serve
+    greedy-correct completions."""
+    cfg = get_config("zamba2-7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda **kw: Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32, chunk=4, prefill_buckets=(8, 16), **kw))
+    eng = mk()
+    assert not eng.chunked_prefill
+    with pytest.raises(ValueError, match="chunked prefill"):
+        mk(chunked_prefill=True)
+    reqs = _stream(cfg, n=3, seed=1)
+    comps = Scheduler(eng).run(reqs)
+    assert sorted(c.rid for c in comps) == [0, 1, 2]
+    assert eng.trace_counts["prefill"] >= 1  # served by the waved path
+    for c in comps:
+        assert len(c.tokens) == reqs[c.rid].max_new
+
+
+# ---------------------------------------------------------------------------
+# trace pins: the unified step program never retraces across fill loads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", sorted(contracts.CHUNKED_TRACE_CELLS))
+def test_chunked_trace_pins(cell):
+    measured, findings = contracts.run_chunked_trace_cell(cell)
+    assert not findings, [f.message for f in findings]
+    assert measured == contracts.EXPECTED_CHUNKED_TRACES[cell]

@@ -102,7 +102,10 @@ def test_slot_admit_release_unit():
                     jnp.asarray([5, 7], jnp.int32),
                     jnp.asarray([9, 12], jnp.int32))
     assert np.asarray(st.active).tolist() == [False, True, False, True]
-    assert np.asarray(st.pos).tolist() == [0, 5, 0, 7]
+    # free slots park their write index at FREE_POS so frozen-lane KV
+    # writes drop instead of landing in freshly mapped pages
+    F = SLOT.FREE_POS
+    assert np.asarray(st.pos).tolist() == [F, 5, F, 7]
     SLOT.check_invariants(st)
     # out-of-range padding index is dropped, not clipped onto slot 3
     st2 = SLOT.admit(st, jnp.asarray([4], jnp.int32),
@@ -111,6 +114,7 @@ def test_slot_admit_release_unit():
     assert np.asarray(st2.last_token).tolist() == np.asarray(st.last_token).tolist()
     st3 = SLOT.release(st, jnp.asarray([1], jnp.int32))
     assert np.asarray(st3.active).tolist() == [False, False, False, True]
+    assert np.asarray(st3.pos).tolist() == [F, F, F, 7]
     SLOT.check_invariants(st3)
 
 
