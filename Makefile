@@ -1,8 +1,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-kernels test-serve-families test-serve-mesh \
-	test-sparse-serve test-spec-decode test-chunked-prefill analyze ci \
-	bench bench-serving serve
+	test-sparse-serve test-spec-decode test-chunked-prefill test-scores \
+	analyze ci bench bench-serving serve
 
 # tier-1 gate: every test file must collect and pass (includes the
 # serve-engine and paged-KV suites: tests/test_serve.py, tests/test_paging.py)
@@ -50,6 +50,15 @@ test-spec-decode:
 test-chunked-prefill:
 	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
 	    tests/test_chunked_prefill.py
+
+# score-zoo lane: the core/scores.py registry (parity vs the hand-rolled
+# wanda path, valid 2:4 from every score, RO survival) + the engine's
+# live calibration taps (snapshot-vs-offline stats parity, greedy
+# bit-exactness, reprune/repack round-trip) — the fast loop when touching
+# core/scores.py, core/regional.py or the calib_taps plumbing
+test-scores:
+	env -u XLA_FLAGS JAX_PLATFORMS=cpu $(PY) -m pytest -x -q \
+	    tests/test_scores.py
 
 # mesh lane: sharded-vs-single-device serving parity (slow-marked subprocess
 # tests; each child forces an 8-device CPU host itself, so the parent env is

@@ -14,7 +14,7 @@ import time
 from benchmarks import (fig3_blockwise, table1_perplexity, table2_zeroshot,
                         table3_cost, table4_lora, table5_high_sparsity,
                         table6_structured, table7_latency, table8_alpha,
-                        table9_serving)
+                        table9_serving, table10_scores)
 from benchmarks.common import trained_params
 
 ALL = {
@@ -28,6 +28,7 @@ ALL = {
     "table7": table7_latency,
     "table8": table8_alpha,
     "table9": table9_serving,
+    "table10": table10_scores,
 }
 
 
@@ -143,6 +144,28 @@ def main() -> None:
             print(f"claim,table9_chunked_stream_tok_per_s,"
                   f"{ck['chunked_stream_tok_per_s']:.0f}_vs_waved_"
                   f"{ck['waved_stream_tok_per_s']:.0f}")
+    if "table10" in results:
+        r = results["table10"]
+        z = r["zoo"]
+        # every registered score must produce a working 2:4 artifact (the
+        # zoo gate: no registry entry is allowed to silently break pruning)
+        finite = all(v == v and v != float("inf") for v in z.values())
+        print(f"claim,table10_all_registered_scores_prune,"
+              f"{finite}_({len(z)}_scores)")
+        best = min(z, key=z.get)
+        print(f"claim,table10_best_2:4_score,{best}_ppl={z[best]:.3f}")
+        o = r["online"]
+        # the HARD online-calibration gate: re-pruning from live shifted
+        # traffic must not lose to the generic offline calibration on that
+        # traffic (bit-exact tap parity + pinned trace_counts are asserted
+        # inside the benchmark itself)
+        print(f"claim,table10_online_beats_offline,"
+              f"{o['online'] <= o['offline']}")
+        print(f"claim,table10_online_vs_offline_ppl_{o['method']},"
+              f"{o['online']:.2f}_vs_{o['offline']:.2f}")
+        if "online_wanda" in o:
+            print(f"claim,table10_online_beats_offline_wanda,"
+                  f"{o['online_wanda'] <= o['offline_wanda']}")
 
 
 if __name__ == "__main__":

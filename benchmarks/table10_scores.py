@@ -1,0 +1,197 @@
+"""Paper extension (§12): pruning-score zoo + online calibration vs offline.
+
+Part 1 — the score zoo: every score registered in core/scores.py (magnitude,
+wanda, wanda++ variants, gblm, stade, connect) pruned at 2:4 through the
+Table 1 harness. One registry drives the pruner, the CLI and this table, so
+a newly registered score lands in the benchmark with zero wiring.
+
+Part 2 — online calibration under distribution shift: the deployment
+scenario EngineConfig.calib_taps exists for. The shifted serving traffic
+walks the SAME learned Markov chain the model was trained on, but starts
+and restarts (at an elevated rate) inside the rare-token band — a covariate
+shift over learned structure, the regime where calibration choice matters.
+(A fully foreign chain is useless here: the model has no structure to
+preserve on it, so every mask is equally bad — see benchmarks/PROTOCOL.md.)
+
+An offline-calibrated 2:4 artifact (standard seed-0 calibration stream)
+serves that shifted traffic; the tap-enabled engine accumulates per-channel
+input statistics from it inside the unchanged jitted step programs.
+Re-scoring the dense weights against the snapshot (``reprune_from_stats``)
+and hot-swapping via ``Engine.repack`` yields a mask calibrated to what the
+engine actually serves. Gates asserted here (checked again in
+benchmarks/run.py claims):
+
+  * greedy output with taps on is bit-exact vs taps off, at identical
+    ``trace_counts`` (statistics are free — no retrace, no extra sync);
+  * ``repack`` does not retrace, and a fresh engine built on the re-pruned
+    weights emits the same tokens as the hot-swapped one;
+  * online-recalibrated perplexity on the shifted stream <= the offline
+    artifact's (matching-method comparison — same score both sides, only
+    the calibration distribution differs).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import (BENCH_ALPHA, emit, perplexity, prune_with,
+                               trained_params)
+from repro.configs.base import PruneConfig
+from repro.core import scores as SC
+from repro.core.pruner import reprune_from_stats
+from repro.data.calibration import SyntheticLM
+from repro.serve import Engine, EngineConfig, SamplingConfig
+
+N_PROMPTS, PROMPT_LEN, GEN, SLOTS = 32, 64, 8, 8
+OUT_JSONL = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                         "table10_scores.jsonl")
+BAND_LO_FRAC, RESTART = 0.75, 0.3  # rare-token band, elevated restart rate
+ONLINE_METHOD = "wanda++rgs"  # matching-method cell: same score both sides
+
+
+def shifted_sample(vocab: int, n: int, seq: int, stream_seed: int):
+    """Traffic from the learned chain, state-biased to the rare-token band.
+
+    Same succ/sp tables as the training stream (SyntheticLM seed 0), but
+    the walk starts — and restarts with probability ``RESTART`` instead of
+    the stream's 0.1 — from the unigram renormalized over ranks
+    [0.75 V, V). Transitions the model knows, channel statistics it rarely
+    saw during generic calibration."""
+    gen = SyntheticLM(vocab, seed=0)
+    uni, succ, sp = gen._tables()
+    lo = int(vocab * BAND_LO_FRAC)
+    p = uni.copy()
+    p[:lo] = 0.0
+    p /= p.sum()
+    rng = np.random.default_rng((0, stream_seed, 77))
+    out = np.empty((n, seq), np.int32)
+    cur = rng.choice(vocab, size=n, p=p)
+    out[:, 0] = cur
+    for t in range(1, seq):
+        u = rng.random(n)
+        choice = (rng.random(n)[:, None] < np.cumsum(sp[cur], -1)).argmax(-1)
+        nxt = succ[cur, choice]
+        r = u < RESTART
+        if r.any():
+            nxt[r] = rng.choice(vocab, size=int(r.sum()), p=p)
+        out[:, t] = nxt
+        cur = nxt
+    return out
+
+
+def _ppl_on(model, params, toks):
+    ev = {"tokens": jnp.asarray(toks[:, :-1]),
+          "labels": jnp.asarray(toks[:, 1:])}
+    return float(jnp.exp(model.loss(params, ev)[0]))
+
+
+def _engine(model, params, calib_taps):
+    ecfg = EngineConfig(n_slots=SLOTS, max_len=PROMPT_LEN + GEN,
+                        chunk=GEN - 1, prefill_buckets=(PROMPT_LEN,),
+                        calib_taps=calib_taps)
+    return Engine(model, params, ecfg, SamplingConfig())
+
+
+def run(model=None, params=None):
+    if model is None:
+        model, params = trained_params()
+    rows = [("table10/dense", 0, f"ppl={perplexity(model, params):.3f}")]
+    results = {}
+
+    # ---- part 1: the zoo, every registered score at 2:4 --------------------
+    zoo = {}
+    for method in SC.available():
+        pruned, secs = prune_with(model, params, method, "2:4", 0.5)
+        ppl = perplexity(model, pruned)
+        zoo[method] = ppl
+        rows.append((f"table10/2:4/{method}",
+                     round(secs * 1e6 / max(model.cfg.num_layers, 1)),
+                     f"ppl={ppl:.3f}"))
+    results["zoo"] = zoo
+
+    # ---- part 2: online vs offline calibration under shift -----------------
+    vocab = model.cfg.vocab_size
+    offline, _ = prune_with(model, params, ONLINE_METHOD, "2:4", 0.5)
+    ev_toks = shifted_sample(vocab, 32, PROMPT_LEN + 1, stream_seed=2)
+    ppl_dense_shift = _ppl_on(model, params, ev_toks)
+    ppl_offline = _ppl_on(model, offline, ev_toks)
+
+    # serve shifted traffic on the offline artifact, taps on vs off
+    eng = _engine(model, offline, calib_taps=True)
+    ref = _engine(model, offline, calib_taps=False)
+    prompts = shifted_sample(vocab, N_PROMPTS, PROMPT_LEN, stream_seed=3)
+    for i in range(0, N_PROMPTS, SLOTS):
+        out = eng.generate(prompts[i:i + SLOTS], GEN)
+        out_ref = ref.generate(prompts[i:i + SLOTS], GEN)
+        assert np.array_equal(out, out_ref), \
+            "calib taps changed greedy output"
+    assert eng.trace_counts == ref.trace_counts, \
+        (eng.trace_counts, ref.trace_counts)
+    snap = eng.calibration_snapshot()
+    traces_before = dict(eng.trace_counts)
+
+    # re-score the DENSE weights against the live statistics; the regional
+    # gradient replays a window of the shifted traffic itself
+    online = reprune_from_stats(
+        model, params, snap["stats"],
+        PruneConfig(method=ONLINE_METHOD, pattern="2:4", alpha=BENCH_ALPHA),
+        calib=jnp.asarray(prompts[:8]))
+    ppl_online = _ppl_on(model, online, ev_toks)
+
+    # second cell, stats-only score: the snapshot is method-independent, so
+    # the same live statistics re-score wanda with no extra serving
+    offline_w, _ = prune_with(model, params, "wanda", "2:4", 0.5)
+    online_w = reprune_from_stats(model, params, snap["stats"],
+                                  PruneConfig(method="wanda", pattern="2:4"))
+    ppl_offline_w = _ppl_on(model, offline_w, ev_toks)
+    ppl_online_w = _ppl_on(model, online_w, ev_toks)
+
+    # hot-swap: repack must not retrace, and must match a fresh build
+    eng.repack(online)
+    out_swapped = eng.generate(prompts[:SLOTS], GEN)
+    assert dict(eng.trace_counts) == traces_before, \
+        "repack retraced the step programs"
+    fresh = _engine(model, online, calib_taps=False)
+    assert np.array_equal(out_swapped, fresh.generate(prompts[:SLOTS], GEN)), \
+        "hot-swapped engine diverges from fresh build on re-pruned weights"
+
+    rows += [
+        ("table10/shift/dense", 0, f"ppl={ppl_dense_shift:.3f}"),
+        (f"table10/shift/offline_{ONLINE_METHOD}", 0,
+         f"ppl={ppl_offline:.3f}"),
+        (f"table10/shift/online_{ONLINE_METHOD}", 0,
+         f"ppl={ppl_online:.3f}"),
+        ("table10/shift/online_vs_offline", 0,
+         f"delta={(ppl_offline - ppl_online) / ppl_offline * 100:.1f}%"),
+        ("table10/shift/offline_wanda", 0, f"ppl={ppl_offline_w:.3f}"),
+        ("table10/shift/online_wanda", 0, f"ppl={ppl_online_w:.3f}"),
+        ("table10/shift/live_tokens", int(snap["tokens"]), ""),
+    ]
+    results["online"] = {
+        "method": ONLINE_METHOD,
+        "dense": ppl_dense_shift,
+        "offline": ppl_offline,
+        "online": ppl_online,
+        "offline_wanda": ppl_offline_w,
+        "online_wanda": ppl_online_w,
+        "tokens": float(snap["tokens"]),
+    }
+    emit(rows)
+    try:
+        os.makedirs(os.path.dirname(os.path.abspath(OUT_JSONL)),
+                    exist_ok=True)
+        with open(OUT_JSONL, "w") as f:
+            f.write(json.dumps({"dense_ppl": perplexity(model, params),
+                                "zoo": zoo, "online": results["online"]})
+                    + "\n")
+    except OSError:
+        pass
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python results/report.py results/dryrun_v2.jsonl [--mesh 16x16]
     PYTHONPATH=src python results/report.py results/table9_serving.jsonl --serving
+    PYTHONPATH=src python results/report.py results/table10_scores.jsonl --scores
 """
 import json
 import sys
@@ -146,6 +147,32 @@ def serving_table(path):
     return "\n".join(rows)
 
 
+def scores_table(path):
+    """Markdown table for benchmarks/table10_scores.py JSONL records."""
+    rows = []
+    for line in open(path):
+        r = json.loads(line)
+        rows.append("| score | 2:4 ppl (standard eval) |")
+        rows.append("|---|---|")
+        rows.append(f"| dense | {r['dense_ppl']:.3f} |")
+        for name, ppl in sorted(r["zoo"].items(), key=lambda kv: kv[1]):
+            rows.append(f"| {name} | {ppl:.3f} |")
+        o = r.get("online")
+        if o:
+            rows.append("")
+            rows.append("| shifted-traffic cell | ppl |")
+            rows.append("|---|---|")
+            rows.append(f"| dense | {o['dense']:.3f} |")
+            rows.append(f"| offline {o['method']} | {o['offline']:.3f} |")
+            rows.append(f"| online {o['method']} "
+                        f"({o['tokens']:.0f} live tokens) | "
+                        f"{o['online']:.3f} |")
+            if "offline_wanda" in o:
+                rows.append(f"| offline wanda | {o['offline_wanda']:.3f} |")
+                rows.append(f"| online wanda | {o['online_wanda']:.3f} |")
+    return "\n".join(rows)
+
+
 def summary(recs):
     n_ok = sum(1 for r in recs.values() if r["status"] == "OK")
     n_skip = sum(1 for r in recs.values() if r["status"].startswith("SKIP"))
@@ -160,6 +187,9 @@ def summary(recs):
 if __name__ == "__main__":
     if "--serving" in sys.argv:
         print(serving_table(sys.argv[1]))
+        sys.exit(0)
+    if "--scores" in sys.argv:
+        print(scores_table(sys.argv[1]))
         sys.exit(0)
     recs = load(sys.argv[1])
     mesh = sys.argv[3] if len(sys.argv) > 3 else "16x16"

@@ -211,7 +211,10 @@ class TrainConfig:
 class PruneConfig:
     """Wanda++ hyperparameters — defaults are the paper's."""
 
-    method: str = "wanda++"  # magnitude|wanda|sparsegpt|gblm|wanda++rgs|wanda++ro|wanda++
+    # any name registered in core/scores.py (magnitude|wanda|wanda++rgs|
+    # wanda++ro|wanda++|gblm|stade|connect) or "sparsegpt" (driven by
+    # core/sparsegpt.py's OBS solver instead of the score registry)
+    method: str = "wanda++"
     sparsity: float = 0.5
     pattern: str = "2:4"  # "unstructured" | "N:M" | "row"
     alpha: float = 100.0  # RGS scaling factor (paper Eq. 4)

@@ -12,8 +12,13 @@ a mesh, the same jitted per-block functions run as SPMD programs (see
 launch/prune.py): calibration samples shard over `data`, block weights over
 `model`, and the only cross-device reduction is the grad/tap psum.
 
-Methods: magnitude | wanda | sparsegpt | gblm | wanda++rgs | wanda++ro | wanda++
-(`wanda++ro` = Wanda score + RO; `wanda++rgs` = RGS score, no RO.)
+``PruneConfig.method`` resolves through the score registry in
+``core/scores.py`` (magnitude | wanda | wanda++ro | wanda++rgs | wanda++ |
+gblm | stade | connect); sparsegpt stays a separate driver (weight-update
+solver, not a score). Each registry entry declares the stats it consumes, so
+the same ``apply_prune`` serves offline calibration (``block_io_stats_full``)
+and live-traffic snapshots (``Engine.calibration_snapshot`` →
+``reprune_from_stats``).
 """
 from __future__ import annotations
 
@@ -27,8 +32,8 @@ from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import masks as M
 from repro.core import ro as RO
 from repro.core import scores as SC
-from repro.core.regional import (block_io_stats, full_model_grad_rms,
-                                 regional_grad_rms)
+from repro.core.regional import (block_io_stats, block_io_stats_full,
+                                 full_model_grad_rms, regional_grad_rms)
 from repro.models import blocks as B
 from repro.models.layers import default_positions
 from repro.models.model import Model
@@ -87,16 +92,54 @@ def _positions(cfg: ModelConfig, x):
 # scoring + destructive mask application
 # ---------------------------------------------------------------------------
 
-def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
+# connect-style co-activation partner: a gate/up projection's output channel
+# i is the down projection's input channel, so the partner's abssum closes
+# the rank-1 connectivity factor
+_CO_PARTNER = {"wg": "wd", "wu": "wd", "w1": "w2"}
+
+
+def _stat_entry(stats, name):
+    """One linear's raw stats: a full dict ({"sumsq", ...}) or, legacy, a
+    bare xnorm array. Normalized to a dict (copy; callers may extend it)."""
+    raw = None if stats is None else stats.get(name)
+    if raw is None:
+        return {}
+    if isinstance(raw, dict):
+        st = dict(raw)
+        if "xnorm" not in st and "sumsq" in st:
+            st["xnorm"] = jnp.sqrt(st["sumsq"])
+        return st
+    return {"xnorm": raw}
+
+
+def _co_abssum(stats, name):
+    base, _, leaf = name.rpartition(".")
+    partner = _CO_PARTNER.get(leaf)
+    if partner is None:
+        return None
+    pname = f"{base}.{partner}" if base else partner
+    raw = None if stats is None else stats.get(pname)
+    if isinstance(raw, dict):
+        return raw.get("abssum")
+    return None
+
+
+def apply_prune(bp, stats: Optional[Dict], G, pcfg: PruneConfig,
                 prunable: Dict[str, tuple], with_mask: bool = False):
     """Score every prunable weight and zero the pruned entries (destructive).
     RO's masked RMSprop steps keep them zero mid-round and ``ro_fit``
     re-applies the prune after the final round, so exact sparsity survives.
 
+    ``stats`` maps linear name -> per-channel stats: either the full dict of
+    ``block_io_stats_full`` / ``Engine.calibration_snapshot()["stats"]``
+    (from which xnorm is derived), or — legacy — a bare xnorm array. The
+    method resolves through the ``core/scores.py`` registry; a score whose
+    declared ``needs`` aren't present in ``stats`` raises.
+
     ``with_mask=True`` additionally returns the 0/1 keep-mask tree (same
     structure as ``bp``, all-ones at non-prunable leaves) — the contract
     ``ro.ro_fit`` expects from its ``prune_fn``."""
-    method = pcfg.method
+    entry = SC.get_score(pcfg.method)
     keep = jax.tree_util.tree_map(
         lambda p: jnp.ones(p.shape, jnp.bool_), bp) if with_mask else None
     for name, path in prunable.items():
@@ -104,15 +147,26 @@ def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
         if w is None:
             continue
         w_oi = SC.to_oi(w)
-        if method == "magnitude":
-            s = SC.magnitude_score(w_oi)
-        elif method in ("wanda", "wanda++ro"):
-            s = SC.wanda_score(w_oi, xnorm[name])
-        elif method in ("wanda++", "wanda++rgs", "gblm"):
-            g_oi = SC.to_oi(tree_get(G, path))
-            s = SC.rgs_score(w_oi, xnorm[name], g_oi, pcfg.alpha)
-        else:
-            raise ValueError(f"unknown method {method}")
+        st = _stat_entry(stats, name)
+        st["alpha"] = pcfg.alpha
+        if entry.grad is not None:
+            g = tree_get(G, path)
+            if g is None:
+                raise ValueError(
+                    f"score {entry.name!r} blends a {entry.grad} gradient "
+                    f"but none was provided for {name!r}")
+            st["grad"] = SC.to_oi(g)
+        if "abssum" in entry.needs:
+            co = _co_abssum(stats, name)
+            if co is not None:
+                st["co_abssum"] = co
+        missing = [k for k in entry.needs if k not in st]
+        if missing:
+            raise ValueError(
+                f"score {entry.name!r} needs stats {missing} for {name!r}; "
+                f"available: {sorted(set(st) - {'alpha'})} — collect full "
+                "stats (block_io_stats_full or Engine.calib_taps)")
+        s = entry.fn(w_oi, st)
         mask = M.make_mask(s, pcfg.pattern, pcfg.sparsity)
         bp = tree_set(bp, path, SC.from_oi(jnp.where(mask, w_oi, 0)))
         if with_mask:
@@ -126,42 +180,66 @@ def apply_prune(bp, xnorm: Optional[Dict], G, pcfg: PruneConfig,
 
 def prune_block(block_fn, bp, xs, pcfg: PruneConfig, prunable, key,
                 grad_chunk: int = 8, G_override=None):
-    """Returns (pruned bp, report dict)."""
+    """Returns (pruned bp, report dict). ``report["seconds"]`` is pure
+    compute: the block's jitted programs are AOT-compiled ahead of the timer
+    (their XLA time lands in ``report["compile_seconds"]``) and the result is
+    ``block_until_ready`` before the clock is read. (The RO rounds' own scan
+    programs still compile lazily inside the timed region on the first
+    block; later blocks hit the jit cache.)"""
     method = pcfg.method
-    needs_grad = method in ("wanda++", "wanda++rgs", "gblm")
-    needs_ro = method in ("wanda++", "wanda++ro")
+    entry = SC.get_score(method)
+    needs_grad = entry.grad is not None
+    needs_ro = entry.ro
 
-    t0 = time.perf_counter()
-    stats_j = jax.jit(lambda b, x: block_io_stats(block_fn, b, x))
+    stats_j = jax.jit(lambda b, x: block_io_stats_full(block_fn, b, x))
     grad_j = jax.jit(lambda b, x: regional_grad_rms(block_fn, b, x, grad_chunk))
-    prune_j = jax.jit(lambda b, xn, g: apply_prune(b, xn, g, pcfg, prunable))
+    prune_j = jax.jit(lambda b, st, g: apply_prune(b, st, g, pcfg, prunable))
+    prune_mask_j = jax.jit(
+        lambda b, st, g: apply_prune(b, st, g, pcfg, prunable, with_mask=True))
 
+    # -- compile phase (excluded from report["seconds"]) --------------------
+    tc0 = time.perf_counter()
+    stats_abs = jax.eval_shape(stats_j, bp, xs)[1]
+    G_abs = None
+    if needs_grad:
+        G_abs = (jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), G_override)
+            if G_override is not None else jax.eval_shape(grad_j, bp, xs))
+    stats_j.lower(bp, xs).compile()
+    if needs_grad and G_override is None:
+        grad_j.lower(bp, xs).compile()
+    prune_j.lower(bp, stats_abs, G_abs).compile()
+    if needs_ro:
+        prune_mask_j.lower(bp, stats_abs, G_abs).compile()
+    compile_s = time.perf_counter() - tc0
+
+    # -- compute phase ------------------------------------------------------
+    t0 = time.perf_counter()
     G = None
     if needs_grad:
         G = G_override if G_override is not None else grad_j(bp, xs)
-    dense_out, xnorm = stats_j(bp, xs)
+    dense_out, stats = stats_j(bp, xs)
 
-    report: Dict[str, Any] = {"method": method}
+    report: Dict[str, Any] = {"method": method, "compile_seconds": compile_s}
     if not needs_ro:
-        bp = prune_j(bp, xnorm, G)
+        bp = prune_j(bp, stats, G)
+        jax.block_until_ready(bp)
         report["seconds"] = time.perf_counter() - t0
         return bp, report
 
     # K x [prune -> RO] (steps 3-9)
-    prune_mask_j = jax.jit(
-        lambda b, xn, g: apply_prune(b, xn, g, pcfg, prunable, with_mask=True))
-
     def prune_fn(bp_):
-        _, xn = stats_j(bp_, xs)  # fresh layer inputs; G reused (paper Sec 4.1)
-        return prune_mask_j(bp_, xn, G)  # (bp, keep-mask) for masked RO steps
+        _, st = stats_j(bp_, xs)  # fresh layer inputs; G reused (paper Sec 4.1)
+        return prune_mask_j(bp_, st, G)  # (bp, keep-mask) for masked RO steps
 
     bp, ro_losses = RO.ro_fit(block_fn, bp, xs, dense_out, pcfg, key, prune_fn)
 
     # steps 10-11: recompute gradient, final prune with fresh statistics
     if needs_grad:
         G = grad_j(bp, xs)
-    _, xnorm = stats_j(bp, xs)
-    bp = prune_j(bp, xnorm, G)
+    _, stats = stats_j(bp, xs)
+    bp = prune_j(bp, stats, G)
+    jax.block_until_ready(bp)
     report["ro_losses"] = [float(l) for l in ro_losses]
     report["seconds"] = time.perf_counter() - t0
     return bp, report
@@ -196,7 +274,7 @@ def prune_model(model: Model, params, calib, pcfg: PruneConfig,
 
     # full-model gradient for the GBLM baseline (computed once, per-sample RMS)
     gblm_G = None
-    if pcfg.method == "gblm":
+    if pcfg.method != "sparsegpt" and SC.get_score(pcfg.method).grad == "full":
         gblm_G = _gblm_grads(model, params, calib)
 
     reports = []
@@ -233,6 +311,61 @@ def prune_model(model: Model, params, calib, pcfg: PruneConfig,
     out = dict(params)
     out["blocks"] = new_blocks
     return out, reports
+
+
+def reprune_from_stats(model: Model, params, stats, pcfg: PruneConfig,
+                       calib=None, progress: Callable = None):
+    """Online re-prune: re-score and re-prune every block against collected
+    per-linear traffic stats. Returns new params (dense weights, zeroed where
+    pruned) — callers re-pack compressed storage themselves (see
+    ``Engine.repack``).
+
+    ``stats``: the ``"stats"`` pytree of ``Engine.calibration_snapshot()`` —
+    name -> {"sumsq", "abssum", "sum", "count"} arrays stacked over layers
+    (leading dim ``num_layers``). This is a pure re-score + re-prune pass:
+    ``entry.ro`` is ignored (a serving engine cannot afford block-sequential
+    RO rounds mid-traffic). Gradient-blend scores replay ``calib`` tokens
+    (any (N, S) window of recent traffic — ragged N is fine) for the
+    regional gradients while the channel stats stay live; xnorm-family
+    scores need no forward at all.
+    """
+    cfg = model.cfg
+    if cfg.family == "hybrid":
+        raise ValueError("online re-prune does not cover the hybrid shared "
+                         "block (its stats aggregate over application sites)")
+    entry = SC.get_score(pcfg.method)
+    prunable = B.prunable_table(cfg)
+    block_fn = make_block_fn(cfg)
+    prop_j = jax.jit(lambda b, x: block_fn(b, x))
+    grad_j = jax.jit(lambda b, x: regional_grad_rms(block_fn, b, x))
+    prune_j = jax.jit(lambda b, st, g: apply_prune(b, st, g, pcfg, prunable))
+
+    xs = None
+    if entry.grad is not None:
+        if calib is None:
+            raise ValueError(
+                f"score {pcfg.method!r} blends a gradient; pass calib (recent "
+                "traffic tokens) to replay the regional backward")
+        xs = embed_calibration(model, params, calib)
+
+    blocks = params["blocks"]
+    new_blocks = blocks
+    for l in range(cfg.num_layers):
+        bp = jax.tree_util.tree_map(lambda a: a[l], blocks)
+        st_l = {name: {k: jnp.asarray(v)[l] for k, v in d.items()}
+                for name, d in stats.items()}
+        G = grad_j(bp, xs) if xs is not None else None
+        bp = prune_j(bp, st_l, G)
+        if xs is not None:
+            xs = prop_j(bp, xs)
+        new_blocks = jax.tree_util.tree_map(
+            lambda a, b: a.at[l].set(b), new_blocks, bp)
+        if progress:
+            progress(l, {"method": pcfg.method, "layer": l})
+
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
 
 
 def _gblm_grads(model: Model, params, calib):
@@ -285,17 +418,20 @@ def _prune_hybrid_shared(model: Model, params, xs, pcfg: PruneConfig, key):
 # ---------------------------------------------------------------------------
 
 def model_sparsity_report(model: Model, params) -> Dict[str, float]:
-    """Achieved zero-fraction per prunable weight (averaged over layers)."""
+    """Achieved zero-fraction per prunable weight (averaged over layers).
+    All means land on host in ONE ``jax.device_get`` (one blocking transfer
+    for the whole report, not one per weight)."""
     prunable = B.prunable_table(model.cfg)
-    rep = {}
+    means = {}
     for name, path in prunable.items():
         w = tree_get(params["blocks"], path)
         if w is None:
             continue
-        rep[name] = float(jnp.mean((w == 0).astype(jnp.float32)))
+        means[name] = jnp.mean((w == 0).astype(jnp.float32))
     if model.cfg.family == "hybrid":
         for name, path in B.PRUNABLE["hybrid_shared"].items():
             w = tree_get(params["shared_attn"], path)
             if w is not None:
-                rep["shared." + name] = float(jnp.mean((w == 0).astype(jnp.float32)))
-    return rep
+                means["shared." + name] = jnp.mean((w == 0).astype(jnp.float32))
+    host = jax.device_get(means)
+    return {k: float(v) for k, v in host.items()}

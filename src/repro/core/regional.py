@@ -18,44 +18,70 @@ import jax.numpy as jnp
 from repro.models import layers
 
 
-def make_tapped_lin(taps: Dict[str, jnp.ndarray]):
-    """A ``lin`` backend that records per-input-channel sum-of-squares."""
+def _resolve_chunk(n: int, chunk: int) -> int:
+    """Largest c <= chunk with n % c == 0 (mirrors analysis/vmem.py
+    resolve_block, kept local to avoid a core->analysis import). Live-traffic
+    calibration windows produce ragged N — prime N degrades to c=1 rather
+    than crashing, and the RMS denominator stays the exact sample count."""
+    for c in range(min(chunk, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
 
-    def lin(name, p, xin):
-        flat = xin.reshape(-1, xin.shape[-1]).astype(jnp.float32)
-        ss = jnp.sum(flat * flat, axis=0)
-        taps[name] = taps.get(name, 0.0) + ss
-        return layers.linear(p, xin)
 
-    return lin
+def make_tapped_lin(taps: Dict[str, Dict[str, jnp.ndarray]]):
+    """A ``lin`` backend that records per-input-channel running stats
+    ({"sumsq", "abssum", "sum", "count"} per linear — layers.input_stats)."""
+    return layers.stats_lin(lambda name, p, x: layers.linear(p, x), taps)
 
 
-def make_tapped_elin(taps: Dict[str, jnp.ndarray]):
-    """Expert einsum backend recording expert-conditional input sumsq.
+def make_tapped_elin(taps: Dict[str, Dict[str, jnp.ndarray]]):
+    """Expert einsum backend recording expert-conditional input stats.
 
-    xin: (B, E, C, In) -> taps[name]: (E, In). Only routed (slot-filled)
-    tokens contribute, which generalizes Wanda's ||X_j|| per expert.
+    xin: (B, E, C, In) -> taps[name]: stats dict with (E, In) sums and (E,)
+    counts. Only routed (slot-filled) tokens contribute: ``occ`` is the
+    routing occupancy (B, E, C) the MoE dispatch passes alongside the expert
+    buffers, and it masks the sums — so garbage (or merely zero-filled)
+    values in unrouted slots can neither contaminate the per-expert ||X||
+    stats nor inflate the token counts behind mean/std scores.
     """
 
-    def elin(name, w, xin, eq):
+    def elin(name, w, xin, eq, occ=None):
         x32 = xin.astype(jnp.float32)
-        ss = jnp.sum(x32 * x32, axis=(0, 2))  # (E, In)
-        taps[name] = taps.get(name, 0.0) + ss
+        if occ is None:
+            occf = jnp.ones(xin.shape[:-1], jnp.float32)
+        else:
+            occf = occ.astype(jnp.float32)
+        xw = x32 * occf[..., None]
+        st = {"sumsq": jnp.sum(x32 * xw, axis=(0, 2)),     # (E, In)
+              "abssum": jnp.sum(jnp.abs(xw), axis=(0, 2)),
+              "sum": jnp.sum(xw, axis=(0, 2)),
+              "count": jnp.sum(occf, axis=(0, 2))}         # (E,)
+        taps[name] = layers.acc_stats(taps.get(name), st)
         return jnp.einsum(eq, xin, w)
 
     return elin
 
 
-def block_io_stats(block_fn: Callable, bp, xs: jnp.ndarray
-                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+def block_io_stats_full(block_fn: Callable, bp, xs: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, Dict[str, Dict[str, jnp.ndarray]]]:
     """One instrumented forward over the whole calibration set.
 
     block_fn(bp, x, lin=, elin=) -> out.  xs: (N, S, D) calibration inputs.
-    Returns (dense_out (N,S,D), xnorm dict name->(.., in) L2 norms).
+    Returns (dense_out (N,S,D), stats dict name -> {"sumsq", "abssum",
+    "sum", "count"}) — the same per-linear layout Engine.calibration_snapshot
+    exports, so every registered score consumes either source unchanged.
     """
-    taps: Dict[str, jnp.ndarray] = {}
+    taps: Dict[str, Dict[str, jnp.ndarray]] = {}
     out = block_fn(bp, xs, lin=make_tapped_lin(taps), elin=make_tapped_elin(taps))
-    xnorm = {k: jnp.sqrt(v) for k, v in taps.items()}
+    return out, taps
+
+
+def block_io_stats(block_fn: Callable, bp, xs: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Back-compat wrapper: (dense_out, xnorm dict name->(.., in) L2 norms)."""
+    out, stats = block_io_stats_full(block_fn, bp, xs)
+    xnorm = {k: jnp.sqrt(v["sumsq"]) for k, v in stats.items()}
     return out, xnorm
 
 
@@ -65,8 +91,7 @@ def regional_grad_rms(block_fn: Callable, bp, xs: jnp.ndarray, chunk: int = 8):
     Returns a pytree matching ``bp`` (float32 leaves).
     """
     N = xs.shape[0]
-    chunk = min(chunk, N)
-    assert N % chunk == 0, f"N={N} not divisible by grad chunk={chunk}"
+    chunk = _resolve_chunk(N, chunk)
 
     def rgs_loss(bp_, x1):
         out = block_fn(bp_, x1[None])
@@ -93,8 +118,7 @@ def full_model_grad_rms(loss_fn: Callable, params, batches, chunk: int = 2):
     contrasts against). loss_fn(params, batch)->scalar; batches: pytree with
     leading dim N (per-sample batches)."""
     N = jax.tree_util.tree_leaves(batches)[0].shape[0]
-    chunk = min(chunk, N)
-    assert N % chunk == 0
+    chunk = _resolve_chunk(N, chunk)
 
     gfn = jax.grad(loss_fn)
 

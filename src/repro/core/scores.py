@@ -5,11 +5,34 @@ stacks) into this layout before scoring.
   magnitude:  |W|                                   (Han et al.)
   wanda:      |W| * ||X_j||_2                        (Eq. 1)
   rgs/gblm:   (alpha * G + ||X_j||_2) * |W|          (Eq. 4 / Eq. 2)
+  stade:      |W| * std(X_j)                         (arXiv 2503.22451)
+  connect:    |W| * sqrt(sum|X_j| * sum|X_out,i|)    (CoNNect-style)
 
 G is the RMS over per-sample gradients (Eq. 3); for RGS the gradient is the
 *regional* one (block-local L2 loss), for GBLM it is the full-model CE grad.
+
+Every score is registered in ``SCORES`` as a ``(w_oi, stats) -> score``
+function plus a declared stats requirement; ``PruneConfig.method`` resolves
+through this one table (pruner, benchmarks, launch CLI). ``stats`` is a
+per-linear dict; which keys a score reads is declared in ``needs``:
+
+  xnorm      (..., in)   L2 norm of each input channel over calib tokens
+  sumsq      (..., in)   running sum of x_j^2          (xnorm = sqrt(sumsq))
+  abssum     (..., in)   running sum of |x_j|
+  sum        (..., in)   running sum of x_j
+  count      () / (E,)   weighted token count behind the sums
+  grad       (.., out, in)  gradient RMS in w_oi layout (entry.grad != None)
+  alpha      scalar      RGS blend weight (from PruneConfig)
+  co_abssum  (..., out)  partner linear's abssum (connect co-activation);
+                         optional — the score degrades to sqrt(abssum) alone
+
+``entry.grad`` names which gradient feeds ``stats["grad"]`` ("regional" |
+"full"); ``entry.ro`` marks methods followed by regional-optimization rounds.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -34,6 +57,39 @@ def rgs_score(w_oi: jnp.ndarray, xnorm: jnp.ndarray, g_oi: jnp.ndarray,
 gblm_score = rgs_score
 
 
+def stade_score(w_oi: jnp.ndarray, sumsq: jnp.ndarray, xsum: jnp.ndarray,
+                count: jnp.ndarray) -> jnp.ndarray:
+    """STADE's std-based metric: |W_ij| * std(X_j), std over calib tokens.
+
+    For zero-mean channels this equals Wanda's metric up to a global 1/sqrt(n)
+    scale (rank-invariant); channels carrying a large DC offset are demoted.
+    """
+    n = jnp.maximum(jnp.asarray(count, jnp.float32), 1.0)
+    if n.ndim:  # per-expert counts (E,) against (E, in) sums
+        n = n[..., None]
+    mean = xsum.astype(jnp.float32) / n
+    var = sumsq.astype(jnp.float32) / n - mean * mean
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    return jnp.abs(w_oi).astype(jnp.float32) * std[..., None, :]
+
+
+def connect_score(w_oi: jnp.ndarray, abssum: jnp.ndarray,
+                  co_abssum: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """CoNNect-style co-activation score S_ij = |W_ij| * sqrt(A_j * B_i):
+    A_j = sum|X_j| over the linear's own inputs, B_i = the partner linear's
+    abssum over *its* inputs — for a gate/up projection that partner is the
+    block's down projection, whose input j == this linear's output channel i,
+    closing the rank-1 connectivity factorization. Without a partner the
+    score degrades to |W| * sqrt(A_j)."""
+    a = abssum.astype(jnp.float32)[..., None, :]          # (..., 1, in)
+    if co_abssum is None:
+        co = jnp.sqrt(a)
+    else:
+        b = co_abssum.astype(jnp.float32)[..., :, None]   # (..., out, 1)
+        co = jnp.sqrt(a * b)
+    return jnp.abs(w_oi).astype(jnp.float32) * co
+
+
 def to_oi(w: jnp.ndarray) -> jnp.ndarray:
     """Native (in, out) / (E, in, out) -> canonical (out, in) / (E, out, in)."""
     return jnp.swapaxes(w, -1, -2)
@@ -41,3 +97,80 @@ def to_oi(w: jnp.ndarray) -> jnp.ndarray:
 
 def from_oi(w_oi: jnp.ndarray) -> jnp.ndarray:
     return jnp.swapaxes(w_oi, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreEntry:
+    name: str
+    fn: Callable  # (w_oi, stats: dict) -> (..., out, in) float32 score
+    needs: Tuple[str, ...] = ()  # stat keys the fn reads (beyond alpha)
+    grad: Optional[str] = None   # None | "regional" | "full"
+    ro: bool = False             # RO rounds follow the prune
+
+
+SCORES: Dict[str, ScoreEntry] = {}
+
+
+def _register(name: str, needs: Tuple[str, ...] = (),
+              grad: Optional[str] = None, ro: bool = False):
+    def deco(fn):
+        SCORES[name] = ScoreEntry(name, fn, needs, grad, ro)
+        return fn
+    return deco
+
+
+def get_score(name: str) -> ScoreEntry:
+    try:
+        return SCORES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pruning score {name!r}; registered: {available()} "
+            "(sparsegpt is driven separately by core/sparsegpt.py)") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(SCORES))
+
+
+@_register("magnitude")
+def _magnitude(w_oi, stats):
+    return magnitude_score(w_oi)
+
+
+@_register("wanda", needs=("xnorm",))
+def _wanda(w_oi, stats):
+    return wanda_score(w_oi, stats["xnorm"])
+
+
+@_register("wanda++ro", needs=("xnorm",), ro=True)
+def _wanda_ro(w_oi, stats):
+    return wanda_score(w_oi, stats["xnorm"])
+
+
+@_register("wanda++rgs", needs=("xnorm", "grad"), grad="regional")
+def _wanda_rgs(w_oi, stats):
+    return rgs_score(w_oi, stats["xnorm"], stats["grad"], stats["alpha"])
+
+
+@_register("wanda++", needs=("xnorm", "grad"), grad="regional", ro=True)
+def _wanda_pp(w_oi, stats):
+    return rgs_score(w_oi, stats["xnorm"], stats["grad"], stats["alpha"])
+
+
+@_register("gblm", needs=("xnorm", "grad"), grad="full")
+def _gblm(w_oi, stats):
+    return gblm_score(w_oi, stats["xnorm"], stats["grad"], stats["alpha"])
+
+
+@_register("stade", needs=("sumsq", "sum", "count"))
+def _stade(w_oi, stats):
+    return stade_score(w_oi, stats["sumsq"], stats["sum"], stats["count"])
+
+
+@_register("connect", needs=("abssum",))
+def _connect(w_oi, stats):
+    return connect_score(w_oi, stats["abssum"], stats.get("co_abssum"))

@@ -31,8 +31,10 @@ def make_gram_lin(grams: Dict[str, jnp.ndarray]):
 
 
 def make_gram_elin(grams: Dict[str, jnp.ndarray]):
-    def elin(name, w, xin, eq):
+    def elin(name, w, xin, eq, occ=None):
         x32 = xin.astype(jnp.float32)  # (B, E, C, In)
+        if occ is not None:  # mask unrouted capacity slots out of the Gram
+            x32 = x32 * occ.astype(jnp.float32)[..., None]
         g = jnp.einsum("beci,becj->eij", x32, x32)
         grams[name] = grams.get(name, 0.0) + g
         return jnp.einsum(eq, xin, w)

@@ -1,0 +1,126 @@
+"""Offline re-prune from a saved live-traffic calibration snapshot.
+
+    # 1. serve real traffic with taps on, exporting the statistics:
+    PYTHONPATH=src python -m repro.launch.serve --arch llama1-7b --smoke \
+        --requests 16 --pruned 2:4 --save-calib snap.npz
+    # 2. later, re-score + re-prune the dense weights against that traffic:
+    PYTHONPATH=src python -m repro.launch.reprune --arch llama1-7b --smoke \
+        --snapshot snap.npz --method wanda --pattern 2:4 --out pruned_ckpt
+
+This is the offline half of the online-recalibration story
+(``--recalibrate-every`` in launch/serve.py is the in-place half): the
+engine's per-channel running ``sum(x^2)`` / ``sum|x|`` / ``sum(x)`` / token
+counts are exact over whatever traffic was served, so re-pruning against
+them is identical to re-pruning against that traffic replayed offline —
+without holding the tokens.
+
+The snapshot ``.npz`` stores one array per ``<linear-name>/<stat>`` key
+(stats stacked over layers, leading dim ``num_layers``) plus the scalar
+token count; ``save_snapshot`` / ``load_snapshot`` round-trip the
+``Engine.calibration_snapshot()`` pytree. Dense weights come from a
+checkpoint directory (``--params``, checkpoint/store.py layout) or, by
+default, the same seed-0 init launch/serve.py builds from.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import PruneConfig
+from repro.data import calibration_batch
+from repro.models.model import Model
+
+
+def save_snapshot(path: str, snap: dict) -> None:
+    """Write a ``Engine.calibration_snapshot()`` dict to ``path`` (.npz)."""
+    flat = {f"{name}/{k}": np.asarray(v)
+            for name, d in snap["stats"].items() for k, v in d.items()}
+    flat["tokens"] = np.asarray(float(snap.get("tokens", 0.0)))
+    np.savez(path, **flat)
+
+
+def load_snapshot(path: str) -> dict:
+    """Inverse of ``save_snapshot``; restores the nested stats pytree."""
+    with np.load(path) as z:
+        stats: dict = {}
+        tokens = 0.0
+        for key in z.files:
+            if key == "tokens":
+                tokens = float(z[key])
+                continue
+            name, stat = key.rsplit("/", 1)
+            stats.setdefault(name, {})[stat] = z[key]
+    xnorm = {name: np.sqrt(d["sumsq"]) for name, d in stats.items()
+             if "sumsq" in d}
+    return {"stats": stats, "xnorm": xnorm, "tokens": tokens}
+
+
+def reprune(arch: str, snapshot: str, method: str = "wanda",
+            pattern: str = "2:4", smoke: bool = True, params_dir: str = None,
+            out_dir: str = None, calib_len: int = 32):
+    """Re-score + re-prune dense weights against a saved snapshot.
+
+    Returns the new params. ``params_dir``/``out_dir`` use the
+    checkpoint/store.py pytree layout; without them the weights are the
+    seed-0 init (matching launch/serve.py) and nothing is written."""
+    from repro.core import scores as SC
+    from repro.core.pruner import model_sparsity_report, reprune_from_stats
+
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if params_dir:
+        from repro.checkpoint.store import load_pytree
+        params = load_pytree(params_dir, params)
+    snap = load_snapshot(snapshot)
+    print(f"[reprune] snapshot {snapshot}: {int(snap['tokens'])} live "
+          f"tokens, {len(snap['stats'])} tapped linears")
+    pcfg = PruneConfig(method=method, pattern=pattern)
+    calib = None
+    if SC.get_score(method).grad is not None:
+        calib = calibration_batch(cfg.vocab_size, 8, calib_len)
+    new_params = reprune_from_stats(model, params, snap["stats"], pcfg,
+                                    calib=calib)
+    rep = model_sparsity_report(model, new_params)
+    mean_sp = float(np.mean([v for v in rep.values()])) if rep else 0.0
+    print(f"[reprune] {method} @ {pattern}: mean sparsity "
+          f"{mean_sp:.3f} over {len(rep)} projections")
+    if out_dir:
+        from repro.checkpoint.store import save_pytree
+        save_pytree(out_dir, new_params,
+                    extra={"method": method, "pattern": pattern,
+                           "snapshot_tokens": snap["tokens"]})
+        print(f"[reprune] wrote re-pruned params -> {out_dir}")
+    return new_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama1-7b")
+    ap.add_argument("--snapshot", required=True,
+                    help=".npz from launch/serve.py --save-calib")
+    ap.add_argument("--method", default="wanda",
+                    help="score from the core/scores.py registry")
+    ap.add_argument("--pattern", default="2:4")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--params", default=None,
+                    help="checkpoint dir with dense weights (default: "
+                         "seed-0 init, matching launch/serve.py)")
+    ap.add_argument("--out", default=None,
+                    help="checkpoint dir to write the re-pruned weights")
+    ap.add_argument("--calib-len", type=int, default=32,
+                    help="token-window length replayed for gradient-blend "
+                         "scores")
+    args = ap.parse_args()
+    reprune(args.arch, args.snapshot, method=args.method,
+            pattern=args.pattern, smoke=args.smoke, params_dir=args.params,
+            out_dir=args.out, calib_len=args.calib_len)
+
+
+if __name__ == "__main__":
+    main()

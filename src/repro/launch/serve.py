@@ -25,6 +25,13 @@ the engine auto-packs 2:4 projections into compacted (vals + 2-bit idx)
 storage at build (``--compressed-24`` to control, ``--sparse-24-kernel``
 to force the Pallas decode matmul off-TPU);
 benchmarks/table9_serving.py quantifies the throughput + latency effect.
+
+Online calibration: ``--calib-taps`` collects Wanda-style per-channel input
+statistics from live traffic inside the unchanged jitted step programs;
+``--recalibrate-every N`` re-scores + re-prunes the dense weights against
+those statistics every N requests and hot-swaps the packed storage in place
+(``Engine.repack``, no retrace); ``--save-calib snap.npz`` exports the
+snapshot for ``python -m repro.launch.reprune`` offline.
 """
 from __future__ import annotations
 
@@ -51,8 +58,14 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
                  paged_kernel: bool = None, extra_len: int = 0, mesh=None,
                  compressed24: str = None, compressed24_kernel: bool = None,
                  self_spec: bool = False, draft_k: int = 4,
-                 chunked_prefill: bool = None, chunk_size: int = 16):
-    """Returns (engine, cfg). Prunes the weights first when requested.
+                 chunked_prefill: bool = None, chunk_size: int = 16,
+                 calib_taps: bool = False, prune_method: str = "wanda++"):
+    """Returns (engine, cfg, model, params). Prunes first when requested.
+
+    The returned ``params`` are the caller's dense copy (the engine packs
+    its own compressed24 storage internally) — online recalibration
+    re-scores THESE weights against live statistics and ``engine.repack``s
+    the result, so the original magnitudes are never lost to compaction.
 
     ``self_spec`` builds the self-speculation drafter: a Wanda++ 2:4-pruned
     copy of the target's weights (core/pruner.py regional-gradient recipe),
@@ -68,13 +81,14 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         cfg = cfg.reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    pcfg = PruneConfig(method="wanda++", pattern=pruned or "2:4", n_calib=8,
-                       calib_len=prompt_len, ro_iters=1, ro_samples=4)
+    pcfg = PruneConfig(method=prune_method, pattern=pruned or "2:4",
+                       n_calib=8, calib_len=prompt_len, ro_iters=1,
+                       ro_samples=4)
     if pruned:
         from repro.core.pruner import prune_model
         calib = calibration_batch(cfg.vocab_size, pcfg.n_calib, pcfg.calib_len)
         params, _ = prune_model(model, params, calib, pcfg)
-        print(f"[serve] pruned with wanda++ {pruned}")
+        print(f"[serve] pruned with {pcfg.method} {pruned}")
     draft_params = None
     if self_spec:
         from repro.core.pruner import prune_model
@@ -95,6 +109,7 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
         compressed24=compressed24, compressed24_kernel=compressed24_kernel,
         draft_k=draft_pad,
         chunked_prefill=chunked_prefill, chunk_size=chunk_size,
+        calib_taps=calib_taps,
     )
     engine = Engine(model, params, ecfg, sampling, draft_params=draft_params)
     if engine.compressed24:
@@ -103,7 +118,10 @@ def build_engine(arch: str, batch: int, prompt_len: int, gen: int,
     if engine.compressed24_draft:
         print(f"[serve] drafter serves compressed 2:4: "
               f"{engine.compressed24_draft} projections packed")
-    return engine, cfg
+    if calib_taps:
+        print("[serve] calibration taps on: per-channel input statistics "
+              "accumulate from live traffic (zero extra traces)")
+    return engine, cfg, model, params
 
 
 def _stub_vision(cfg, rng):
@@ -123,7 +141,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           compressed24_kernel: bool = None, self_spec: bool = False,
           draft_k: int = 4):
     """One same-shape wave; prints TTFT and TPOT. Returns generated tokens."""
-    engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
+    engine, cfg, _, _ = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
                                pruned=pruned, max_len=max_len,
                                sampling=sampling, paged=paged,
                                page_size=page_size, n_pages=n_pages,
@@ -172,7 +190,10 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                    compressed24: str = None,
                    compressed24_kernel: bool = None,
                    self_spec: bool = False, draft_k: int = 4,
-                   chunked_prefill: bool = None, chunk_size: int = 16):
+                   chunked_prefill: bool = None, chunk_size: int = 16,
+                   calib_taps: bool = False, recalibrate_every: int = 0,
+                   recalibrate_method: str = "wanda",
+                   save_calib: str = None):
     """Mixed-length request stream through the continuous-batching scheduler.
 
     Eligible engines (pure token-KV, non-vision) default to chunked prefill:
@@ -184,17 +205,28 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
     ``shared_prefix > 0`` prepends a common system-prompt prefix of that many
     tokens to every request and registers it with the engine: its KV pages
     are prefetched once and mapped (refcounted) into each request, so only
-    the per-request suffix is ever prefilled."""
-    engine, cfg = build_engine(arch, batch, prompt_len, gen, smoke=smoke,
-                               pruned=pruned, extra_len=shared_prefix,
-                               sampling=sampling, chunk=max(gen // 2, 1),
-                               paged=paged, page_size=page_size,
-                               n_pages=n_pages, paged_kernel=paged_kernel,
-                               mesh=mesh, compressed24=compressed24,
-                               compressed24_kernel=compressed24_kernel,
-                               self_spec=self_spec, draft_k=draft_k,
-                               chunked_prefill=chunked_prefill,
-                               chunk_size=chunk_size)
+    the per-request suffix is ever prefilled.
+
+    ``recalibrate_every N > 0`` (implies ``calib_taps``) serves the stream in
+    batches of N requests and, between batches, re-scores the DENSE weight
+    copy with ``recalibrate_method`` against the engine's live per-channel
+    statistics (``Engine.calibration_snapshot``), re-prunes at the engine's
+    pattern, and hot-swaps the result in place via ``Engine.repack`` — no
+    retrace, the traffic after the swap decodes against freshly calibrated
+    masks. ``save_calib`` additionally writes each snapshot to an ``.npz``
+    that ``repro.launch.reprune`` can consume offline."""
+    calib_taps = calib_taps or recalibrate_every > 0 or bool(save_calib)
+    engine, cfg, model, dense_params = build_engine(
+        arch, batch, prompt_len, gen, smoke=smoke,
+        pruned=pruned, extra_len=shared_prefix,
+        sampling=sampling, chunk=max(gen // 2, 1),
+        paged=paged, page_size=page_size,
+        n_pages=n_pages, paged_kernel=paged_kernel,
+        mesh=mesh, compressed24=compressed24,
+        compressed24_kernel=compressed24_kernel,
+        self_spec=self_spec, draft_k=draft_k,
+        chunked_prefill=chunked_prefill,
+        chunk_size=chunk_size, calib_taps=calib_taps)
     if engine.chunked_prefill:
         print(f"[serve] chunked prefill: {chunk_size} prompt tokens per "
               "decode step through the unified step program")
@@ -215,8 +247,40 @@ def serve_requests(arch: str, n_requests: int = 16, batch: int = 4,
                             int(rng.integers(max(gen // 2, 1), gen + 1)),
                             vision_embeds=_stub_vision(cfg, rng)))
     t0 = time.perf_counter()
-    comps = Scheduler(engine).run(reqs)
+    if recalibrate_every > 0:
+        from repro.core import scores as SC
+        from repro.core.pruner import reprune_from_stats
+        comps, n_swaps = [], 0
+        rp_cfg = PruneConfig(method=recalibrate_method,
+                             pattern=pruned or "2:4")
+        for lo in range(0, len(reqs), recalibrate_every):
+            comps += Scheduler(engine).run(reqs[lo:lo + recalibrate_every])
+            if lo + recalibrate_every >= len(reqs):
+                break  # stream done: no traffic left to serve re-pruned
+            snap = engine.calibration_snapshot()
+            calib = None
+            if SC.get_score(recalibrate_method).grad is not None:
+                # gradient blends replay a token window; live channel stats
+                # still come from the snapshot
+                calib = calibration_batch(cfg.vocab_size, 8, prompt_len,
+                                          seed=17 + lo)
+            new_params = reprune_from_stats(model, dense_params,
+                                            snap["stats"], rp_cfg,
+                                            calib=calib)
+            engine.repack(new_params)
+            n_swaps += 1
+        if n_swaps:
+            print(f"[serve] recalibrated + repacked {n_swaps}x with "
+                  f"{recalibrate_method} from live traffic")
+    else:
+        comps = Scheduler(engine).run(reqs)
     wall = time.perf_counter() - t0
+    if save_calib:
+        from repro.launch.reprune import save_snapshot
+        snap = engine.calibration_snapshot()
+        save_snapshot(save_calib, snap)
+        print(f"[serve] calibration snapshot ({int(snap['tokens'])} tokens) "
+              f"-> {save_calib}")
     n_tok = sum(len(c.tokens) for c in comps)
     if shared_prefix > 0:
         print(f"[serve] prefill tokens skipped via shared pages: "
@@ -296,6 +360,26 @@ def main():
                     help="with --requests: force bucket-wave prefill (the "
                          "latency baseline) instead of chunked prefill "
                          "interleaved with decode")
+    ap.add_argument("--calib-taps", action="store_true",
+                    help="with --requests: collect Wanda-style per-channel "
+                         "input statistics from live traffic inside the "
+                         "jitted step programs (zero extra traces / host "
+                         "syncs; greedy output is bit-exact vs taps off)")
+    ap.add_argument("--recalibrate-every", type=int, default=0, metavar="N",
+                    help="with --requests: every N requests, re-score the "
+                         "dense weights against the live statistics "
+                         "(--recalibrate-method), re-prune at the serving "
+                         "pattern and hot-swap via Engine.repack (implies "
+                         "--calib-taps)")
+    ap.add_argument("--recalibrate-method", default="wanda",
+                    help="pruning score for online recalibration (see "
+                         "core/scores.py registry; default wanda — "
+                         "statistics-only, no gradient replay)")
+    ap.add_argument("--save-calib", default=None, metavar="FILE.npz",
+                    help="with --requests: write the final calibration "
+                         "snapshot to FILE.npz for offline re-pruning "
+                         "(python -m repro.launch.reprune; implies "
+                         "--calib-taps)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="shard the engine over a (data, model) device mesh "
                          "(e.g. 4,2): params by the sharding rule table, "
@@ -322,7 +406,11 @@ def main():
                        self_spec=args.self_spec, draft_k=args.draft_k,
                        chunked_prefill=False if args.no_chunked_prefill
                        else None,
-                       chunk_size=args.chunk_size)
+                       chunk_size=args.chunk_size,
+                       calib_taps=args.calib_taps,
+                       recalibrate_every=args.recalibrate_every,
+                       recalibrate_method=args.recalibrate_method,
+                       save_calib=args.save_calib)
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               smoke=args.smoke, pruned=args.pruned, sampling=sampling,

@@ -234,7 +234,8 @@ def moe_block(bp, x, cfg, positions, cache=None, cache_index=None,
 def _scoped_elin(elin, prefix):
     if elin is None:
         elin = moe.default_elin
-    return lambda name, w, xin, eq: elin(f"{prefix}.{name}", w, xin, eq)
+    return lambda name, w, xin, eq, occ=None: \
+        elin(f"{prefix}.{name}", w, xin, eq, occ)
 
 
 # ---------------------------------------------------------------------------

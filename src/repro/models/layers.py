@@ -103,6 +103,49 @@ def scoped(lin, prefix):
     return lambda name, p, x: lin(f"{prefix}.{name}", p, x)
 
 
+def input_stats(x, weights=None):
+    """Per-input-channel calibration statistics of one matmul call.
+
+    x: (..., in). ``weights`` (optional, broadcastable to x.shape[:-1])
+    down-weights or masks tokens — the serve engine passes its live/pad
+    masks so idle decode lanes and prompt padding never enter the sums.
+    Returns {"sumsq", "abssum", "sum": (in,), "count": ()} in f32 (the
+    accumulators are intentionally f32: they run over an entire traffic
+    window, and bf16 sums of squares saturate within a few thousand tokens).
+    """
+    x32 = x.astype(jnp.float32).reshape(-1, x.shape[-1])  # lint: allow(f32-cast)
+    if weights is None:
+        w = jnp.ones((x32.shape[0],), jnp.float32)  # lint: allow(f32-cast)
+    else:
+        w = jnp.broadcast_to(weights, x.shape[:-1]).reshape(-1)
+        w = w.astype(jnp.float32)  # lint: allow(f32-cast)
+    xw = x32 * w[:, None]
+    return {"sumsq": jnp.sum(x32 * xw, axis=0),
+            "abssum": jnp.sum(jnp.abs(xw), axis=0),
+            "sum": jnp.sum(xw, axis=0),
+            "count": jnp.sum(w)}
+
+
+def acc_stats(old, new):
+    """Accumulate two ``input_stats`` dicts (None-tolerant on the left)."""
+    if old is None:
+        return new
+    return {k: old[k] + new[k] for k in new}
+
+
+def stats_lin(lin, taps, weights=None):
+    """Wrap any ``lin`` backend with a calibration tap: per-channel input
+    stats land in ``taps[name]`` (accumulated), the matmul result is the
+    wrapped backend's own — taps change no numerics on the forward path."""
+    base = default_lin if lin is None else lin
+
+    def tapped(name, p, x):
+        taps[name] = acc_stats(taps.get(name), input_stats(x, weights))
+        return base(name, p, x)
+
+    return tapped
+
+
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------

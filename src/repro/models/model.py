@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import blocks as B
-from repro.models.layers import default_positions, init_rmsnorm, rmsnorm
+from repro.models.layers import (default_positions, init_rmsnorm, rmsnorm,
+                                 stats_lin)
 
 
 def _dtype(name: str):
@@ -101,7 +102,8 @@ class Model:
     # ------------------------------------------------------------------
     def forward(self, params, inputs, *, remat=False, remat_groups=0,
                 lin=None, elin=None, return_cache=False, last_only=False,
-                act_pspec=None, seq_lens=None):
+                act_pspec=None, seq_lens=None, collect_taps=False,
+                tap_weights=None):
         """act_pspec: optional PartitionSpec pinned on the residual stream at
         every block boundary (sequence parallelism: the saved remat carries
         shard over `model`, cutting activation HBM by the TP degree).
@@ -111,6 +113,13 @@ class Model:
         consume it — with it, the returned cache snapshots each row's state
         after its LAST VALID token instead of after the padding (attention
         KV needs no masking: stale positions are masked by cache position).
+
+        collect_taps: gather per-linear input statistics (running ||X||^2 /
+        |X| / X sums + token counts, see ``layers.input_stats``) inside the
+        layer scan and return them stacked (L, ...) as an extra trailing
+        output. ``tap_weights`` is a nonnegative mask broadcastable to the
+        token axes (B, S) — padding rows/positions contribute zero. The taps
+        ride the scan ys, so collecting adds no host sync and no retrace.
         """
         cfg = self.cfg
         x, positions = self._assemble(params, inputs)
@@ -118,25 +127,32 @@ class Model:
             x = jax.lax.with_sharding_constraint(x, act_pspec)
 
         if self.cache_spec.mixed:
+            if collect_taps:
+                raise NotImplementedError(
+                    f"{cfg.name}: calibration taps need a non-mixed layer scan")
             x, aux, cache = self._hybrid_forward(params, x, positions, remat,
                                                  lin, elin,
                                                  return_cache=return_cache,
                                                  seq_lens=seq_lens)
+            taps = None
         else:
             apply = self.block_apply
 
             def body(carry, bp):
                 h, aux = carry
+                taps_l: Dict[str, Any] = {}
+                l = stats_lin(lin, taps_l, tap_weights) if collect_taps else lin
                 h, new_cache, a = apply(bp, h, cfg, positions,
-                                        seq_lens=seq_lens, lin=lin, elin=elin)
+                                        seq_lens=seq_lens, lin=l, elin=elin)
                 if act_pspec is not None:
                     h = jax.lax.with_sharding_constraint(h, act_pspec)
-                return (h, aux + a), (new_cache if return_cache else 0)
+                return (h, aux + a), ((new_cache if return_cache else 0),
+                                      taps_l)
 
             if remat:
                 body = jax.checkpoint(body)
             carry0 = (x, jnp.zeros((), jnp.float32))
-            if remat_groups and not return_cache \
+            if remat_groups and not return_cache and not collect_taps \
                     and cfg.num_layers % remat_groups == 0 and remat_groups > 1:
                 # two-level scan remat: only G group-boundary activations are
                 # saved; each group recomputes its layers on the backward pass
@@ -150,17 +166,23 @@ class Model:
                     c, _ = jax.lax.scan(body, carry, bg)
                     return c, 0
 
-                (x, aux), cache = jax.lax.scan(jax.checkpoint(group_body),
-                                               carry0, grouped)
+                (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body),
+                                           carry0, grouped)
+                cache, taps = None, None
             else:
-                (x, aux), cache = jax.lax.scan(body, carry0, params["blocks"])
+                (x, aux), (cache, taps) = jax.lax.scan(body, carry0,
+                                                       params["blocks"])
 
         if last_only:
             x = x[:, -1:, :]  # unembed only the final position (prefill)
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = self.unembed(params, x)
+        if return_cache and collect_taps:
+            return logits, aux, cache, taps
         if return_cache:
             return logits, aux, cache
+        if collect_taps:
+            return logits, aux, taps
         return logits, aux
 
     def _hybrid_forward(self, params, x, positions, remat, lin, elin,
@@ -236,7 +258,7 @@ class Model:
     # single-token decode
     # ------------------------------------------------------------------
     def decode_step(self, params, inputs, cache, *, lin=None, elin=None,
-                    paged_kernel=True):
+                    paged_kernel=True, collect_taps=False, tap_weights=None):
         """inputs: {"token": (B,) int32, "pos": () or (B,) int32, optional
         "block_table": (B, max_blocks) int32, optional "rope_pos": (B,)
         int32}.
@@ -252,7 +274,9 @@ class Model:
         — a VLM slot's text token at cache position p carries rotary
         position p + (grid - n_patches) because the M-RoPE text stream
         restarts at the vision grid edge, not at the patch count.
-        Returns (logits, cache).
+        Returns (logits, cache), or (logits, cache, taps) with
+        ``collect_taps`` (see :meth:`forward`; ``tap_weights`` masks out
+        inactive slots so parked decode lanes contribute nothing).
         """
         cfg = self.cfg
         token, pos = inputs["token"], inputs["pos"]
@@ -271,28 +295,37 @@ class Model:
             positions = pos2d
 
         if self.cache_spec.mixed:
+            if collect_taps:
+                raise NotImplementedError(
+                    f"{cfg.name}: calibration taps need a non-mixed layer scan")
             x, new_cache = self._hybrid_decode(params, x, positions, pos,
                                                cache, block_table,
                                                paged_kernel, lin, elin)
+            taps = None
         else:
             apply = self.block_apply
 
             def body(h, xs):
                 bp, cache_l = xs
+                taps_l: Dict[str, Any] = {}
+                l = stats_lin(lin, taps_l, tap_weights) if collect_taps else lin
                 h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
                                     cache_index=pos, block_table=block_table,
                                     paged_kernel=paged_kernel,
-                                    lin=lin, elin=elin)
-                return h, new_c
+                                    lin=l, elin=elin)
+                return h, (new_c, taps_l)
 
-            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+            x, (new_cache, taps) = jax.lax.scan(
+                body, x, (params["blocks"], cache))
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = self.unembed(params, x)[:, 0, :]
+        if collect_taps:
+            return logits, new_cache, taps
         return logits, new_cache
 
     def decode_multi(self, params, inputs, cache, *, lin=None, elin=None,
-                     paged_kernel=True):
+                     paged_kernel=True, collect_taps=False, tap_weights=None):
         """Multi-token decode through the cache — the speculative-decoding
         verify forward. inputs: {"tokens": (B, S) int32, "pos": (B,) int32
         cache write index of tokens[:, 0], optional "rope_pos": (B,) int32
@@ -328,18 +361,22 @@ class Model:
 
         def body(h, xs):
             bp, cache_l = xs
+            taps_l: Dict[str, Any] = {}
+            l = stats_lin(lin, taps_l, tap_weights) if collect_taps else lin
             h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
                                 cache_index=pos, block_table=block_table,
                                 paged_kernel=paged_kernel,
-                                lin=lin, elin=elin)
-            return h, new_c
+                                lin=l, elin=elin)
+            return h, (new_c, taps_l)
 
-        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x, (new_cache, taps) = jax.lax.scan(body, x, (params["blocks"], cache))
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if collect_taps:
+            return self.unembed(params, x), new_cache, taps
         return self.unembed(params, x), new_cache
 
     def prefill_paged(self, params, inputs, cache, *, lin=None, elin=None,
-                      paged_kernel=True):
+                      paged_kernel=True, collect_taps=False, tap_weights=None):
         """Prefill straight through the paged KV pool (shared-prefix path).
 
         inputs: {"tokens": (B, S) int32 — each row's *suffix* (prompt minus
@@ -370,16 +407,20 @@ class Model:
 
         def body(h, xs):
             bp, cache_l = xs
+            taps_l: Dict[str, Any] = {}
+            l = stats_lin(lin, taps_l, tap_weights) if collect_taps else lin
             h, new_c, _ = apply(bp, h, cfg, positions, cache=cache_l,
                                 cache_index=pos, block_table=block_table,
                                 paged_kernel=paged_kernel,
-                                lin=lin, elin=elin)
-            return h, new_c
+                                lin=l, elin=elin)
+            return h, (new_c, taps_l)
 
-        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x, (new_cache, taps) = jax.lax.scan(body, x, (params["blocks"], cache))
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         last = jnp.clip(jnp.asarray(inputs["last"], jnp.int32), 0, S - 1)
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        if collect_taps:
+            return self.unembed(params, x_last), new_cache, taps
         return self.unembed(params, x_last), new_cache
 
     def _hybrid_decode(self, params, x, positions, pos, cache, block_table,

@@ -19,9 +19,13 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import default_lin, init_linear, linear, scoped
 
 
-def default_elin(name, w, xin, eq):
+def default_elin(name, w, xin, eq, occ=None):
     """Pluggable expert-einsum backend (tap point for expert-conditional
-    Wanda statistics and masked expert weights)."""
+    Wanda statistics and masked expert weights). ``occ`` is the routing
+    occupancy (B, E, C), 1 where the expert slot holds a routed token —
+    the dense einsum ignores it (unrouted slots are zero-filled), but
+    stats-collecting backends must mask with it so padding slots neither
+    contaminate per-expert ||X|| sums nor inflate token counts."""
     return jnp.einsum(eq, xin, w)
 
 
@@ -118,10 +122,15 @@ def moe_mlp(p, x, cfg: ModelConfig, lin=None, elin=None):
 
     dispatch = jax.vmap(lambda xg, ei, gv: _dispatch_group(xg, ei, gv, E, C))
     expert_in, slot, kept, order = dispatch(x, expert_ids, gate_vals)
+    # routing occupancy (B, E, C): True where the capacity slot holds a
+    # routed token (the scatter trash row at E*C absorbs dropped copies)
+    occ = jax.vmap(
+        lambda sl: jnp.zeros((E * C + 1,), bool).at[sl].set(True)[: E * C]
+        .reshape(E, C))(slot)
     # (B, E, C, D): batch groups sharded over data, experts over model
-    h_g = elin("wg", p["wg"], expert_in, "becd,edf->becf")
-    h_u = elin("wu", p["wu"], expert_in, "becd,edf->becf")
-    out_ec = elin("wd", p["wd"], jax.nn.silu(h_g) * h_u, "becf,efd->becd")
+    h_g = elin("wg", p["wg"], expert_in, "becd,edf->becf", occ)
+    h_u = elin("wu", p["wu"], expert_in, "becd,edf->becf", occ)
+    out_ec = elin("wd", p["wd"], jax.nn.silu(h_g) * h_u, "becf,efd->becd", occ)
 
     combine = jax.vmap(lambda oe, sl, kp, od, gv: _combine_group(oe, sl, kp, od, gv, S))
     y = combine(out_ec, slot, kept, order, gate_vals)

@@ -183,6 +183,15 @@ class EngineConfig:
     # (ragged) chunk re-overlapping the previous chunk's tail so every lane
     # is exactly chunk_size wide (one traced shape, any prompt length)
     chunk_size: int = 16
+    # Online calibration taps: every decode / prefill program additionally
+    # accumulates per-linear input statistics (running ||X||^2 / |X| / X
+    # sums + token counts, stacked per layer — the Wanda / Wanda++ / STADE /
+    # CoNNect calibration state, see core/scores.py) from LIVE traffic.
+    # The stats ride each jitted program as one extra donated carry: no
+    # extra trace, no host sync — harvest stays the one round-trip, and
+    # :meth:`Engine.calibration_snapshot` exports them for core.pruner.
+    # False == exact status quo (signatures and traced programs unchanged).
+    calib_taps: bool = False
 
     @property
     def max_blocks(self) -> int:
@@ -353,6 +362,21 @@ class Engine:
             raise ValueError(
                 f"chunk_size={cfg.chunk_size} must be in "
                 f"[1, max_len={cfg.max_len}]")
+        # online calibration taps (Wanda++ statistics from live traffic):
+        # pure token-KV, non-vision, target-only engines — the tap masks
+        # ride the standard layer scans and the stats must describe the
+        # served model's own linear inputs
+        self.calib_taps = bool(cfg.calib_taps)  # lint: allow(host-sync)
+        if self.calib_taps:
+            if spec.mixed or spec.has_recurrent or self.needs_vision:
+                raise ValueError(
+                    f"{mcfg.name}: calib_taps needs a pure token-KV, "
+                    "non-vision family (tap statistics ride the standard "
+                    "layer scan of the decode/prefill programs)")
+            if self.spec_decode:
+                raise ValueError(
+                    "calib_taps with speculative decoding is not supported "
+                    "(tap a target-only engine)")
         self._fill: list = []  # chunked-prefill queue (see admit_chunked)
         self.sampling = sampling
         self.key = jax.random.PRNGKey(sampling.seed)
@@ -402,18 +426,28 @@ class Engine:
                 jax.jit(self._mk_pstate, out_shardings=self._sh["pstate"])
                 if self.paged else None)
         self._alloc_pools()
+        # calib stats live OUTSIDE reset(): they are collected traffic, not
+        # slot state — reset_calibration() zeroes them explicitly
+        self._calib = self._init_calib() if self.calib_taps else None
         self.stats = {"shared_tokens_saved": 0, "prefix_evictions": 0}
         # trace counters: the no-retrace-per-token guarantee is testable
         self.trace_counts = {"decode": 0, "prefill": 0}
         self._decode_jit = {}  # chunk length T -> compiled program
         W, C, S, PS, R = self._prog_shardings()
+        # with taps on, every prefill program takes the running stats as one
+        # extra donated (replicated) argument and returns the new stats
+        ct = self.calib_taps
         if self.paged:
             self._prefill_jit = self._jit(
-                self._prefill_paged_impl, (1, 2, 3, 4),
-                (W, C, S, PS, R, R, R, R, R, R), (C, S, PS, R, R, R))
+                self._prefill_paged_impl,
+                (1, 2, 3, 4, 10) if ct else (1, 2, 3, 4),
+                (W, C, S, PS, R, R, R, R, R, R) + ((R,) if ct else ()),
+                (C, S, PS, R, R, R) + ((R,) if ct else ()))
             self._prefill_shared_jit = self._jit(
-                self._prefill_shared_impl, (1, 2, 3, 4),
-                (W, C, S, PS, R, R, R, R, R, R, R), (C, S, PS, R, R, R))
+                self._prefill_shared_impl,
+                (1, 2, 3, 4, 11) if ct else (1, 2, 3, 4),
+                (W, C, S, PS, R, R, R, R, R, R, R) + ((R,) if ct else ()),
+                (C, S, PS, R, R, R) + ((R,) if ct else ()))
             self._register_jit = self._jit(
                 self._register_impl, (1, 2), (W, C, PS, R), (C, PS, R, R))
             self._unreserve_jit = self._jit(PAGE.unreserve, (0,), (PS, R), PS)
@@ -426,8 +460,10 @@ class Engine:
                 PAGE.alloc, (0,), (PS, R, R, R, R), (PS, R))
         else:
             self._prefill_jit = self._jit(
-                self._prefill_pool_impl, (1, 2, 3),
-                (W, C, S, R, R, R, R, R, R), (C, S, R, R))
+                self._prefill_pool_impl,
+                (1, 2, 3, 9) if ct else (1, 2, 3),
+                (W, C, S, R, R, R, R, R, R) + ((R,) if ct else ()),
+                (C, S, R, R) + ((R,) if ct else ()))
         self._release_jit = self._jit(
             self._release_impl, (0, 1, 2), (C, S, PS, R), (C, S, PS))
 
@@ -447,6 +483,21 @@ class Engine:
     def _mk_pstate(self):
         cfg = self.cfg
         return PAGE.init_pages(cfg.pool_pages, cfg.n_slots, cfg.max_blocks)
+
+    def _init_calib(self):
+        """Zeros pytree matching the stacked (L, ...) per-linear tap
+        statistics — the shape comes from ONE eval_shape probe of the
+        tapped forward (nothing runs, nothing allocates until tree_map)."""
+        taps_abs = jax.eval_shape(
+            lambda p, t: self.model.forward(
+                p, {"tokens": t}, lin=self._lin, collect_taps=True)[2],
+            self.params, jax.ShapeDtypeStruct((1, 2), jnp.int32))
+        z = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), taps_abs)
+        if self._sh is not None:
+            z = jax.device_put(z, jax.tree_util.tree_map(
+                lambda _: self._sh["repl"], z))
+        return z
 
     def _alloc_pools(self):
         """Fresh slot state, cache, and page state (init + every reset).
@@ -502,22 +553,32 @@ class Engine:
     # ------------------------------------------------------------------
     # jitted programs
     # ------------------------------------------------------------------
-    def _decode_impl(self, wp, cache, state, key, block_tables, *, T):
+    def _decode_impl(self, wp, cache, state, key, block_tables, calib=None,
+                     *, T):
         self.trace_counts["decode"] += 1
         params = wp[0]
         sc, eos = self.sampling, self.cfg.eos_id
 
         def step(carry, _):
-            cache, state, key = carry
+            cache, state, key, calib = carry
             key, sub = jax.random.split(key)
             run = state.active & ~state.finished
             inputs = {"token": state.last_token, "pos": state.pos,
                       "rope_pos": state.pos + state.rope_delta}
             if block_tables is not None:
                 inputs["block_table"] = block_tables
-            logits, cache = self.model.decode_step(
-                params, inputs, cache, paged_kernel=self.paged_kernel,
-                lin=self._lin)
+            if self.calib_taps:
+                # frozen/parked slots re-feed their last token: run masks
+                # them out of the statistics (their compute is discarded)
+                logits, cache, taps = self.model.decode_step(
+                    params, inputs, cache, paged_kernel=self.paged_kernel,
+                    lin=self._lin, collect_taps=True,
+                    tap_weights=run[:, None])
+                calib = jax.tree_util.tree_map(jnp.add, calib, taps)
+            else:
+                logits, cache = self.model.decode_step(
+                    params, inputs, cache, paged_kernel=self.paged_kernel,
+                    lin=self._lin)
             nxt = sample_tokens(self._for_sampling(logits), sub, sc)
             # frozen slots keep re-feeding their last token at a fixed pos;
             # the KV write lands on a position admission will overwrite
@@ -530,10 +591,12 @@ class Engine:
                 done = done | (nxt == eos)
             state = state._replace(last_token=nxt, pos=pos,
                                    finished=state.finished | (run & done))
-            return (cache, state, key), (nxt, run)
+            return (cache, state, key, calib), (nxt, run)
 
-        (cache, state, key), (toks, valid) = jax.lax.scan(
-            step, (cache, state, key), None, length=T)
+        (cache, state, key, calib), (toks, valid) = jax.lax.scan(
+            step, (cache, state, key, calib), None, length=T)
+        if self.calib_taps:
+            return cache, state, key, toks, valid, calib
         return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
 
     # -- self-speculative decode -----------------------------------------
@@ -738,8 +801,10 @@ class Engine:
         all-unmapped block-table row / a discarded pool-row copy, so
         varying fill load never changes the traced program.
 
-        Returns (cache, state, first_token, admit_slot); admit_slot ==
-        n_slots when no request activates this step."""
+        Returns (cache, state, first_token, admit_slot, chunk_taps);
+        admit_slot == n_slots when no request activates this step, and
+        chunk_taps is the lane's tap-statistics pytree (None with taps
+        off)."""
         cfg = self.cfg
         lane_on = s["slot"] < cfg.n_slots
         caches = dict(self.spec.unpack(cache))
@@ -749,6 +814,14 @@ class Engine:
             # shares the target's block tables (pages already mapped), so
             # the draft fill is one more B=1 decode_multi, logits discarded
             groups.append(("draft", wp[1], self._draft_lin))
+        tw, chunk_taps = None, None
+        if self.calib_taps:
+            # count only this chunk's FRESH tokens: the ragged final chunk
+            # re-anchors over the previous chunk's tail (see
+            # build_schedule), and re-run overlap positions must not be
+            # double-counted; idle lanes contribute nothing
+            idx = jnp.arange(cfg.chunk_size, dtype=jnp.int32)
+            tw = ((idx >= s["fresh"]) & (idx < s["len"]) & lane_on)[None, :]
         logits = None
         for name, params, lin in groups:
             inp = {"tokens": s["toks"][None], "pos": s["pos"][None]}
@@ -757,9 +830,15 @@ class Engine:
                 # row: every KV write drops, every read fills zero
                 inp["block_table"] = block_tables.at[s["slot"][None]].get(
                     mode="fill", fill_value=cfg.pool_pages)
-                lg, caches[name] = self.model.decode_multi(
-                    params, inp, caches[name],
-                    paged_kernel=self.paged_kernel, lin=lin)
+                if self.calib_taps and name == "kv":
+                    lg, caches[name], chunk_taps = self.model.decode_multi(
+                        params, inp, caches[name],
+                        paged_kernel=self.paged_kernel, lin=lin,
+                        collect_taps=True, tap_weights=tw)
+                else:
+                    lg, caches[name] = self.model.decode_multi(
+                        params, inp, caches[name],
+                        paged_kernel=self.paged_kernel, lin=lin)
             else:
                 # dense pool: slice the slot's cache row, run the lane at
                 # B=1 against the copy, write back only when the lane is
@@ -768,9 +847,14 @@ class Engine:
                 row = jax.tree_util.tree_map(
                     lambda a: jax.lax.dynamic_slice_in_dim(a, sl, 1, axis=1),
                     caches[name])
-                lg, new_row = self.model.decode_multi(
-                    params, inp, row, paged_kernel=self.paged_kernel,
-                    lin=lin)
+                if self.calib_taps and name == "kv":
+                    lg, new_row, chunk_taps = self.model.decode_multi(
+                        params, inp, row, paged_kernel=self.paged_kernel,
+                        lin=lin, collect_taps=True, tap_weights=tw)
+                else:
+                    lg, new_row = self.model.decode_multi(
+                        params, inp, row, paged_kernel=self.paged_kernel,
+                        lin=lin)
                 new_row = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(lane_on, a, b), new_row, row)
                 caches[name] = jax.tree_util.tree_map(
@@ -794,10 +878,10 @@ class Engine:
         state, _ = self._admit_state(
             state, aslot, first, s["plen"][None], s["max_new"][None],
             jnp.zeros((1,), jnp.int32))
-        return cache, state, first[0], aslot[0]
+        return cache, state, first[0], aslot[0], chunk_taps
 
     def _decode_chunked_impl(self, wp, cache, state, key, block_tables,
-                             sched, *, T):
+                             sched, calib=None, *, T):
         """The unified chunked-prefill step program: every scan step runs
         the decode lane over all live slots (identical math — and identical
         PRNG stream — to ``_decode_impl``) PLUS one prefill-chunk lane fed
@@ -809,16 +893,23 @@ class Engine:
         sc, eos = self.sampling, self.cfg.eos_id
 
         def step(carry, s):
-            cache, state, key = carry
+            cache, state, key, calib = carry
             key, sub = jax.random.split(key)
             run = state.active & ~state.finished
             inputs = {"token": state.last_token, "pos": state.pos,
                       "rope_pos": state.pos + state.rope_delta}
             if block_tables is not None:
                 inputs["block_table"] = block_tables
-            logits, cache = self.model.decode_step(
-                params, inputs, cache, paged_kernel=self.paged_kernel,
-                lin=self._lin)
+            if self.calib_taps:
+                logits, cache, taps = self.model.decode_step(
+                    params, inputs, cache, paged_kernel=self.paged_kernel,
+                    lin=self._lin, collect_taps=True,
+                    tap_weights=run[:, None])
+                calib = jax.tree_util.tree_map(jnp.add, calib, taps)
+            else:
+                logits, cache = self.model.decode_step(
+                    params, inputs, cache, paged_kernel=self.paged_kernel,
+                    lin=self._lin)
             nxt = sample_tokens(self._for_sampling(logits), sub, sc)
             nxt = jnp.where(run, nxt, state.last_token)
             pos = state.pos + run.astype(jnp.int32)
@@ -829,14 +920,18 @@ class Engine:
                                    finished=state.finished | (run & done))
             # chunk lane AFTER the decode lane: an activating slot was not
             # in `run`, so the lanes never touch the same slot's row
-            cache, state, first, aslot = self._chunk_step(
+            cache, state, first, aslot, ctaps = self._chunk_step(
                 wp, cache, state, sub, s, block_tables)
+            if self.calib_taps:
+                calib = jax.tree_util.tree_map(jnp.add, calib, ctaps)
             nxt = nxt.at[aslot].set(first, mode="drop")
             valid = run.at[aslot].set(True, mode="drop")
-            return (cache, state, key), (nxt, valid)
+            return (cache, state, key, calib), (nxt, valid)
 
-        (cache, state, key), (toks, valid) = jax.lax.scan(
-            step, (cache, state, key), sched)
+        (cache, state, key, calib), (toks, valid) = jax.lax.scan(
+            step, (cache, state, key, calib), sched)
+        if self.calib_taps:
+            return cache, state, key, toks, valid, calib
         return cache, state, key, toks, valid  # toks/valid: (T, n_slots)
 
     def _decode_chunked_spec_impl(self, wp, cache, state, key, block_tables,
@@ -854,7 +949,7 @@ class Engine:
             key, sub = jax.random.split(key)
             cache, state, emit, val = self._spec_macro_step(
                 wp, cache, state, sub, block_tables)
-            cache, state, first, aslot = self._chunk_step(
+            cache, state, first, aslot, _ = self._chunk_step(
                 wp, cache, state, sub, s, block_tables)
             emit = emit.at[aslot, 0].set(first, mode="drop")
             val = val.at[aslot, 0].set(True, mode="drop")
@@ -885,61 +980,82 @@ class Engine:
             finished=state.finished.at[slots].set(done0, mode="drop"))
         return state, max_total
 
-    def _forward_wave(self, params, tokens, plens, vis, lin):
+    def _prefill_taps(self, tokens, plens, slots):
+        """Tap-weight mask for an admission wave: real rows (slot <
+        n_slots — padding rows scatter to the drop slot) x valid prompt
+        positions. None with taps off."""
+        if not self.calib_taps:
+            return None
+        S = tokens.shape[1]
+        return (jnp.arange(S, dtype=jnp.int32)[None, :] < plens[:, None]) \
+            & (slots < self.cfg.n_slots)[:, None]
+
+    def _forward_wave(self, params, tokens, plens, vis, lin,
+                      tap_weights=None):
         """The admission forward: full-sequence pass over the (padded) wave,
         vision prefix prepended for VLM waves, seq_lens pinning recurrent
         snapshots to each row's last valid token. Returns (logits, states,
-        effective prompt lens, per-row rope delta)."""
+        effective prompt lens, per-row rope delta, taps-or-None)."""
         inputs = {"tokens": tokens}
         n_patches = 0
         if vis is not None:
             inputs["vision_embeds"] = vis
             n_patches = vis.shape[1]
-        logits, _, states = self.model.forward(params, inputs,
-                                               return_cache=True,
-                                               seq_lens=plens,
-                                               lin=lin)
+        if self.calib_taps and tap_weights is not None:
+            logits, _, states, taps = self.model.forward(
+                params, inputs, return_cache=True, seq_lens=plens, lin=lin,
+                collect_taps=True, tap_weights=tap_weights)
+        else:
+            logits, _, states = self.model.forward(params, inputs,
+                                                   return_cache=True,
+                                                   seq_lens=plens,
+                                                   lin=lin)
+            taps = None
         eff = plens + n_patches
         delta = jnp.full_like(plens, _rope_delta(n_patches))
-        return logits, states, eff, delta
+        return logits, states, eff, delta, taps
 
-    def _wave_states(self, wp, tokens, plens, vis):
+    def _wave_states(self, wp, tokens, plens, vis, tap_weights=None):
         """Admission forward(s): the target's wave pass, plus — under
         self-speculation — the drafter's pass over the SAME wave inside the
         same jitted program (one prefill trace either way), its KV packed
         as the spec's "draft" group. First-token logits always come from
-        the target, so admission semantics match target-only serving."""
-        logits, states, eff, delta = self._forward_wave(
-            wp[0], tokens, plens, vis, self._lin)
+        the target, so admission semantics match target-only serving.
+        Only the TARGET pass is tapped (the stats describe its inputs)."""
+        logits, states, eff, delta, taps = self._forward_wave(
+            wp[0], tokens, plens, vis, self._lin, tap_weights)
         if self.spec_decode:
-            _, d_states, _, _ = self._forward_wave(
+            _, d_states, _, _, _ = self._forward_wave(
                 wp[1], tokens, plens, vis, self._draft_lin)
             states = self.spec.pack({"kv": states, "draft": d_states})
-        return logits, states, eff, delta
+        return logits, states, eff, delta, taps
 
     def _prefill_pool_impl(self, wp, cache, state, key, tokens, plens,
-                           slots, max_news, vis):
+                           slots, max_news, vis, calib=None):
         """One admission wave into the per-slot pool (dense KV rows and/or
         recurrent leaves): forward the (padded) prompts, sample first
         tokens, scatter every spec group + slot metadata."""
         self.trace_counts["prefill"] += 1
-        logits, states, eff, delta = self._wave_states(
-            wp, tokens, plens, vis)
+        logits, states, eff, delta, taps = self._wave_states(
+            wp, tokens, plens, vis, self._prefill_taps(tokens, plens, slots))
         first, key = self._sample_first(logits, eff - 1, key)
         cache = SSPEC.admit_dense(self.spec, cache, states, slots, KV_QSCALE)
         state, _ = self._admit_state(state, slots, first, eff, max_news,
                                      delta)
+        if self.calib_taps:
+            calib = jax.tree_util.tree_map(jnp.add, calib, taps)
+            return cache, state, key, first, calib
         return cache, state, key, first
 
     def _prefill_paged_impl(self, wp, cache, state, pstate, key, tokens,
-                            plens, slots, max_news, vis):
+                            plens, slots, max_news, vis, calib=None):
         """Fresh-request admission into the paged pool. Same forward as the
         per-slot path (bit-exact parity); KV groups scatter through the
         freshly-allocated block tables, recurrent groups slot-scatter."""
         self.trace_counts["prefill"] += 1
         cfg = self.cfg
-        logits, states, eff, delta = self._wave_states(
-            wp, tokens, plens, vis)
+        logits, states, eff, delta, taps = self._wave_states(
+            wp, tokens, plens, vis, self._prefill_taps(tokens, plens, slots))
         first, key = self._sample_first(logits, eff - 1, key)
 
         max_total = eff + jnp.maximum(max_news, 1) - 1
@@ -967,11 +1083,14 @@ class Engine:
                                          delta)
         state = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), new_state, state)
+        if self.calib_taps:
+            calib = jax.tree_util.tree_map(jnp.add, calib, taps)
+            return cache, state, pstate, key, first, ok, calib
         return cache, state, pstate, key, first, ok
 
     def _prefill_shared_impl(self, wp, cache, state, pstate, key, tokens,
                              suff_lens, shared_lens, slots, max_news,
-                             shared_pages):
+                             shared_pages, calib=None):
         """Shared-prefix admission (pure token-KV specs only): map the
         registered prefix pages (refcounted) into each slot's block table,
         then prefill ONLY the suffix through the paged pool — the shared
@@ -992,9 +1111,19 @@ class Engine:
         inp = {"tokens": tokens, "pos": shared_lens,
                "last": suff_lens - 1, "block_table": bt}
         caches = dict(self.spec.unpack(cache))
-        last, caches["kv"] = self.model.prefill_paged(
-            wp[0], inp, caches["kv"],
-            paged_kernel=self.paged_kernel, lin=self._lin)
+        if self.calib_taps:
+            # suffix-only statistics: the shared prefix's activations were
+            # counted once at register time by whoever computed them — the
+            # mapped pages run no linear here, so there is nothing to tap
+            tw = self._prefill_taps(tokens, suff_lens, slots)
+            last, caches["kv"], taps = self.model.prefill_paged(
+                wp[0], inp, caches["kv"],
+                paged_kernel=self.paged_kernel, lin=self._lin,
+                collect_taps=True, tap_weights=tw)
+        else:
+            last, caches["kv"] = self.model.prefill_paged(
+                wp[0], inp, caches["kv"],
+                paged_kernel=self.paged_kernel, lin=self._lin)
         if self.spec_decode:
             _, caches["draft"] = self.model.prefill_paged(
                 wp[1], inp, caches["draft"],
@@ -1007,6 +1136,9 @@ class Engine:
                                          jnp.zeros_like(plens))
         state = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), new_state, state)
+        if self.calib_taps:
+            calib = jax.tree_util.tree_map(jnp.add, calib, taps)
+            return cache, state, pstate, key, first, ok, calib
         return cache, state, pstate, key, first, ok
 
     def _register_impl(self, wp, cache, pstate, tokens):
@@ -1056,6 +1188,7 @@ class Engine:
             bt = PS.block_tables if (self._sh is not None and self.paged) \
                 else R
             m = -(-T // (self.cfg.draft_k + 1)) if self.spec_decode else T
+            ct = self.calib_taps  # extra donated stats carry in/out
             if chunked:
                 impl = functools.partial(
                     self._decode_chunked_spec_impl if self.spec_decode
@@ -1063,13 +1196,17 @@ class Engine:
                 # the schedule arrays ride replicated (every device scans
                 # the same fill assignments)
                 self._decode_jit[(T, chunked)] = self._jit(
-                    impl, (1, 2, 3), (W, C, S, R, bt, R), (C, S, R, R, R))
+                    impl, (1, 2, 3, 6) if ct else (1, 2, 3),
+                    (W, C, S, R, bt, R) + ((R,) if ct else ()),
+                    (C, S, R, R, R) + ((R,) if ct else ()))
             else:
                 impl = functools.partial(
                     self._decode_spec_impl if self.spec_decode
                     else self._decode_impl, T=m)
                 self._decode_jit[(T, chunked)] = self._jit(
-                    impl, (1, 2, 3), (W, C, S, R, bt), (C, S, R, R, R))
+                    impl, (1, 2, 3, 5) if ct else (1, 2, 3),
+                    (W, C, S, R, bt) + ((R,) if ct else ()),
+                    (C, S, R, R, R) + ((R,) if ct else ()))
         return self._decode_jit[(T, chunked)]
 
     # ------------------------------------------------------------------
@@ -1415,6 +1552,11 @@ class Engine:
         first = np.zeros((steps,), bool)
         plen = np.ones((steps,), np.int32)
         max_new = np.ones((steps,), np.int32)
+        # lane index of the chunk's first not-yet-processed token: the
+        # ragged final chunk re-runs the previous chunk's tail for KV
+        # parity, and the calibration tap lane must not count the overlap
+        # positions twice (0 for every full chunk)
+        fresh = np.zeros((steps,), np.int32)
         first_rows: dict = {}
         t = 0
         while t < steps and self._fill:
@@ -1429,6 +1571,7 @@ class Engine:
             first[t] = b == n
             plen[t] = f["plen"]
             max_new[t] = f["max_new"]
+            fresh[t] = f["next"] - a
             if b == n:
                 first_rows[f["slot"]] = t * S
                 self._fill.pop(0)
@@ -1438,7 +1581,8 @@ class Engine:
         sched = {"toks": jnp.asarray(toks), "slot": jnp.asarray(slot),
                  "pos": jnp.asarray(pos), "len": jnp.asarray(ln),
                  "first": jnp.asarray(first), "plen": jnp.asarray(plen),
-                 "max_new": jnp.asarray(max_new)}
+                 "max_new": jnp.asarray(max_new),
+                 "fresh": jnp.asarray(fresh)}
         if self._sh is not None:
             sched = jax.device_put(
                 sched, jax.tree_util.tree_map(
@@ -1493,21 +1637,29 @@ class Engine:
         toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
             prompts, slot_ids, max_news,
             n_vis=0 if vis is None else vis.shape[1])
-        self.cache, self.state, self.key, first = self._prefill_jit(
-            self._wp, self.cache, self.state, self.key,
-            jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
-            jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
+        args = (self._wp, self.cache, self.state, self.key,
+                jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
+                jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
+        if self.calib_taps:
+            self.cache, self.state, self.key, first, self._calib = \
+                self._prefill_jit(*args, self._calib)
+        else:
+            self.cache, self.state, self.key, first = self._prefill_jit(*args)
         return np.asarray(first)[:K]
 
     def _admit_paged(self, prompts, slot_ids, max_news, need, vis=None):
         toks, plen_v, slot_v, mn_v, K = self._wave_arrays(
             prompts, slot_ids, max_news,
             n_vis=0 if vis is None else vis.shape[1])
-        self.cache, self.state, self.pstate, self.key, first, ok = \
-            self._prefill_jit(
-                self._wp, self.cache, self.state, self.pstate, self.key,
+        args = (self._wp, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(plen_v), jnp.asarray(slot_v),
                 jnp.asarray(mn_v), self._pad_vis(vis, len(slot_v)))
+        if self.calib_taps:
+            (self.cache, self.state, self.pstate, self.key, first, ok,
+             self._calib) = self._prefill_jit(*args, self._calib)
+        else:
+            self.cache, self.state, self.pstate, self.key, first, ok = \
+                self._prefill_jit(*args)
         assert bool(ok), "host free-page mirror out of sync with device"
         self._book_pages(slot_ids, need)
         return np.asarray(first)[:K]
@@ -1519,12 +1671,16 @@ class Engine:
             suffixes, slot_ids, max_news)
         Kp = len(slot_v)
         sh_v = np.asarray([entry.length] * K + [0] * (Kp - K), np.int32)
-        self.cache, self.state, self.pstate, self.key, first, ok = \
-            self._prefill_shared_jit(
-                self._wp, self.cache, self.state, self.pstate, self.key,
+        args = (self._wp, self.cache, self.state, self.pstate, self.key,
                 jnp.asarray(toks), jnp.asarray(slen_v), jnp.asarray(sh_v),
                 jnp.asarray(slot_v), jnp.asarray(mn_v),
                 jnp.asarray(entry.pages))
+        if self.calib_taps:
+            (self.cache, self.state, self.pstate, self.key, first, ok,
+             self._calib) = self._prefill_shared_jit(*args, self._calib)
+        else:
+            self.cache, self.state, self.pstate, self.key, first, ok = \
+                self._prefill_shared_jit(*args)
         assert bool(ok), "host free-page mirror out of sync with device"
         self._book_pages(slot_ids, need)
         self._lru_clock += 1
@@ -1543,13 +1699,26 @@ class Engine:
         T = T or self.cfg.chunk
         bt = self.pstate.block_tables if self.paged else None
         if schedule is None:
-            self.cache, self.state, self.key, toks, valid = \
-                self._decode_fn(T)(
-                    self._wp, self.cache, self.state, self.key, bt)
+            if self.calib_taps:
+                (self.cache, self.state, self.key, toks, valid,
+                 self._calib) = self._decode_fn(T)(
+                    self._wp, self.cache, self.state, self.key, bt,
+                    self._calib)
+            else:
+                self.cache, self.state, self.key, toks, valid = \
+                    self._decode_fn(T)(
+                        self._wp, self.cache, self.state, self.key, bt)
         else:
-            self.cache, self.state, self.key, toks, valid = \
-                self._decode_fn(T, chunked=True)(
-                    self._wp, self.cache, self.state, self.key, bt, schedule)
+            if self.calib_taps:
+                (self.cache, self.state, self.key, toks, valid,
+                 self._calib) = self._decode_fn(T, chunked=True)(
+                    self._wp, self.cache, self.state, self.key, bt,
+                    schedule, self._calib)
+            else:
+                self.cache, self.state, self.key, toks, valid = \
+                    self._decode_fn(T, chunked=True)(
+                        self._wp, self.cache, self.state, self.key, bt,
+                        schedule)
         return toks, valid
 
     def harvest(self, toks, valid):
@@ -1570,6 +1739,78 @@ class Engine:
                 if pid >= 0:
                     self._prefixes[pid].live -= 1
                     self._slot_prefix[s] = -1
+
+    # ------------------------------------------------------------------
+    # online calibration (Wanda++ statistics from live traffic)
+    # ------------------------------------------------------------------
+    def calibration_snapshot(self):
+        """Export the accumulated per-linear input statistics as host
+        arrays: ``{"stats": {name: {"sumsq"/"abssum"/"sum": (L, In),
+        "count": (L,)}}, "xnorm": {name: (L, In)}, "tokens": float}``.
+        The per-name stats dicts feed ``core.pruner.apply_prune`` /
+        ``reprune_from_stats`` directly (every registered score reads from
+        them); ``"xnorm"`` is the derived sqrt(||X||^2) the classic Wanda
+        path consumes. ONE device round-trip — call it between chunks like
+        :meth:`harvest`, never inside the decode loop. The running stats
+        survive :meth:`reset` (they are collected traffic, not slot
+        state); :meth:`reset_calibration` zeroes them."""
+        if not self.calib_taps:
+            raise ValueError("engine built without cfg.calib_taps")
+        host = jax.device_get(self._calib)  # lint: allow(host-sync)
+        stats = {name: {k: np.asarray(v)  # lint: allow(host-sync)
+                        for k, v in d.items()}
+                 for name, d in host.items()}
+        xnorm = {name: np.sqrt(d["sumsq"]) for name, d in stats.items()}
+        tokens = max((float(d["count"].max())  # lint: allow(host-sync)
+                      for d in stats.values()),
+                     default=0.0)
+        return {"stats": stats, "xnorm": xnorm, "tokens": tokens}
+
+    def reset_calibration(self):
+        """Zero the running statistics — e.g. right after a re-prune, so
+        the next calibration window reflects only post-reprune traffic."""
+        if not self.calib_taps:
+            raise ValueError("engine built without cfg.calib_taps")
+        self._calib = self._init_calib()
+
+    def repack(self, params):
+        """Swap re-pruned TARGET weights into the serving engine in place:
+        re-run the build-time 2:4 compression over the new dense params
+        (same mode / kernel switches as construction) and replace the
+        weight tuple. Every cached jitted program takes the weights as
+        argument 0 — not a closure — so nothing retraces and
+        ``trace_counts`` are untouched. Raises if the packed tree
+        structure differs from the serving one (that WOULD retrace)."""
+        if self.spec_decode:
+            raise ValueError(
+                "repack with a drafter is not supported (the draft/target "
+                "pair must be re-pruned and rebuilt together)")
+        mode = self.cfg.compressed24 if self.cfg.compressed24 is not None \
+            else "auto"
+        # an engine that packed nothing at build serves the dense tree; its
+        # cached programs expect dense leaves, so newly-2:4 weights must
+        # stay dense here even under "auto"
+        if mode != "off" and self.compressed24:
+            from repro.models.blocks import compress_params24
+            params, n24 = compress_params24(
+                self.model.cfg, params,
+                keep_dense=not self.compressed24_kernel,
+                masked=(mode == "masked"))
+            if self.compressed24 and n24 != self.compressed24:
+                raise ValueError(
+                    f"repack found {n24} 2:4-sparse projections; the engine "
+                    f"serves {self.compressed24} — a re-prune must preserve "
+                    "which projections carry the 2:4 pattern")
+        if jax.tree_util.tree_structure((params,)) != \
+                jax.tree_util.tree_structure((self.params,)):
+            raise ValueError(
+                "repacked params change the weight tree structure "
+                "(every cached program would retrace)")
+        wp = (params,)
+        if self._sh is not None:
+            wp = jax.device_put(wp, self._sh["params"])
+        self._wp = wp
+        self.params = wp[0]
 
     # ------------------------------------------------------------------
     # one-wave convenience: same-shape batch, single decode program

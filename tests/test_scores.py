@@ -1,0 +1,297 @@
+"""Score registry + online calibration: parity, mask validity, engine taps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import PruneConfig
+from repro.core import scores as SC
+from repro.core import masks as M
+from repro.core.pruner import (apply_prune, make_block_fn, prune_block,
+                               model_sparsity_report, reprune_from_stats,
+                               tree_get)
+from repro.core.regional import (_resolve_chunk, block_io_stats_full,
+                                 make_tapped_elin, regional_grad_rms)
+from repro.core.ro import ro_fit
+from repro.data import calibration_batch
+from repro.kernels.ops import sparsity_check24
+from repro.models import blocks as B
+from repro.models.model import Model
+from repro.serve import Engine, EngineConfig, SamplingConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("llama1-7b").reduced(num_layers=2, d_model=64, d_ff=128)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batch(cfg.vocab_size, 8, 32)
+    return model, params, calib
+
+
+def _block_inputs(model, params, calib):
+    cfg = model.cfg
+    bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    xs = jnp.take(params["embed"], calib, axis=0)
+    return cfg, bp, xs
+
+
+class TestRegistry:
+    def test_every_method_registered(self):
+        for m in ("magnitude", "wanda", "wanda++", "wanda++rgs", "wanda++ro",
+                  "gblm", "stade", "connect"):
+            assert m in SC.available()
+
+    def test_unknown_score_raises(self):
+        with pytest.raises(ValueError, match="unknown pruning score"):
+            SC.get_score("wanda+++")
+
+    def test_registry_wanda_bit_exact_vs_direct(self, tiny_lm):
+        """apply_prune resolving 'wanda' through the registry must equal the
+        hand-rolled wanda_score -> make_mask path bit for bit."""
+        model, params, calib = tiny_lm
+        cfg, bp, xs = _block_inputs(model, params, calib)
+        block_fn = make_block_fn(cfg)
+        _, stats = jax.jit(
+            lambda b, x: block_io_stats_full(block_fn, b, x))(bp, xs)
+        prunable = B.prunable_table(cfg)
+        pcfg = PruneConfig(method="wanda", pattern="2:4")
+        via_registry = apply_prune(bp, stats, None, pcfg, prunable)
+        for name, path in prunable.items():
+            w = tree_get(bp, path)
+            if w is None:
+                continue
+            w_oi = SC.to_oi(w)
+            xnorm = jnp.sqrt(stats[name]["sumsq"])
+            mask = M.make_mask(SC.wanda_score(w_oi, xnorm), "2:4", 0.5)
+            manual = SC.from_oi(jnp.where(mask, w_oi, 0))
+            np.testing.assert_array_equal(
+                np.asarray(tree_get(via_registry, path)), np.asarray(manual))
+
+    @pytest.mark.parametrize("method", sorted(SC.SCORES))
+    def test_every_score_yields_valid_24(self, tiny_lm, method):
+        """Every registered score must drive make_mask to exact 2:4."""
+        model, params, calib = tiny_lm
+        cfg, bp, xs = _block_inputs(model, params, calib)
+        block_fn = make_block_fn(cfg)
+        _, stats = block_io_stats_full(block_fn, bp, xs)
+        G = None
+        if SC.get_score(method).grad is not None:
+            G = regional_grad_rms(block_fn, bp, xs, chunk=4)
+        prunable = B.prunable_table(cfg)
+        pcfg = PruneConfig(method=method, pattern="2:4")
+        pruned = apply_prune(bp, stats, G, pcfg, prunable)
+        for name, path in prunable.items():
+            w = tree_get(pruned, path)
+            if w is None:
+                continue
+            w_oi = np.asarray(SC.to_oi(w))
+            zeros = (w_oi.reshape(*w_oi.shape[:-1], -1, 4) == 0).sum(-1)
+            assert (zeros >= 2).all(), (method, name)
+
+    def test_missing_stats_raise(self, tiny_lm):
+        """A score whose declared needs aren't met must fail loudly."""
+        model, params, calib = tiny_lm
+        cfg, bp, _ = _block_inputs(model, params, calib)
+        prunable = B.prunable_table(cfg)
+        pcfg = PruneConfig(method="stade", pattern="2:4")
+        with pytest.raises(ValueError, match="needs stats"):
+            apply_prune(bp, None, None, pcfg, prunable)
+
+    def test_24_survives_ro_fit(self, tiny_lm):
+        """The prune -> RO -> re-prune loop must return weights that still
+        pass the serving engine's strict 2:4 check."""
+        model, params, calib = tiny_lm
+        cfg, bp, xs = _block_inputs(model, params, calib)
+        block_fn = make_block_fn(cfg)
+        _, stats = block_io_stats_full(block_fn, bp, xs)
+        prunable = B.prunable_table(cfg)
+        pcfg = PruneConfig(method="wanda++ro", pattern="2:4", ro_iters=2,
+                           ro_samples=4, ro_lr=1e-3)
+        dense_out = block_fn(bp, xs)
+        prune_fn = lambda b: apply_prune(b, stats, None, pcfg, prunable,
+                                         with_mask=True)
+        fitted, _ = ro_fit(block_fn, bp, xs, dense_out, pcfg,
+                           jax.random.PRNGKey(0), prune_fn=prune_fn)
+        for name, path in prunable.items():
+            w = tree_get(fitted, path)
+            if w is None:
+                continue
+            assert sparsity_check24(w), name
+
+
+class TestChunkFallback:
+    def test_resolve_chunk(self):
+        assert _resolve_chunk(8, 4) == 4
+        assert _resolve_chunk(12, 8) == 6
+        assert _resolve_chunk(7, 4) == 1   # prime N degrades, never crashes
+        assert _resolve_chunk(3, 8) == 3   # chunk > N clamps to N
+
+    def test_prime_n_grad_exact(self, tiny_lm):
+        """N=7 (prime) calibration windows: the RMS must use the exact
+        denominator and match the chunk=1 reference."""
+        model, params, calib = tiny_lm
+        cfg, bp, xs = _block_inputs(model, params, calib)
+        block_fn = make_block_fn(cfg)
+        xs7 = xs[:7]
+        G_a = regional_grad_rms(block_fn, bp, xs7, chunk=4)
+        G_b = regional_grad_rms(block_fn, bp, xs7, chunk=1)
+        a = np.asarray(tree_get(G_a, ("attn", "wq", "w")))
+        b = np.asarray(tree_get(G_b, ("attn", "wq", "w")))
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+        assert np.isfinite(a).all() and (a > 0).any()
+
+
+class TestTappedElin:
+    def test_occupancy_masks_garbage_slots(self):
+        """Unrouted capacity slots carry garbage; occ must keep it out of the
+        sums AND out of the token counts."""
+        rng = np.random.default_rng(0)
+        B_, E, C, In = 2, 3, 4, 8
+        xin = rng.standard_normal((B_, E, C, In)).astype(np.float32)
+        occ = rng.random((B_, E, C)) < 0.5
+        garbage = np.where(occ[..., None], xin, 1e6)  # plant garbage
+
+        taps = {}
+        elin = make_tapped_elin(taps)
+        w = rng.standard_normal((E, In, 5)).astype(np.float32)
+        elin("mlp.wg", jnp.asarray(w), jnp.asarray(garbage),
+             "beci,eij->becj", occ=jnp.asarray(occ))
+        st = taps["mlp.wg"]
+
+        xr = np.where(occ[..., None], xin, 0.0)
+        np.testing.assert_allclose(np.asarray(st["sumsq"]),
+                                   (xr ** 2).sum((0, 2)), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(st["abssum"]),
+                                   np.abs(xr).sum((0, 2)), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(st["count"]),
+                                   occ.sum((0, 2)).astype(np.float32))
+
+    def test_no_occ_counts_every_slot(self):
+        taps = {}
+        elin = make_tapped_elin(taps)
+        x = jnp.ones((2, 3, 4, 8))
+        elin("wu", jnp.ones((3, 8, 5)), x, "beci,eij->becj")
+        np.testing.assert_allclose(np.asarray(taps["wu"]["count"]),
+                                   np.full((3,), 8.0))
+
+
+class TestPruneReports:
+    def test_compile_split_from_compute(self, tiny_lm):
+        model, params, calib = tiny_lm
+        cfg, bp, xs = _block_inputs(model, params, calib)
+        block_fn = make_block_fn(cfg)
+        prunable = B.prunable_table(cfg)
+        pcfg = PruneConfig(method="wanda", pattern="2:4")
+        _, report = prune_block(block_fn, bp, xs, pcfg, prunable,
+                                jax.random.PRNGKey(0))
+        assert report["compile_seconds"] > 0
+        assert report["seconds"] > 0
+        # AOT compile happens before the compute clock starts; on these tiny
+        # shapes XLA compilation dwarfs the actual prune arithmetic
+        assert report["seconds"] < report["compile_seconds"]
+
+    def test_sparsity_report_values(self, tiny_lm):
+        model, params, calib = tiny_lm
+        pcfg = PruneConfig(method="wanda", pattern="2:4", n_calib=8,
+                           calib_len=32)
+        from repro.core.pruner import prune_model
+        pruned, _ = prune_model(model, params, calib, pcfg)
+        rep = model_sparsity_report(model, pruned)
+        assert rep and all(isinstance(v, float) for v in rep.values())
+        for name, sp in rep.items():
+            assert abs(sp - 0.5) < 1e-6, (name, sp)
+
+
+class TestEngineTaps:
+    @pytest.fixture(scope="class")
+    def tapped_setup(self, tiny_lm):
+        model, params, _ = tiny_lm
+        cfg = model.cfg
+        S, GEN, B_ = 16, 4, 2
+        ecfg = lambda taps: EngineConfig(n_slots=B_, max_len=S + GEN,
+                                         chunk=GEN - 1, prefill_buckets=(S,),
+                                         calib_taps=taps)
+        eng = Engine(model, params, ecfg(True), SamplingConfig())
+        ref = Engine(model, params, ecfg(False), SamplingConfig())
+        prompts = np.asarray(
+            calibration_batch(cfg.vocab_size, B_, S, seed=3))
+        return model, params, eng, ref, prompts, GEN
+
+    def test_greedy_parity_and_pinned_traces(self, tapped_setup):
+        model, params, eng, ref, prompts, GEN = tapped_setup
+        out = eng.generate(prompts, GEN)
+        out_ref = ref.generate(prompts, GEN)
+        np.testing.assert_array_equal(out, out_ref)
+        assert eng.trace_counts == ref.trace_counts
+        # second wave accumulates stats without retracing anything
+        before = dict(eng.trace_counts)
+        eng.generate(prompts, GEN)
+        assert dict(eng.trace_counts) == before
+
+    def test_snapshot_matches_offline_stats(self, tiny_lm):
+        """Prefill-only traffic: the engine's live xnorm must equal the
+        offline block-sequential calibration statistics on the same tokens."""
+        model, params, _ = tiny_lm
+        cfg = model.cfg
+        S, B_ = 16, 4
+        ecfg = EngineConfig(n_slots=B_, max_len=S + 1, chunk=1,
+                            prefill_buckets=(S,), calib_taps=True)
+        eng = Engine(model, params, ecfg, SamplingConfig())
+        toks = calibration_batch(cfg.vocab_size, B_, S, seed=5)
+        eng.generate(np.asarray(toks), 1)  # prefill only, no decode steps
+        snap = eng.calibration_snapshot()
+        assert int(snap["tokens"]) == B_ * S
+
+        block_fn = make_block_fn(cfg)
+        xs = jnp.take(params["embed"], toks, axis=0)
+        for l in range(cfg.num_layers):
+            bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+            out, stats = block_io_stats_full(block_fn, bp, xs)
+            for name, d in stats.items():
+                live = snap["xnorm"][name][l]
+                np.testing.assert_allclose(
+                    live, np.sqrt(np.asarray(d["sumsq"])), rtol=2e-3,
+                    err_msg=f"layer {l} {name}")
+            xs = out
+
+    def test_reset_calibration_and_gating(self, tapped_setup):
+        model, params, eng, ref, prompts, GEN = tapped_setup
+        eng.reset_calibration()
+        snap = eng.calibration_snapshot()
+        assert snap["tokens"] == 0
+        with pytest.raises(ValueError, match="calib_taps"):
+            ref.calibration_snapshot()
+
+    def test_snapshot_reprune_repack_roundtrip(self, tapped_setup):
+        """The full online loop: live stats -> reprune_from_stats -> repack,
+        with valid 2:4 everywhere and no retrace."""
+        model, params, eng, ref, prompts, GEN = tapped_setup
+        eng.generate(prompts, GEN)
+        snap = eng.calibration_snapshot()
+        assert snap["tokens"] > 0
+        new = reprune_from_stats(model, params, snap["stats"],
+                                 PruneConfig(method="wanda", pattern="2:4"))
+        rep = model_sparsity_report(model, new)
+        for name, sp in rep.items():
+            assert abs(sp - 0.5) < 1e-6, (name, sp)
+        before = dict(eng.trace_counts)
+        eng.repack(new)
+        out = eng.generate(prompts, GEN)
+        assert dict(eng.trace_counts) == before
+        fresh = Engine(model, new, EngineConfig(
+            n_slots=prompts.shape[0], max_len=prompts.shape[1] + GEN,
+            chunk=GEN - 1, prefill_buckets=(prompts.shape[1],)),
+            SamplingConfig())
+        np.testing.assert_array_equal(out, fresh.generate(prompts, GEN))
+
+    def test_calib_taps_rejects_unsupported_families(self):
+        cfg = get_config("mamba2-1.3b").reduced(num_layers=2, d_model=64)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="calib_taps"):
+            Engine(model, params,
+                   EngineConfig(n_slots=2, max_len=20, chunk=2,
+                                prefill_buckets=(16,), calib_taps=True),
+                   SamplingConfig())
